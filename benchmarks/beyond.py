@@ -1,0 +1,41 @@
+"""Beyond-paper core-algorithm variants (EXPERIMENTS.md SSPaper).
+
+Two extensions the paper lists as future work / leaves unexplored:
+  * ``bias_care_only``: compute each sub-table's bias from care entries
+    only — don't-care entries no longer constrain the bias, giving the
+    merge phase strictly more freedom.
+  * ``merge_sweeps=2``: re-run the don't-care merge after the first sweep
+    (freezing limits each sweep; a second pass catches newly-exposed
+    matches).
+"""
+from __future__ import annotations
+
+from repro.core import CompressConfig, compress_network
+from repro.lutnn.extract import network_table_specs
+
+from .common import bench_scale, get_trained, save_result
+
+VARIANTS = (
+    ("reducedlut", dict(exiguity=250)),
+    ("bias_care_only", dict(exiguity=250, bias_care_only=True)),
+    ("two_sweeps", dict(exiguity=250, merge_sweeps=2)),
+    ("both", dict(exiguity=250, bias_care_only=True, merge_sweeps=2)),
+)
+
+
+def run(model: str = "jsc-2l") -> list[dict]:
+    net = get_trained(model)
+    specs = network_table_specs(net.tables, net.observed, net.cfg)
+    rows = []
+    for name, kw in VARIANTS:
+        ccfg = CompressConfig(m_candidates=(8, 16, 32, 64),
+                              lb_candidates=(0, 1, 2), **kw)
+        import time
+        t0 = time.time()
+        plans = compress_network(specs, ccfg)
+        cost = sum(p.plut_cost() for p in plans)
+        rows.append({"model": model, "variant": name, "pluts": cost,
+                     "seconds": round(time.time() - t0, 1)})
+        print(f"  {model} {name:15s} pluts={cost}")
+    save_result(f"beyond_{model}_{bench_scale()}", rows)
+    return rows

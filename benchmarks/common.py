@@ -1,0 +1,139 @@
+"""Shared benchmark utilities: train/extract/compress a LUT-NN once per
+(model, scale), cached in-process and on disk under experiments/."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (
+    CompressConfig,
+    compress_network,
+    rom_baseline_cost,
+)
+from repro.data import make_jsc, make_mnist_like
+from repro.lutnn import extract_tables, mark_observed, table_accuracy, train_lutnn
+from repro.lutnn.extract import network_table_specs, specs_to_tables
+from repro.lutnn.model import LUTNNConfig, paper_model
+
+EXP_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+# Paper Table 1 models; "small" variants keep the family/geometry but
+# shrink layer counts so the default bench run stays CPU-friendly.
+SCALED_MODELS = {
+    "paper": {
+        "jsc-2l": lambda: paper_model("jsc-2l"),
+        "jsc-5l": lambda: paper_model("jsc-5l"),
+        "mnist": lambda: paper_model("mnist"),
+    },
+    "small": {
+        "jsc-2l": lambda: paper_model("jsc-2l"),
+        "jsc-5l": lambda: LUTNNConfig(
+            name="jsc-5l", n_inputs=16, layer_sizes=(32, 32, 32, 16, 5),
+            beta=4, fanin=3, beta0=7, fanin0=2),
+        "mnist": lambda: LUTNNConfig(
+            name="mnist", n_inputs=784, layer_sizes=(64, 25, 25, 25, 10),
+            beta=2, fanin=6, beta0=2, fanin0=6),
+    },
+}
+
+DATA = {
+    "jsc-2l": lambda scale: make_jsc(*(100000, 20000) if scale == "paper"
+                                     else (12000, 3000)),
+    "jsc-5l": lambda scale: make_jsc(*(100000, 20000) if scale == "paper"
+                                     else (12000, 3000)),
+    "mnist": lambda scale: make_mnist_like(*(30000, 5000) if scale == "paper"
+                                           else (8000, 2000)),
+}
+
+M_CANDIDATES = (8, 16, 32, 64)
+LB_CANDIDATES = (0, 1, 2)
+
+_CACHE: dict = {}
+
+
+def bench_scale() -> str:
+    return os.environ.get("REPRO_BENCH_SCALE", "small")
+
+
+@dataclasses.dataclass
+class TrainedNet:
+    cfg: LUTNNConfig
+    conn: list
+    tables: list
+    observed: list
+    data: tuple
+    test_acc: float
+    train_acc: float
+
+
+def get_trained(model: str, scale: str | None = None) -> TrainedNet:
+    scale = scale or bench_scale()
+    key = (model, scale)
+    if key in _CACHE:
+        return _CACHE[key]
+    cfg = SCALED_MODELS[scale][model]()
+    xtr, ytr, xte, yte = DATA[model](scale)
+    epochs = 15 if scale == "small" else 25
+    params, conn, metrics = train_lutnn(cfg, xtr, ytr, xte, yte,
+                                        epochs=epochs)
+    tables = extract_tables(params, cfg)
+    observed = mark_observed(tables, conn, cfg, xtr)
+    net = TrainedNet(
+        cfg=cfg, conn=conn, tables=tables, observed=observed,
+        data=(xtr, ytr, xte, yte),
+        test_acc=table_accuracy(tables, conn, cfg, xte, yte),
+        train_acc=table_accuracy(tables, conn, cfg, xtr, ytr),
+    )
+    _CACHE[key] = net
+    return net
+
+
+def compress_and_eval(net: TrainedNet, method: str, exiguity: int | None,
+                      seed: int = 0) -> dict:
+    """method: baseline | compressedlut | reducedlut | random."""
+    cfg, conn = net.cfg, net.conn
+    xtr, ytr, xte, yte = net.data
+    t0 = time.time()
+    if method == "baseline":
+        specs = network_table_specs(net.tables, None, cfg)
+        cost = sum(rom_baseline_cost(s) for s in specs)
+        return {
+            "pluts": cost, "test_acc": net.test_acc,
+            "train_acc": net.train_acc, "seconds": time.time() - t0,
+        }
+    if method == "random":
+        rng = np.random.default_rng(seed)
+        tabs = [
+            np.where(o, t, rng.integers(0, 1 << cfg.beta, size=t.shape))
+            for t, o in zip(net.tables, net.observed)
+        ]
+        return {
+            "pluts": None,
+            "test_acc": table_accuracy(tabs, conn, cfg, xte, yte),
+            "train_acc": table_accuracy(tabs, conn, cfg, xtr, ytr),
+            "seconds": time.time() - t0,
+        }
+    observed = None if method == "compressedlut" else net.observed
+    ex = None if method == "compressedlut" else exiguity
+    specs = network_table_specs(net.tables, observed, cfg)
+    ccfg = CompressConfig(exiguity=ex, m_candidates=M_CANDIDATES,
+                          lb_candidates=LB_CANDIDATES)
+    plans = compress_network(specs, ccfg)
+    cost = sum(p.plut_cost() for p in plans)
+    tabs = specs_to_tables([p.reconstruct() for p in plans], cfg)
+    return {
+        "pluts": cost,
+        "test_acc": table_accuracy(tabs, conn, cfg, xte, yte),
+        "train_acc": table_accuracy(tabs, conn, cfg, xtr, ytr),
+        "seconds": time.time() - t0,
+    }
+
+
+def save_result(name: str, obj) -> None:
+    os.makedirs(EXP_DIR, exist_ok=True)
+    with open(os.path.join(EXP_DIR, name + ".json"), "w") as f:
+        json.dump(obj, f, indent=1)

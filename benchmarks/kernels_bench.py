@@ -1,0 +1,48 @@
+"""Kernel micro-benchmarks (interpret mode — correctness-path timing on
+CPU; TPU is the lowering target, see kernels/*.py)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CompressConfig, TableSpec, compress_table
+from repro.kernels import PlanArrays, lut_act, lut_reconstruct, lutnn_layer
+
+
+def _time(fn, *args, iters=5, **kw):
+    fn(*args, **kw).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    spec = TableSpec.random(12, 8, 0.4, 0, smooth=True)
+    plan = compress_table(spec, CompressConfig(exiguity=100,
+                                               m_candidates=(16, 64)))
+    pa = PlanArrays.from_plan(plan)
+    x = jnp.asarray(np.random.default_rng(0).integers(0, 4096, 8192))
+    us = _time(lut_reconstruct, x, pa)
+    rows.append(("lut_reconstruct_8k", us,
+                 f"kind={plan.kind};pluts={plan.plut_cost()}"))
+
+    codes = jnp.asarray(
+        np.random.default_rng(1).integers(0, 4, (256, 64)), jnp.int32)
+    conn = jnp.asarray(
+        np.random.default_rng(2).integers(0, 64, (32, 6)), jnp.int32)
+    tables = jnp.asarray(
+        np.random.default_rng(3).integers(0, 4, (32, 4096)), jnp.int32)
+    us = _time(lutnn_layer, codes, conn, tables, bits=2)
+    rows.append(("lutnn_layer_256x32", us, "bits=2;fanin=6"))
+
+    xf = jnp.asarray(np.random.default_rng(4).normal(size=(256, 512)),
+                     jnp.bfloat16)
+    us = _time(lut_act, xf, pa, x_lo=-4.0, x_hi=4.0, y_lo=-1.0, y_hi=1.0)
+    rows.append(("lut_act_256x512_bf16", us, "w_in=12;w_out=8"))
+    return rows

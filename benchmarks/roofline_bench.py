@@ -1,0 +1,40 @@
+"""Roofline table from cached dry-run artifacts (experiments/dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.roofline import PEAK_FLOPS
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh: str = "sp") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for cell in load_cells("sp"):
+        name = f"roofline_{cell['arch']}_{cell['shape']}"
+        if cell.get("status") != "ok":
+            rows.append((name, 0.0, f"status={cell.get('status')}"))
+            continue
+        rf = cell["roofline"]
+        mf = cell["model_flops"] / cell["n_chips"]
+        ratio = mf / rf["flops"] if rf["flops"] else 0.0
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        mfu_at_bound = (mf / PEAK_FLOPS) / bound if bound else 0.0
+        rows.append((
+            name,
+            bound * 1e6,  # us per step at the roofline bound
+            f"dominant={rf['dominant']};model/hlo_flops={ratio:.2f};"
+            f"roofline_frac={mfu_at_bound:.4f}",
+        ))
+    return rows

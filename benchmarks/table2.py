@@ -1,0 +1,44 @@
+"""Paper Table 2: P-LUT utilization and accuracy per method x exiguity."""
+from __future__ import annotations
+
+from .common import bench_scale, compress_and_eval, get_trained, save_result
+
+MODELS = ("jsc-2l", "jsc-5l", "mnist")
+ROWS = (
+    ("baseline", None),
+    ("compressedlut", None),
+    ("random", None),
+    ("reducedlut", 20),
+    ("reducedlut", 150),
+    ("reducedlut", 250),
+)
+
+
+def run(models=MODELS) -> list[dict]:
+    rows = []
+    for model in models:
+        net = get_trained(model)
+        base = None
+        comp = None
+        for method, ex in ROWS:
+            r = compress_and_eval(net, method, ex)
+            row = {
+                "model": model, "method": method, "exiguity": ex, **r,
+                "scale": bench_scale(),
+            }
+            if method == "baseline":
+                base = r["pluts"]
+            if method == "compressedlut":
+                comp = r["pluts"]
+            if r["pluts"] is not None and base:
+                row["vs_baseline"] = round(1 - r["pluts"] / base, 4)
+            if r["pluts"] is not None and comp and method == "reducedlut":
+                row["vs_compressedlut"] = round(1 - r["pluts"] / comp, 4)
+            rows.append(row)
+            print(
+                f"  {model:8s} {method:14s} ex={str(ex):>4s} "
+                f"pluts={str(r['pluts']):>7s} test_acc={r['test_acc']:.4f} "
+                f"train_acc={r['train_acc']:.4f} ({r['seconds']:.1f}s)"
+            )
+    save_result("table2_" + bench_scale(), rows)
+    return rows

@@ -1,0 +1,69 @@
+"""Architecture registry: one module per assigned arch (+ smoke variants)."""
+from __future__ import annotations
+
+import dataclasses
+
+from .base import ArchConfig, MoEConfig
+
+from . import (
+    deepseek_67b,
+    deepseek_moe_16b,
+    nemotron_4_15b,
+    phi4_mini_3_8b,
+    phi_3_vision_4_2b,
+    qwen3_0_6b,
+    qwen3_moe_30b_a3b,
+    recurrentgemma_9b,
+    rwkv6_3b,
+    whisper_small,
+)
+
+REGISTRY: dict[str, ArchConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        nemotron_4_15b, phi4_mini_3_8b, deepseek_67b, qwen3_0_6b,
+        deepseek_moe_16b, qwen3_moe_30b_a3b, phi_3_vision_4_2b,
+        rwkv6_3b, recurrentgemma_9b, whisper_small,
+    )
+}
+
+ARCH_NAMES = tuple(REGISTRY)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def smoke_config(cfg: ArchConfig) -> ArchConfig:
+    """Reduced same-family variant: runs a CPU forward/train step in the
+    smoke tests.  Full configs are exercised only via the dry-run."""
+    kw = dict(
+        name=cfg.name + "-smoke",
+        n_layers=4 if cfg.family == "hybrid" else 2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads > 1 else 1,
+        d_head=16,
+        d_ff=128,
+        vocab_size=256,
+        n_frames=16 if cfg.family == "encdec" else cfg.n_frames,
+        n_encoder_layers=2 if cfg.family == "encdec" else 0,
+        n_patches=4 if cfg.family == "vlm" else 0,
+        d_rnn=64 if cfg.family == "hybrid" else None,
+        local_window=8 if cfg.local_window else None,
+        rwkv_head_dim=16,
+        max_seq_len=256,
+    )
+    if cfg.family == "ssm":
+        kw["n_heads"] = 4
+        kw["n_kv_heads"] = 4
+    if cfg.moe:
+        kw["moe"] = MoEConfig(
+            n_experts=8, top_k=2, d_expert=32,
+            n_shared=min(cfg.moe.n_shared, 1),
+            # effectively dropless at smoke scale so decode == forward
+            capacity_factor=8.0,
+        )
+    return dataclasses.replace(cfg, **kw)

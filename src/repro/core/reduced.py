@@ -1,0 +1,162 @@
+"""ReducedLUT don't-care merge phase (paper SS4.2-SS4.3).
+
+Starting from the all-care decomposition, try to eliminate unique sub-tables
+by rewriting their don't-care entries so they become right-shift
+reproducible from other unique sub-tables.  Every elimination must re-home
+all dependents of the eliminated sub-table (their don't cares may be used
+too); failures roll back.  The *exiguity* parameter caps how many dependents
+an elimination candidate may have.  A boolean ``frozen`` mask pins every
+entry that participated in a committed transformation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .similarity import Decomposition
+
+
+def _find_shift_match(
+    target: np.ndarray,
+    target_care: np.ndarray,
+    candidates: np.ndarray,
+    w_st: int,
+) -> tuple[int, int] | None:
+    """First ``(candidate_row, shift)`` whose right-shift matches ``target``
+    at all care positions.  ``candidates`` is ``(n, M)``; rows are tried in
+    the given order, shifts ascending.  Vectorized over rows and shifts.
+    """
+    if candidates.shape[0] == 0:
+        return None
+    care = target_care
+    if not care.any():
+        return (0, 0)  # fully free: anything generates it
+    t_vals = target[care][None, None, :]
+    # (n, w_st+1, n_care)
+    shifted = candidates[:, None, care] >> np.arange(w_st + 1)[None, :, None]
+    ok = (shifted == t_vals).all(axis=2)
+    rows, shifts = np.nonzero(ok)
+    if rows.size == 0:
+        return None
+    return int(rows[0]), int(shifts[0])
+
+
+class _Transaction:
+    """Provisional edits with rollback (paper: backtracking search)."""
+
+    def __init__(self, d: Decomposition, frozen: np.ndarray):
+        self.d = d
+        self.frozen = frozen
+        self._res_saved: dict[int, np.ndarray] = {}
+        self._gen_saved: dict[int, tuple[int, int]] = {}
+        self._frozen_rows: list[int] = []
+
+    def set_row(self, j: int, new_res: np.ndarray) -> None:
+        if j not in self._res_saved:
+            self._res_saved[j] = self.d.res[j].copy()
+        self.d.res[j] = new_res
+
+    def reassign(self, j: int, g: int, t: int) -> None:
+        if j not in self._gen_saved:
+            self._gen_saved[j] = (int(self.d.gen[j]), int(self.d.rsh[j]))
+        self.d.gen[j] = g
+        self.d.rsh[j] = t
+
+    def freeze(self, j: int) -> None:
+        self._frozen_rows.append(j)
+
+    def commit(self) -> None:
+        for j in set(self._frozen_rows):
+            self.frozen[j] = True
+
+    def rollback(self) -> None:
+        for j, row in self._res_saved.items():
+            self.d.res[j] = row
+        for j, (g, t) in self._gen_saved.items():
+            self.d.gen[j] = g
+            self.d.rsh[j] = t
+
+
+def reduce_uniques(d: Decomposition, exiguity: int) -> int:
+    """Run one ReducedLUT merge sweep in place.
+
+    Returns the number of unique sub-tables eliminated.  ``d.res`` rows of
+    merged/re-homed sub-tables are rewritten to their reconstruction values
+    so Eq. (1) consistency is maintained by construction.
+    """
+    frozen = np.zeros_like(d.care)
+    eliminated = 0
+    deps = d.dep_map()
+
+    def eff_care(j: int) -> np.ndarray:
+        return d.care[j] | frozen[j]
+
+    # Candidates with the fewest dependencies first (paper SS4.2).
+    order = sorted(d.uniques, key=lambda u: len(deps[u]))
+    unique_set = set(d.uniques)
+
+    for u in order:
+        if u not in unique_set:
+            continue
+        u_deps = deps[u]
+        if len(u_deps) > exiguity:
+            continue  # exiguity gate (paper SS4.3)
+        # Fast reject: with no rewritable entry anywhere in the cluster, a
+        # merge would need an exact relation, impossible between uniques.
+        if eff_care(u).all() and all(eff_care(j).all() for j in u_deps):
+            continue
+
+        # Targets: most-depended-on unique first.
+        targets = sorted(
+            (v for v in unique_set if v != u),
+            key=lambda v: -len(deps[v]),
+        )
+        if not targets:
+            break
+        t_rows = d.res[targets]
+
+        hit = _find_shift_match(d.res[u], eff_care(u), t_rows, d.w_st)
+        if hit is None:
+            continue
+        row_i, shift = hit
+        v = targets[row_i]
+
+        txn = _Transaction(d, frozen)
+        txn.set_row(u, d.res[v] >> shift)
+        txn.reassign(u, v, shift)
+        txn.freeze(u)
+        txn.freeze(v)
+
+        ok = True
+        rehomed: list[int] = []
+        remaining = [w for w in unique_set if w != u]
+        for j in sorted(u_deps):
+            rem_sorted = sorted(remaining, key=lambda w: -len(deps[w]))
+            hit_j = _find_shift_match(
+                d.res[j], eff_care(j), d.res[rem_sorted], d.w_st
+            )
+            if hit_j is None:
+                ok = False
+                break
+            rj, tj = hit_j
+            w = rem_sorted[rj]
+            txn.set_row(j, d.res[w] >> tj)
+            txn.reassign(j, w, tj)
+            txn.freeze(j)
+            txn.freeze(w)
+            rehomed.append((j, w))
+
+        if not ok:
+            txn.rollback()
+            continue
+
+        txn.commit()
+        unique_set.remove(u)
+        d.uniques.remove(u)
+        deps[v].add(u)
+        for j, w in rehomed:
+            deps[u].discard(j)
+            deps[w].add(j)
+        deps.pop(u, None)
+        eliminated += 1
+
+    return eliminated

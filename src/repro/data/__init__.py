@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipelines (no external datasets offline)."""
+from .synthetic import make_jsc, make_mnist_like
+from .tokens import TokenStream, lm_batch_specs
+
+__all__ = ["make_jsc", "make_mnist_like", "TokenStream", "lm_batch_specs"]

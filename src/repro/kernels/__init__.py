@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical LUT evaluation paths.
+
+Each kernel has a pure-jnp oracle in :mod:`ref` and a jit'd public wrapper
+in :mod:`ops`; kernels are validated in interpret mode on CPU and written
+against TPU VMEM BlockSpec tiling (see individual kernel docstrings).
+"""
+from .ops import PlanArrays, default_interpret, lut_act, lut_reconstruct, lutnn_layer
+
+__all__ = [
+    "PlanArrays",
+    "default_interpret",
+    "lut_reconstruct",
+    "lutnn_layer",
+    "lut_act",
+]

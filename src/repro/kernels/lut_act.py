@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: fused LUT-approximated activation.
+
+The transformer-integration hot path (DESIGN.md SS2): quantize a float
+tensor onto the table's input grid, reconstruct the (ReducedLUT-compressed)
+table output via Eq. (1), dequantize — one VMEM round-trip instead of
+quantize/gather/dequant as three HBM-bound ops.  The compressed component
+tables stay resident in VMEM across the whole grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, ust_ref, idx_ref, rsh_ref, bias_ref, lb_ref, out_ref, *,
+            l, w_lb, w_hb, w_in, w_out, x_lo, x_hi, y_lo, y_hi):
+    x = x_ref[...]
+    levels_in = (1 << w_in) - 1
+    levels_out = (1 << w_out) - 1
+    xn = jnp.clip((x.astype(jnp.float32) - x_lo) / (x_hi - x_lo), 0.0, 1.0)
+    code = jnp.round(xn * levels_in).astype(jnp.int32)
+
+    m = 1 << l
+    c_hb = code >> l
+    c_lb = code & (m - 1)
+    idx = jnp.take(idx_ref[...], c_hb, axis=0)
+    val = jnp.take(ust_ref[...], idx * m + c_lb, axis=0)
+    val = val >> jnp.take(rsh_ref[...], c_hb, axis=0)
+    val = val + jnp.take(bias_ref[...], c_hb, axis=0)
+    val = val & ((1 << max(w_hb, 1)) - 1)
+    if w_lb > 0:
+        val = (val << w_lb) | jnp.take(lb_ref[...], code, axis=0)
+
+    y = val.astype(jnp.float32) / levels_out * (y_hi - y_lo) + y_lo
+    out_ref[...] = y.astype(out_ref.dtype)
+
+
+def lut_act_pallas(
+    x: jax.Array,        # (rows, lanes) float
+    t_ust: jax.Array,
+    t_idx: jax.Array,
+    t_rsh: jax.Array,
+    t_bias: jax.Array,
+    t_lb: jax.Array,
+    *,
+    l: int,
+    w_lb: int,
+    w_hb: int,
+    w_in: int,
+    w_out: int,
+    x_lo: float,
+    x_hi: float,
+    y_lo: float,
+    y_hi: float,
+    block_rows: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    rows, lanes = x.shape
+    full = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, l=l, w_lb=w_lb, w_hb=w_hb, w_in=w_in, w_out=w_out,
+            x_lo=x_lo, x_hi=x_hi, y_lo=y_lo, y_hi=y_hi,
+        ),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+            full(t_ust), full(t_idx), full(t_rsh), full(t_bias), full(t_lb),
+        ],
+        out_specs=pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), x.dtype),
+        interpret=interpret,
+    )(x, t_ust, t_idx, t_rsh, t_bias, t_lb)

@@ -1,0 +1,186 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles plan-array packing/padding, plain/decomposed dispatch and the
+interpret-mode default (interpret=True everywhere off-TPU; the kernels are
+written against TPU BlockSpec tiling and validated in interpret mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import DecomposedPlan, Plan, PlainPlan
+
+from . import ref
+from .lut_act import lut_act_pallas
+from .lut_gather import lut_reconstruct_pallas, plain_lookup_pallas
+from .lutnn_layer import lutnn_layer_pallas
+
+LANES = 128
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(a: np.ndarray, mult: int) -> np.ndarray:
+    n = a.shape[0]
+    pad = (-n) % mult
+    if pad:
+        a = np.concatenate([a, np.zeros(pad, a.dtype)])
+    return a
+
+
+@dataclasses.dataclass
+class PlanArrays:
+    """Device-ready, lane-padded arrays for one compression plan."""
+
+    kind: str
+    w_in: int
+    w_out: int
+    l: int = 0
+    w_lb: int = 0
+    w_hb: int = 0
+    arrays: dict = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def from_plan(plan: Plan) -> "PlanArrays":
+        if isinstance(plan, PlainPlan):
+            return PlanArrays(
+                kind="plain", w_in=plan.w_in, w_out=plan.w_out,
+                arrays={"table": jnp.asarray(
+                    _pad_to(plan.values.astype(np.int32), LANES))},
+            )
+        assert isinstance(plan, DecomposedPlan)
+        lb = plan.t_lb if plan.t_lb is not None else np.zeros(1, np.int64)
+        return PlanArrays(
+            kind="decomposed", w_in=plan.w_in, w_out=plan.w_out,
+            l=plan.l, w_lb=plan.w_lb, w_hb=plan.w_hb,
+            arrays={
+                "t_ust": jnp.asarray(_pad_to(plan.t_ust.astype(np.int32), LANES)),
+                "t_idx": jnp.asarray(_pad_to(plan.t_idx.astype(np.int32), LANES)),
+                "t_rsh": jnp.asarray(_pad_to(plan.t_rsh.astype(np.int32), LANES)),
+                "t_bias": jnp.asarray(_pad_to(plan.t_bias.astype(np.int32), LANES)),
+                "t_lb": jnp.asarray(_pad_to(lb.astype(np.int32), LANES)),
+            },
+        )
+
+
+def _shape_2d(n: int, block_rows: int) -> tuple[int, int]:
+    rows = -(-n // LANES)
+    rows += (-rows) % block_rows
+    return rows, LANES
+
+
+@functools.partial(jax.jit, static_argnames=("pa_static", "interpret"))
+def _reconstruct_jit(x2d, arrays, pa_static, interpret):
+    kind, l, w_lb, w_hb = pa_static
+    if kind == "plain":
+        return plain_lookup_pallas(x2d, arrays["table"], interpret=interpret)
+    return lut_reconstruct_pallas(
+        x2d, arrays["t_ust"], arrays["t_idx"], arrays["t_rsh"],
+        arrays["t_bias"], arrays["t_lb"],
+        l=l, w_lb=w_lb, w_hb=w_hb, interpret=interpret,
+    )
+
+
+def lut_reconstruct(
+    x: jax.Array, pa: PlanArrays, interpret: bool | None = None
+) -> jax.Array:
+    """Evaluate the compressed table at int addresses ``x`` (any shape)."""
+    if interpret is None:
+        interpret = default_interpret()
+    shape = x.shape
+    n = int(np.prod(shape))
+    rows, lanes = _shape_2d(n, 8)
+    flat = jnp.zeros(rows * lanes, jnp.int32).at[:n].set(
+        x.reshape(-1).astype(jnp.int32)
+    )
+    out = _reconstruct_jit(
+        flat.reshape(rows, lanes), pa.arrays,
+        (pa.kind, pa.l, pa.w_lb, pa.w_hb), interpret,
+    )
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def lutnn_layer(
+    codes: jax.Array,      # (B, P) int32
+    conn: jax.Array,       # (N, F) int32
+    tables: jax.Array,     # (N, T) int32
+    *,
+    bits: int,
+    interpret: bool | None = None,
+    block_b: int = 128,
+    block_n: int = 8,
+) -> jax.Array:
+    """Evaluate one LUT-NN layer; pads batch/neurons to block multiples."""
+    if interpret is None:
+        interpret = default_interpret()
+    b, p = codes.shape
+    n, f = conn.shape
+    bp = (-b) % block_b
+    np_ = (-n) % block_n
+    codes_p = jnp.pad(codes, ((0, bp), (0, 0)))
+    conn_p = jnp.pad(conn, ((0, np_), (0, 0)))
+    tables_p = jnp.pad(tables, ((0, np_), (0, 0)))
+    out = lutnn_layer_pallas(
+        codes_p.astype(jnp.int32), conn_p.astype(jnp.int32),
+        tables_p.astype(jnp.int32), bits=bits,
+        block_b=block_b, block_n=block_n, interpret=interpret,
+    )
+    return out[:b, :n]
+
+
+def lut_act(
+    x: jax.Array,
+    pa: PlanArrays,
+    *,
+    x_lo: float,
+    x_hi: float,
+    y_lo: float,
+    y_hi: float,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused LUT-approximated activation over a float tensor of any shape."""
+    if interpret is None:
+        interpret = default_interpret()
+    assert pa.kind == "decomposed", "lut_act expects a decomposed plan"
+    shape = x.shape
+    n = int(np.prod(shape))
+    rows, lanes = _shape_2d(n, 8)
+    flat = jnp.zeros(rows * lanes, x.dtype).at[:n].set(x.reshape(-1))
+    out = lut_act_pallas(
+        flat.reshape(rows, lanes),
+        pa.arrays["t_ust"], pa.arrays["t_idx"], pa.arrays["t_rsh"],
+        pa.arrays["t_bias"], pa.arrays["t_lb"],
+        l=pa.l, w_lb=pa.w_lb, w_hb=pa.w_hb, w_in=pa.w_in, w_out=pa.w_out,
+        x_lo=x_lo, x_hi=x_hi, y_lo=y_lo, y_hi=y_hi,
+        interpret=interpret,
+    )
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def wkv(q, k, v, log_w, u, *, chunk: int = 16, interpret: bool | None = None):
+    """Chunked WKV via the Pallas kernel. q/k/v/log_w: (B, T, H, N) f32;
+    u: (H, N). Returns (y (B,T,H,N), state (B,H,N,N))."""
+    from .wkv import wkv_pallas
+
+    if interpret is None:
+        interpret = default_interpret()
+    b, t, h, n = q.shape
+    pad = (-t) % chunk
+    zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if pad:
+        q, k, v, log_w = map(zpad, (q, k, v, log_w))
+    fl = lambda a: a.transpose(0, 2, 1, 3).reshape(b * h, t + pad, n)
+    u_fl = jnp.broadcast_to(u[None], (b, h, n)).reshape(b * h, 1, n)
+    y, s = wkv_pallas(
+        fl(q.astype(jnp.float32)), fl(k.astype(jnp.float32)),
+        fl(v.astype(jnp.float32)), fl(log_w.astype(jnp.float32)),
+        u_fl.astype(jnp.float32), chunk=chunk, interpret=interpret)
+    y = y.reshape(b, h, t + pad, n).transpose(0, 2, 1, 3)[:, :t]
+    return y, s.reshape(b, h, n, n)

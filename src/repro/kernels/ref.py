@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lut_reconstruct_ref(
+    x: jnp.ndarray,
+    t_ust: jnp.ndarray,
+    t_idx: jnp.ndarray,
+    t_rsh: jnp.ndarray,
+    t_bias: jnp.ndarray,
+    t_lb: jnp.ndarray | None,
+    *,
+    l: int,
+    w_lb: int,
+    w_hb: int,
+) -> jnp.ndarray:
+    """Eq. (1): ``T[x] = ((T_ust[{T_idx[x_hb], x_lb}] >> T_rsh[x_hb]) +
+    T_bias[x_hb]) & hb_mask``, then lb concatenation."""
+    m = 1 << l
+    x_hb = x >> l
+    x_lb = x & (m - 1)
+    addr = t_idx[x_hb] * m + x_lb
+    hb = (t_ust[addr] >> t_rsh[x_hb]) + t_bias[x_hb]
+    hb = hb & ((1 << max(w_hb, 1)) - 1)
+    if w_lb > 0:
+        assert t_lb is not None
+        return (hb << w_lb) | t_lb[x]
+    return hb
+
+
+def plain_lookup_ref(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    return table[x]
+
+
+def lutnn_layer_ref(
+    codes: jnp.ndarray,   # (B, P) int32 parent codes
+    conn: jnp.ndarray,    # (N, F) int32
+    tables: jnp.ndarray,  # (N, 2^(bits*F)) int32
+    *,
+    bits: int,
+) -> jnp.ndarray:
+    """One LUT-NN layer: pack parent codes per neuron, look up."""
+    f = conn.shape[1]
+    gathered = codes[:, conn]  # (B, N, F)
+    addr = jnp.zeros(gathered.shape[:-1], dtype=jnp.int32)
+    for k in range(f):
+        addr = addr | (gathered[..., k] << (bits * (f - 1 - k)))
+    return jnp.take_along_axis(tables, addr.T, axis=1).T  # (B, N)
+
+
+def lut_act_ref(
+    x: jnp.ndarray,
+    t_ust: jnp.ndarray,
+    t_idx: jnp.ndarray,
+    t_rsh: jnp.ndarray,
+    t_bias: jnp.ndarray,
+    t_lb: jnp.ndarray | None,
+    *,
+    l: int,
+    w_lb: int,
+    w_hb: int,
+    w_in: int,
+    w_out: int,
+    x_lo: float,
+    x_hi: float,
+    y_lo: float,
+    y_hi: float,
+) -> jnp.ndarray:
+    """Fused quantize -> Eq. (1) lookup -> dequantize activation."""
+    levels_in = (1 << w_in) - 1
+    levels_out = (1 << w_out) - 1
+    xn = jnp.clip((x.astype(jnp.float32) - x_lo) / (x_hi - x_lo), 0.0, 1.0)
+    code = jnp.round(xn * levels_in).astype(jnp.int32)
+    out_code = lut_reconstruct_ref(
+        code, t_ust, t_idx, t_rsh, t_bias, t_lb, l=l, w_lb=w_lb, w_hb=w_hb
+    )
+    y = out_code.astype(jnp.float32) / levels_out * (y_hi - y_lo) + y_lo
+    return y.astype(x.dtype)

@@ -1,0 +1,18 @@
+"""Production mesh construction (functions only — importing this module
+never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod; the multi-pod mesh adds a leading pure-DP
+    "pod" axis (2 pods = 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(dp: int = 1, tp: int = 1):
+    """Small mesh over host devices (tests / examples)."""
+    return jax.make_mesh((dp, tp), ("data", "model"))

@@ -1,0 +1,96 @@
+"""Production training launcher.
+
+On a real cluster every host runs this with jax.distributed initialized
+and the production mesh (launch/mesh.py); offline it runs any --arch at
+smoke scale on the host mesh. Checkpoint/restart, deterministic data
+skip-ahead and straggler monitoring come from repro.train.Supervisor.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+      --steps 100 --batch 8 --seq 128 [--smoke/--full] \
+      [--ckpt-dir /tmp/ckpt] [--dp 1 --tp 1] [--grad-compress]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config, smoke_config
+from repro.data import TokenStream
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim import AdamWConfig, warmup_cosine_schedule
+from repro.train import (
+    Supervisor,
+    TrainConfig,
+    init_train_state,
+    make_train_step,
+    train_state_shardings,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (requires a real cluster)")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = smoke_config(cfg)
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        mesh = make_host_mesh(dp=args.dp, tp=args.tp)
+    print(f"arch={cfg.name} (~{cfg.n_params() / 1e6:.1f}M params) "
+          f"mesh={dict(mesh.shape)} steps={args.steps}")
+
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(
+            lr=warmup_cosine_schedule(args.lr, max(1, args.steps // 10),
+                                      args.steps)),
+        remat=args.remat,
+        microbatch=args.microbatch,
+        grad_compress=args.grad_compress,
+    )
+    stream = TokenStream(cfg.vocab_size, args.seq, args.batch, seed=0)
+    step, jit_step, state_sh = make_train_step(cfg, tcfg, mesh)
+    specs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+             for k, v in stream.batch_at(0).items()}
+    jstep = jit_step(specs)
+    state = jax.device_put(init_train_state(cfg, tcfg),
+                           train_state_shardings(cfg, tcfg, mesh))
+
+    def step_fn(state, batch):
+        return jstep(state, {k: jnp.asarray(v) for k, v in batch.items()})
+
+    def on_metrics(s, m):
+        if s % 10 == 0 or s == args.steps - 1:
+            print(f"  step {s:5d} loss {float(m['loss']):.4f} "
+                  f"lr {float(m['lr']):.2e}")
+
+    import tempfile
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_train_")
+    sup = Supervisor(ckpt, ckpt_every=args.ckpt_every)
+    state, stats = sup.run(state, step_fn, stream.batch_at, args.steps,
+                           on_metrics=on_metrics)
+    print(f"finished at step {int(state['step'])}; checkpoints in {ckpt}; "
+          f"stragglers={stats['stragglers']} restarts={stats['restarts']}")
+
+
+if __name__ == "__main__":
+    main()

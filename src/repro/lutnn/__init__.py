@@ -1,0 +1,26 @@
+"""LUT-based neural networks (LogicNets/NeuraLUT family, paper SS2.1/SS5.1).
+
+A LUT-NN is a sparse, quantized network in which every neuron sees F
+parent activations of beta bits each and is ultimately *tabulated* as an
+L-LUT with ``w_in = beta * F`` input bits and ``w_out = beta`` output bits.
+This package provides: differentiable training (STE quantization), exact
+truth-table extraction, don't-care identification from training data, and
+bit-exact table-network inference — the full paper toolflow (Fig. 2).
+"""
+from .model import LUTNNConfig, lutnn_forward, lutnn_init
+from .train import train_lutnn
+from .extract import extract_tables, mark_observed
+from .inference import pack_codes, quantize_input, table_forward, table_accuracy
+
+__all__ = [
+    "LUTNNConfig",
+    "lutnn_init",
+    "lutnn_forward",
+    "train_lutnn",
+    "extract_tables",
+    "mark_observed",
+    "table_forward",
+    "table_accuracy",
+    "pack_codes",
+    "quantize_input",
+]

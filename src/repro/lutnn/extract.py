@@ -1,0 +1,87 @@
+"""Truth-table extraction and don't-care identification (paper SS4.1).
+
+Extraction enumerates every possible input combination of every neuron and
+evaluates the trained functional form — "the content of each L-LUT is
+derived from an interpolation of the training data performed by the
+functional form used in training".  Don't cares are the addresses never
+visited when running the training set through the table network.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TableSpec
+
+from .inference import quantize_input, table_forward, unpack_address
+from .model import LUTNNConfig, neuron_eval
+
+
+def extract_tables(
+    params: dict, cfg: LUTNNConfig
+) -> list[np.ndarray]:
+    """Enumerate each layer's truth tables: list of (n_l, 2^w_in_l) codes."""
+    tables = []
+    for l, layer_params in enumerate(params["layers"]):
+        bits = cfg.layer_beta_in(l)
+        fanin = cfg.layer_fanin(l)
+        w_in = bits * fanin
+        addrs = np.arange(1 << w_in, dtype=np.int64)
+        codes = unpack_address(addrs, bits, fanin)          # (2^w_in, F)
+        deq = codes.astype(np.float32) / ((1 << bits) - 1)
+        n = layer_params["b2"].shape[0]
+        inputs = jnp.broadcast_to(
+            jnp.asarray(deq)[:, None, :], (deq.shape[0], n, fanin)
+        )
+        act = jax.jit(neuron_eval)(layer_params, inputs)    # (2^w_in, n)
+        out_codes = jnp.round(act * ((1 << cfg.beta) - 1)).astype(jnp.int32)
+        tables.append(np.asarray(out_codes).T.copy())       # (n, 2^w_in)
+    return tables
+
+
+def mark_observed(
+    tables: list[np.ndarray],
+    conn: list[np.ndarray],
+    cfg: LUTNNConfig,
+    x_train: np.ndarray,
+) -> list[np.ndarray]:
+    """Per-layer bool masks (n_l, 2^w_in_l): True = observed in training."""
+    observers = [np.zeros_like(t, dtype=bool) for t in tables]
+    codes = quantize_input(x_train, cfg.beta0)
+    table_forward(tables, conn, cfg, codes, observers=observers)
+    return observers
+
+
+def network_table_specs(
+    tables: list[np.ndarray],
+    observed: list[np.ndarray] | None,
+    cfg: LUTNNConfig,
+) -> list[TableSpec]:
+    """Flatten the network into per-neuron :class:`TableSpec`s.
+
+    ``observed=None`` produces all-care specs (CompressedLUT baseline).
+    """
+    specs = []
+    for l, table in enumerate(tables):
+        w_in = cfg.layer_w_in(l)
+        for i in range(table.shape[0]):
+            care = None if observed is None else observed[l][i]
+            specs.append(TableSpec(
+                values=table[i], w_in=w_in, w_out=cfg.beta,
+                care=care, name=f"{cfg.name}_l{l}_n{i}",
+            ))
+    return specs
+
+
+def specs_to_tables(
+    specs_values: list[np.ndarray], cfg: LUTNNConfig
+) -> list[np.ndarray]:
+    """Regroup flat per-neuron value arrays back into per-layer tables."""
+    tables = []
+    k = 0
+    for l, n in enumerate(cfg.layer_sizes):
+        rows = [specs_values[k + i] for i in range(n)]
+        tables.append(np.stack(rows))
+        k += n
+    return tables

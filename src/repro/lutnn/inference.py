@@ -1,0 +1,76 @@
+"""Bit-exact table-network inference (the function the Verilog computes)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .model import LUTNNConfig
+
+
+def quantize_input(x: np.ndarray, bits: int) -> np.ndarray:
+    """Float features in [0,1] -> integer codes on the 2^bits grid."""
+    levels = (1 << bits) - 1
+    return np.rint(np.clip(x, 0.0, 1.0) * levels).astype(np.int64)
+
+
+def pack_codes(codes: np.ndarray, bits: int) -> np.ndarray:
+    """Pack parent codes (..., F) into L-LUT addresses (parent 0 = MSB)."""
+    f = codes.shape[-1]
+    addr = np.zeros(codes.shape[:-1], dtype=np.int64)
+    for k in range(f):
+        addr |= codes[..., k].astype(np.int64) << (bits * (f - 1 - k))
+    return addr
+
+
+def unpack_address(addr: np.ndarray, bits: int, fanin: int) -> np.ndarray:
+    """Inverse of :func:`pack_codes`: (...,) -> (..., F)."""
+    mask = (1 << bits) - 1
+    cols = [
+        (addr >> (bits * (fanin - 1 - k))) & mask for k in range(fanin)
+    ]
+    return np.stack(cols, axis=-1)
+
+
+def table_forward(
+    tables: list[np.ndarray],
+    conn: list[np.ndarray],
+    cfg: LUTNNConfig,
+    x_codes: np.ndarray,
+    chunk: int = 4096,
+    observers: list[np.ndarray] | None = None,
+) -> np.ndarray:
+    """Evaluate the network of truth tables.
+
+    ``tables[l]``: (n_l, 2^w_in_l) integer output codes.
+    ``x_codes``: (B, n_inputs) integer input codes (beta0 bits).
+    ``observers``: optional per-layer bool arrays (n_l, 2^w_in_l) — every
+    visited address is marked True (don't-care identification, paper SS4.1).
+    Returns (B, n_classes) output codes.
+    """
+    n = x_codes.shape[0]
+    outs = []
+    for s in range(0, n, chunk):
+        h = x_codes[s:s + chunk]
+        for l, table in enumerate(tables):
+            bits = cfg.layer_beta_in(l)
+            gathered = h[:, conn[l]]                # (b, n_l, F)
+            addr = pack_codes(gathered, bits)       # (b, n_l)
+            if observers is not None:
+                ids = np.broadcast_to(
+                    np.arange(table.shape[0])[None, :], addr.shape
+                )
+                observers[l][ids.reshape(-1), addr.reshape(-1)] = True
+            h = np.take_along_axis(table, addr.T, axis=1).T  # (b, n_l)
+        outs.append(h)
+    return np.concatenate(outs, axis=0)
+
+
+def table_accuracy(
+    tables: list[np.ndarray],
+    conn: list[np.ndarray],
+    cfg: LUTNNConfig,
+    x: np.ndarray,
+    y: np.ndarray,
+) -> float:
+    codes = quantize_input(x, cfg.beta0)
+    scores = table_forward(tables, conn, cfg, codes)
+    return float((scores.argmax(axis=1) == y).mean())

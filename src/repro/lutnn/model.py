@@ -1,0 +1,140 @@
+"""LUT-NN model definition: sparse connectivity + per-neuron sub-networks.
+
+Matches the NeuraLUT construction (paper Table 1): each neuron absorbs a
+small MLP over its F dequantized parent activations; activations are
+quantized to ``beta`` bits on a uniform [0, 1] grid with a straight-through
+estimator.  After training every neuron is enumerable as a
+``2^(beta*F) -> 2^beta`` truth table.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LUTNNConfig:
+    name: str
+    n_inputs: int                 # raw feature count (e.g. 784 / 16)
+    layer_sizes: tuple[int, ...]  # neurons per layer, last = classes
+    beta: int                     # hidden activation bits
+    fanin: int                    # hidden fan-in F
+    beta0: int                    # input activation bits
+    fanin0: int                   # input-layer fan-in F0
+    hidden_width: int = 4         # width of the in-neuron MLP (NeuraLUT)
+    seed: int = 0
+
+    def layer_w_in(self, layer: int) -> int:
+        return (self.beta0 * self.fanin0) if layer == 0 else (self.beta * self.fanin)
+
+    def layer_beta_in(self, layer: int) -> int:
+        return self.beta0 if layer == 0 else self.beta
+
+    def layer_fanin(self, layer: int) -> int:
+        return self.fanin0 if layer == 0 else self.fanin
+
+    @property
+    def n_luts(self) -> int:
+        return sum(self.layer_sizes)
+
+
+def make_connectivity(cfg: LUTNNConfig) -> list[np.ndarray]:
+    """Fixed random sparse wiring: conn[l] has shape (n_l, F_l)."""
+    rng = np.random.default_rng(cfg.seed)
+    conn = []
+    prev = cfg.n_inputs
+    for l, n in enumerate(cfg.layer_sizes):
+        f = cfg.layer_fanin(l)
+        rows = np.stack([
+            rng.choice(prev, size=f, replace=(prev < f)) for _ in range(n)
+        ])
+        conn.append(rows.astype(np.int32))
+        prev = n
+    return conn
+
+
+def quantize_ste(x: jax.Array, bits: int) -> jax.Array:
+    """Uniform [0,1] quantization with a straight-through gradient."""
+    levels = (1 << bits) - 1
+    xq = jnp.round(jnp.clip(x, 0.0, 1.0) * levels) / levels
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+def lutnn_init(cfg: LUTNNConfig) -> dict:
+    """Per-layer parameter pytree.
+
+    Layer l: W1 (n, F, h), b1 (n, h), W2 (n, h), b2 (n,) — an
+    h-hidden-unit MLP private to each neuron.
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+    params: dict = {"layers": []}
+    for l, n in enumerate(cfg.layer_sizes):
+        f = cfg.layer_fanin(l)
+        h = cfg.hidden_width
+        key, k1, k2 = jax.random.split(key, 3)
+        params["layers"].append({
+            "w1": jax.random.normal(k1, (n, f, h)) * (2.0 / np.sqrt(f)),
+            "b1": jnp.zeros((n, h)),
+            "w2": jax.random.normal(k2, (n, h)) * (2.0 / np.sqrt(h)),
+            "b2": jnp.zeros((n,)),
+        })
+    return params
+
+
+def neuron_eval(layer_params: dict, inputs: jax.Array) -> jax.Array:
+    """Evaluate every neuron of a layer on its gathered inputs.
+
+    ``inputs``: (..., n, F) dequantized parent activations in [0, 1].
+    Returns (..., n) pre-quantization activations in [0, 1].
+    """
+    z = jnp.einsum("...nf,nfh->...nh", inputs, layer_params["w1"])
+    z = jax.nn.relu(z + layer_params["b1"])
+    z = jnp.einsum("...nh,nh->...n", z, layer_params["w2"]) + layer_params["b2"]
+    return jax.nn.sigmoid(z)
+
+
+def lutnn_forward(
+    params: dict,
+    conn: list[np.ndarray],
+    cfg: LUTNNConfig,
+    x: jax.Array,
+    quantized: bool = True,
+) -> jax.Array:
+    """Training-time forward pass. Returns (..., n_classes) scores in [0,1].
+
+    With ``quantized=True`` (default) this computes exactly the function the
+    extracted truth tables tabulate.
+    """
+    h = quantize_ste(x, cfg.beta0) if quantized else x
+    for l, layer_params in enumerate(params["layers"]):
+        gathered = h[..., conn[l]]            # (..., n_l, F_l)
+        a = neuron_eval(layer_params, gathered)
+        if quantized:
+            a = quantize_ste(a, cfg.beta)
+        h = a
+    return h
+
+
+# ----------------------------------------------------------------------
+# Paper Table 1 model zoo
+# ----------------------------------------------------------------------
+def paper_model(name: str, seed: int = 0) -> LUTNNConfig:
+    if name == "jsc-2l":
+        return LUTNNConfig(
+            name=name, n_inputs=16, layer_sizes=(32, 5),
+            beta=4, fanin=3, beta0=4, fanin0=3, seed=seed,
+        )
+    if name == "jsc-5l":
+        return LUTNNConfig(
+            name=name, n_inputs=16, layer_sizes=(128, 128, 128, 64, 5),
+            beta=4, fanin=3, beta0=7, fanin0=2, seed=seed,
+        )
+    if name == "mnist":
+        return LUTNNConfig(
+            name=name, n_inputs=784, layer_sizes=(256, 100, 100, 100, 10),
+            beta=2, fanin=6, beta0=2, fanin0=6, seed=seed,
+        )
+    raise KeyError(f"unknown paper model {name!r}")

@@ -1,0 +1,80 @@
+"""Training loop for LUT-NNs (jitted AdamW on CPU-scale models)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine_schedule
+
+from .model import LUTNNConfig, lutnn_forward, lutnn_init, make_connectivity
+
+
+def _loss_fn(params, conn, cfg, x, y, temp: float = 8.0):
+    scores = lutnn_forward(params, conn, cfg, x)           # (B, C) in [0,1]
+    logits = scores * temp
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    acc = (jnp.argmax(scores, -1) == y).mean()
+    return loss, acc
+
+
+def train_lutnn(
+    cfg: LUTNNConfig,
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    x_test: np.ndarray | None = None,
+    y_test: np.ndarray | None = None,
+    epochs: int = 20,
+    batch_size: int = 256,
+    lr: float = 2e-2,
+    verbose: bool = False,
+) -> tuple[dict, list[np.ndarray], dict]:
+    """Returns ``(params, connectivity, metrics)``."""
+    conn = make_connectivity(cfg)
+    params = lutnn_init(cfg)
+    n = x_train.shape[0]
+    steps_per_epoch = max(1, n // batch_size)
+    total = epochs * steps_per_epoch
+    opt_cfg = AdamWConfig(
+        lr=warmup_cosine_schedule(lr, total // 20 + 1, total),
+        weight_decay=1e-4,
+        grad_clip_norm=1.0,
+    )
+    opt_state = adamw_init(params)
+    conn_t = [jnp.asarray(c) for c in conn]
+
+    @jax.jit
+    def step(params, opt_state, x, y):
+        (loss, acc), grads = jax.value_and_grad(
+            functools.partial(_loss_fn, conn=conn_t, cfg=cfg), has_aux=True
+        )(params, x=x, y=y)
+        params, opt_state, _ = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, loss, acc
+
+    rng = np.random.default_rng(cfg.seed + 1)
+    metrics = {"train_acc": 0.0, "test_acc": None, "loss": None}
+    for epoch in range(epochs):
+        perm = rng.permutation(n)
+        accs, losses = [], []
+        for s in range(steps_per_epoch):
+            idx = perm[s * batch_size:(s + 1) * batch_size]
+            params, opt_state, loss, acc = step(
+                params, opt_state, jnp.asarray(x_train[idx]),
+                jnp.asarray(y_train[idx]),
+            )
+            accs.append(float(acc))
+            losses.append(float(loss))
+        metrics["train_acc"] = float(np.mean(accs))
+        metrics["loss"] = float(np.mean(losses))
+        if verbose:
+            print(f"  epoch {epoch + 1}/{epochs}: loss={metrics['loss']:.4f} "
+                  f"acc={metrics['train_acc']:.4f}")
+    if x_test is not None:
+        scores = lutnn_forward(params, conn_t, cfg, jnp.asarray(x_test))
+        metrics["test_acc"] = float(
+            (jnp.argmax(scores, -1) == jnp.asarray(y_test)).mean()
+        )
+    return params, conn, metrics

@@ -1,0 +1,4 @@
+"""Model substrate: layers, attention, MoE, SSM, hybrid and assembly."""
+from .transformer import init_params, loss_fn, param_pspecs, param_specs
+
+__all__ = ["init_params", "param_specs", "param_pspecs", "loss_fn"]

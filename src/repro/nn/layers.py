@@ -1,0 +1,84 @@
+"""Shared building blocks: norms, projections, embeddings, activations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sharding import shard
+
+
+def truncated_normal_init(key, shape, scale, dtype):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+# Perf hillclimb lever (EXPERIMENTS.md SSPerf): when True, norms/rope keep
+# the residual stream in bf16 and use f32 only inside reductions, removing
+# materialized f32 round-trips from the HLO.  Baseline (False) is the
+# conservative f32 path every cell was first measured with.
+FAST_STREAM = False
+
+
+def set_fast_stream(on: bool) -> None:
+    global FAST_STREAM
+    FAST_STREAM = on
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    if FAST_STREAM:
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(dt)
+        return x * inv * (1.0 + scale.astype(dt))
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale) + bias).astype(dt)
+
+
+def activation_fn(name: str):
+    if name == "relu2":           # nemotron squared-ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name in ("gelu", "geglu"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name in ("silu", "swiglu"):
+        return jax.nn.silu
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def is_gated(name: str) -> bool:
+    """Gated MLPs (two input projections: gate ⊙ up)."""
+    return name in ("swiglu", "geglu")
+
+
+def embed_lookup(embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Vocab-sharded embedding gather; GSPMD turns this into masked
+    local gathers + an all-reduce over the vocab shards."""
+    out = jnp.take(embed, tokens, axis=0)
+    return shard(out, "dp", None, None)
+
+
+def logits_projection(x: jax.Array, lm_head: jax.Array) -> jax.Array:
+    """(B, T, d) @ (d, V) with V sharded over tp."""
+    out = jnp.einsum("btd,dv->btv", x, lm_head)
+    return shard(out, "dp", None, "tp")
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE; stable in f32; works with vocab-sharded logits (GSPMD
+    inserts the reductions)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)

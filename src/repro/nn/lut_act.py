@@ -1,0 +1,114 @@
+"""LUT-compressed nonlinearities for LM architectures (DESIGN.md SS2).
+
+The paper's pipeline, applied to an activation function:
+  1. tabulate g(x) on a uniform ``2^w_in`` input grid over [x_lo, x_hi],
+     quantizing outputs to ``w_out`` bits over [y_lo, y_hi];
+  2. run calibration batches and mark *unobserved input bins* as don't
+     cares (same rule as unobserved L-LUT inputs, paper SS4.1);
+  3. compress with ReducedLUT — don't cares let the decomposer rewrite
+     unused bins to expose self-similarities;
+  4. evaluate at runtime via the fused Pallas kernel (serving) or the
+     GSPMD-friendly gather form inside train/serve steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import CompressConfig, TableSpec, compress_table
+from repro.core.plan import DecomposedPlan, Plan
+from repro.kernels import PlanArrays
+
+ACT_FNS = {
+    "gelu": lambda x: x * 0.5 * (1 + np.tanh(
+        np.sqrt(2 / np.pi) * (x + 0.044715 * x ** 3))),
+    "silu": lambda x: x / (1 + np.exp(-x)),
+    "swiglu": lambda x: x / (1 + np.exp(-x)),
+    "geglu": lambda x: x * 0.5 * (1 + np.tanh(
+        np.sqrt(2 / np.pi) * (x + 0.044715 * x ** 3))),
+    "relu2": lambda x: np.square(np.maximum(x, 0.0)),
+    "exp": np.exp,
+    "sigmoid": lambda x: 1 / (1 + np.exp(-x)),
+}
+
+
+@dataclasses.dataclass
+class LUTActivation:
+    plan: Plan
+    w_in: int
+    w_out: int
+    x_lo: float
+    x_hi: float
+    y_lo: float
+    y_hi: float
+    dontcare_frac: float
+
+    def meta(self) -> dict:
+        p = self.plan
+        assert isinstance(p, DecomposedPlan)
+        return {
+            "l": p.l, "w_lb": p.w_lb, "w_hb": p.w_hb,
+            "w_in": self.w_in, "w_out": self.w_out,
+            "x_lo": self.x_lo, "x_hi": self.x_hi,
+            "y_lo": self.y_lo, "y_hi": self.y_hi,
+        }
+
+    def tables_for_model(self) -> dict:
+        """The ``lut_tables`` dict consumed by nn.mlp.make_activation."""
+        pa = PlanArrays.from_plan(self.plan)
+        return {"meta": self.meta(), "arrays": pa.arrays}
+
+    def plan_arrays(self) -> PlanArrays:
+        return PlanArrays.from_plan(self.plan)
+
+
+def calibrate_bins(samples: np.ndarray, w_in: int, x_lo: float,
+                   x_hi: float) -> np.ndarray:
+    """Observed-bin mask from calibration activations (care mask)."""
+    levels = (1 << w_in) - 1
+    xn = np.clip((samples.reshape(-1) - x_lo) / (x_hi - x_lo), 0.0, 1.0)
+    codes = np.rint(xn * levels).astype(np.int64)
+    care = np.zeros(1 << w_in, dtype=bool)
+    care[codes] = True
+    return care
+
+
+def build_lut_activation(
+    act: str,
+    calibration: np.ndarray | None = None,
+    *,
+    w_in: int = 10,
+    w_out: int = 10,
+    x_lo: float = -8.0,
+    x_hi: float = 8.0,
+    exiguity: int | None = 250,
+    m_candidates=(8, 16, 32, 64),
+    lb_candidates=(0, 1, 2, 3),
+) -> LUTActivation:
+    fn = ACT_FNS[act]
+    xs = np.linspace(x_lo, x_hi, 1 << w_in)
+    ys = fn(xs)
+    y_lo, y_hi = float(ys.min()), float(ys.max())
+    span = max(y_hi - y_lo, 1e-6)
+    codes = np.rint((ys - y_lo) / span * ((1 << w_out) - 1)).astype(np.int64)
+    care = None
+    if calibration is not None:
+        care = calibrate_bins(np.asarray(calibration), w_in, x_lo, x_hi)
+    spec = TableSpec(codes, w_in, w_out, care=care, name=f"act_{act}")
+    cfg = CompressConfig(exiguity=exiguity, m_candidates=m_candidates,
+                         lb_candidates=lb_candidates)
+    plan = compress_table(spec, cfg)
+    if not isinstance(plan, DecomposedPlan):
+        # force a decomposed plan (runtime path expects Eq. 1 arrays)
+        cfg = CompressConfig(exiguity=exiguity, m_candidates=(32,),
+                             lb_candidates=(0,))
+        from repro.core.pipeline import _decompose_hb
+        plan = _decompose_hb(codes, spec.care_mask(), w_in, w_out, 0, None,
+                             32, cfg, spec.name)
+    return LUTActivation(
+        plan=plan, w_in=w_in, w_out=w_out, x_lo=x_lo, x_hi=x_hi,
+        y_lo=y_lo, y_hi=y_hi,
+        dontcare_frac=float(0.0 if care is None else 1 - care.mean()),
+    )

@@ -1,0 +1,71 @@
+"""Feed-forward blocks (dense), with optional LUT-approximated activation.
+
+The LUT activation is the paper-technique integration point for the LM
+architectures (DESIGN.md SS2/SS5): the elementwise nonlinearity is replaced
+by a quantize -> compressed-table-lookup -> dequantize evaluated from
+ReducedLUT plan arrays.  Inside distributed train/serve steps the lookup is
+expressed with ``jnp.take`` (gather) so GSPMD can shard it; the fused
+Pallas kernel (kernels/lut_act.py) is the single-device serving fast path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import activation_fn, is_gated
+from .sharding import shard
+
+
+def lut_act_jnp(x, arrays, *, l, w_lb, w_hb, w_in, w_out,
+                x_lo, x_hi, y_lo, y_hi):
+    """GSPMD-friendly (gather-based) LUT activation, same math as the
+    Pallas kernel / ref oracle."""
+    levels_in = (1 << w_in) - 1
+    levels_out = (1 << w_out) - 1
+    xn = jnp.clip((x.astype(jnp.float32) - x_lo) / (x_hi - x_lo), 0.0, 1.0)
+    code = jnp.round(xn * levels_in).astype(jnp.int32)
+    m = 1 << l
+    c_hb = code >> l
+    c_lb = code & (m - 1)
+    idx = jnp.take(arrays["t_idx"], c_hb, axis=0)
+    val = jnp.take(arrays["t_ust"], idx * m + c_lb, axis=0)
+    val = val >> jnp.take(arrays["t_rsh"], c_hb, axis=0)
+    val = val + jnp.take(arrays["t_bias"], c_hb, axis=0)
+    val = val & ((1 << max(w_hb, 1)) - 1)
+    if w_lb > 0:
+        val = (val << w_lb) | jnp.take(arrays["t_lb"], code, axis=0)
+    y = val.astype(jnp.float32) / levels_out * (y_hi - y_lo) + y_lo
+    return y.astype(x.dtype)
+
+
+def make_activation(cfg, lut_tables: dict | None):
+    """Returns act(x) for the configured nonlinearity.
+
+    With ``cfg.lut_activation`` and compiled plan arrays available, the
+    activation evaluates the ReducedLUT-compressed table.
+    """
+    if cfg.lut_activation and lut_tables is not None:
+        meta = lut_tables["meta"]
+        arrays = lut_tables["arrays"]
+
+        def act(x):
+            return lut_act_jnp(x, arrays, **meta)
+
+        return act
+    return activation_fn(cfg.activation)
+
+
+def mlp_block(params: dict, x: jax.Array, cfg, lut_tables=None) -> jax.Array:
+    """(B, T, d) -> (B, T, d). swiglu uses fused [gate|up] in w_in."""
+    act = make_activation(cfg, lut_tables)
+    if is_gated(cfg.activation):
+        gate_up = jnp.einsum("btd,df->btf", x, params["w_in"])
+        gate_up = shard(gate_up, "dp", None, "tp")
+        gate, up = jnp.split(gate_up, 2, axis=-1)
+        h = act(gate) * up
+    else:
+        h = jnp.einsum("btd,df->btf", x, params["w_in"])
+        h = shard(h, "dp", None, "tp")
+        h = act(h)
+    out = jnp.einsum("btf,fd->btd", h, params["w_out"])
+    return shard(out, "dp", "sp", None)

@@ -1,0 +1,145 @@
+"""Mixture-of-Experts with expert parallelism over the model axis.
+
+Dispatch strategy (DESIGN.md SS4): activations are data-sharded and
+replicated across the model axis, experts are sharded over the model axis.
+Every device routes the *same* local tokens (deterministic), gathers the
+tokens bound for its resident experts into a fixed-capacity buffer
+(sort-based, no (S, E, C) one-hot), runs the expert GEMMs, scatters partial
+outputs, and a single all-reduce over the model axis combines them — the
+same collective cost as one TP MLP, with experts' memory truly sharded.
+
+Outside a mesh the same routine runs with all experts local (e0=0,
+no psum) — used by smoke tests and as the numerical reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from .layers import activation_fn
+from .sharding import DP_AXES, TP_AXIS, current_mesh
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def moe_ffn_local(
+    x: jax.Array,           # (S, d) local tokens
+    router_w: jax.Array,    # (d, E)
+    w_in: jax.Array,        # (E_loc, d, 2*f) fused gate|up
+    w_out: jax.Array,       # (E_loc, f, d)
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity: int,
+    e0,                     # first resident expert id (traced or 0)
+    act_name: str = "silu",
+):
+    """Route + gather + expert GEMM + weighted scatter for local experts."""
+    s, d = x.shape
+    e_loc = w_in.shape[0]
+    logits = jnp.einsum("sd,de->se", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_ids = jax.lax.top_k(probs, top_k)          # (S, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    flat_ids = top_ids.reshape(-1)                        # (S*k,)
+    order = jnp.argsort(flat_ids)                         # stable
+    sorted_ids = flat_ids[order]
+    counts = jnp.bincount(flat_ids, length=n_experts)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(s * top_k) - starts[sorted_ids]
+    local = (sorted_ids >= e0) & (sorted_ids < e0 + e_loc) & (rank < capacity)
+    slot = jnp.where(local, (sorted_ids - e0) * capacity + rank,
+                     e_loc * capacity)
+    src = order // top_k                                  # token index
+
+    buf = jnp.zeros((e_loc * capacity + 1, d), x.dtype)
+    buf = buf.at[slot].set(x[src], mode="drop")
+    tokens = buf[:-1].reshape(e_loc, capacity, d)
+
+    act = activation_fn(act_name)
+    h = jnp.einsum("ecd,edf->ecf", tokens, w_in)
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = act(gate) * up
+    y_exp = jnp.einsum("ecf,efd->ecd", h, w_out)
+    y_flat = jnp.concatenate(
+        [y_exp.reshape(e_loc * capacity, d),
+         jnp.zeros((1, d), y_exp.dtype)], axis=0
+    )
+
+    gathered = y_flat[slot]                                # (S*k, d)
+    weights = top_p.reshape(-1)[order]
+    contrib = gathered * (weights[:, None] * local[:, None]).astype(x.dtype)
+    y = jnp.zeros((s, d), x.dtype).at[src].add(contrib)
+
+    # Switch-style load-balance auxiliary (local estimate)
+    frac = counts.astype(jnp.float32) / (s * top_k)
+    imp = probs.mean(axis=0)
+    aux = n_experts * jnp.sum(frac * imp)
+    return y, aux
+
+
+def moe_block(params: dict, x: jax.Array, cfg, shared_mlp=None):
+    """(B, T, d) -> ((B, T, d), aux_loss). Uses shard_map EP under a mesh
+    with a model axis; plain local compute otherwise."""
+    b, t, d = x.shape
+    m = cfg.moe
+    mesh = current_mesh()
+    s_local_tokens = b * t
+    act_name = "silu"
+
+    tp = (mesh is not None and TP_AXIS in mesh.axis_names
+          and m.n_experts % mesh.shape[TP_AXIS] == 0)
+    if tp:
+        n_tp = mesh.shape[TP_AXIS]
+        dp_axes = tuple(a for a in DP_AXES if a in mesh.axis_names)
+        n_dp = 1
+        for a in dp_axes:
+            n_dp *= mesh.shape[a]
+        s_shard = max(1, s_local_tokens // n_dp)
+        capacity = _round_up(
+            max(int(s_shard * m.top_k / m.n_experts * m.capacity_factor),
+                m.top_k), 8)
+
+        def mapped(xl, router_w, w_in, w_out):
+            e_loc = w_in.shape[0]
+            e0 = jax.lax.axis_index(TP_AXIS) * e_loc
+            y, aux = moe_ffn_local(
+                xl.reshape(-1, d), router_w, w_in, w_out,
+                n_experts=m.n_experts, top_k=m.top_k, capacity=capacity,
+                e0=e0, act_name=act_name,
+            )
+            y = jax.lax.psum(y, TP_AXIS)
+            aux = jax.lax.psum(aux, TP_AXIS) / n_tp
+            if dp_axes:
+                aux = jax.lax.pmean(aux, dp_axes)
+            return y.reshape(xl.shape), aux
+
+        dspec = dp_axes if dp_axes else None
+        y, aux = shard_map(
+            mapped, mesh=mesh,
+            in_specs=(P(dspec, None, None), P(None, None),
+                      P(TP_AXIS, None, None), P(TP_AXIS, None, None)),
+            out_specs=(P(dspec, None, None), P()),
+            check_vma=False,
+        )(x, params["router"], params["w_in"], params["w_out"])
+    else:
+        capacity = _round_up(
+            max(int(s_local_tokens * m.top_k / m.n_experts
+                    * m.capacity_factor), m.top_k), 8)
+        y, aux = moe_ffn_local(
+            x.reshape(-1, d), params["router"], params["w_in"],
+            params["w_out"], n_experts=m.n_experts, top_k=m.top_k,
+            capacity=capacity, e0=0, act_name=act_name,
+        )
+        y = y.reshape(b, t, d)
+
+    if shared_mlp is not None:
+        y = y + shared_mlp(x)
+    return y, aux

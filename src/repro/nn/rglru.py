@@ -1,0 +1,107 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU.
+
+RG-LRU (Real-Gated Linear Recurrent Unit):
+    r_t = sigmoid(W_a u_t),  i_t = sigmoid(W_x u_t)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The diagonal linear recurrence runs as ``jax.lax.associative_scan`` over
+time (log-depth, TPU friendly); decode is the single-step form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import activation_fn
+from .sharding import shard
+
+RG_LRU_C = 8.0
+
+
+def _lru_scan(log_a, b):
+    """h_t = exp(log_a_t) h_{t-1} + b_t via associative scan. (B,T,D)."""
+    def combine(x, y):
+        (la1, b1), (la2, b2) = x, y
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    log_as, bs = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return bs
+
+
+def rg_lru(params, u, h_prev=None):
+    """u: (B, T, D) f32. Returns (h (B,T,D), last state (B, D))."""
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", u, params["w_a"]))
+    i = jax.nn.sigmoid(jnp.einsum("btd,de->bte", u, params["w_x"]))
+    log_a = -RG_LRU_C * jax.nn.softplus(params["lam"])[None, None] * r
+    log_a = log_a.astype(jnp.float32)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-6, 1.0))
+    b = gated * (i * u).astype(jnp.float32)
+    if h_prev is not None:
+        # fold the carried state into step 0's additive term
+        b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h_prev)
+    h = _lru_scan(log_a, b)
+    return h, h[:, -1]
+
+
+def rg_lru_step(params, u, h_prev):
+    """Single decode step. u: (B, D); h_prev: (B, D)."""
+    r = jax.nn.sigmoid(u @ params["w_a"])
+    i = jax.nn.sigmoid(u @ params["w_x"])
+    log_a = (-RG_LRU_C * jax.nn.softplus(params["lam"])[None] * r).astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-6, 1.0))
+    h = a * h_prev + gated * (i * u).astype(jnp.float32)
+    return h, h
+
+
+def causal_conv1d(w, x, state=None):
+    """Depthwise causal conv. w: (K, D); x: (B, T, D);
+    state: (B, K-1, D) trailing inputs from the previous segment."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(
+        xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k)
+    )
+    return out, xp[:, -(k - 1):]
+
+
+def recurrent_block(params, x, cfg, state=None):
+    """Griffin recurrent temporal block. x: (B, T, d).
+
+    state: None or dict {conv: (B,K-1,drnn), lru: (B,drnn)}.
+    Returns (out (B,T,d), new_state).
+    """
+    state = state or {}
+    branch = jnp.einsum("btd,de->bte", x, params["w_in"])
+    branch = shard(branch, "dp", None, "tp")
+    branch, conv_state = causal_conv1d(
+        params["conv_w"], branch, state.get("conv")
+    )
+    h, lru_state = rg_lru(params, branch.astype(jnp.float32),
+                          state.get("lru"))
+    gate = activation_fn("gelu")(
+        jnp.einsum("btd,de->bte", x, params["w_gate"])
+    )
+    gate = shard(gate, "dp", None, "tp")
+    out = jnp.einsum("bte,ed->btd", h.astype(x.dtype) * gate,
+                     params["w_out"])
+    return shard(out, "dp", None, None), {"conv": conv_state, "lru": lru_state}
+
+
+def recurrent_block_step(params, x, cfg, state):
+    """Single-token decode for the recurrent block. x: (B, 1, d)."""
+    b = x.shape[0]
+    branch = jnp.einsum("btd,de->bte", x, params["w_in"])[:, 0]
+    xp = jnp.concatenate([state["conv"], branch[:, None]], axis=1)
+    k = params["conv_w"].shape[0]
+    conv = sum(xp[:, i] * params["conv_w"][i][None] for i in range(k))
+    h, lru_state = rg_lru_step(params, conv.astype(jnp.float32),
+                               state["lru"])
+    gate = activation_fn("gelu")(
+        jnp.einsum("btd,de->bte", x, params["w_gate"])
+    )[:, 0]
+    out = (h.astype(x.dtype) * gate) @ params["w_out"]
+    return out[:, None], {"conv": xp[:, -(k - 1):], "lru": lru_state}

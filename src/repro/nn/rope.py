@@ -1,0 +1,30 @@
+"""Rotary position embeddings (full-head, configurable theta)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, Dh); positions: broadcastable to (..., T)."""
+    from .layers import FAST_STREAM
+
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                    # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (..., T, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    if FAST_STREAM:
+        # rotate in the stream dtype; trig stays f32 (tiny, position-only)
+        cos = cos.astype(x.dtype)
+        sin = sin.astype(x.dtype)
+        x1, x2 = jnp.split(x, 2, axis=-1)
+        return jnp.concatenate(
+            [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

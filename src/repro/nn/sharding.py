@@ -1,0 +1,114 @@
+"""Mesh/sharding plumbing: logical-axis annotations resolved per mesh.
+
+Models annotate tensors with *logical* axes ("dp" = data-parallel batch,
+"tp" = tensor-parallel model dim, None = replicated).  At trace time the
+annotations resolve against the active mesh (set by the step builder); with
+no mesh active every annotation is a no-op, so the same model code runs in
+single-device smoke tests and in 512-device dry-run compiles.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+DP_AXES = ("pod", "data")   # data parallelism spans these mesh axes
+TP_AXIS = "model"
+FSDP_AXIS = "data"          # parameter/optimizer sharding (ZeRO-3) axis;
+                            # within-pod only — pods replicate params
+
+# Hillclimb lever: Megatron-style sequence parallelism. When enabled, the
+# logical "sp" axis resolves to the model axis, sharding the residual
+# stream's sequence dim between blocks; GSPMD then turns the row-parallel
+# all-reduces into reduce-scatters and gathers only at the column-parallel
+# matmul inputs.
+SEQ_PARALLEL = False
+
+
+def set_seq_parallel(on: bool) -> None:
+    global SEQ_PARALLEL
+    SEQ_PARALLEL = on
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None):
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def resolve_axis(logical: str | None, mesh: Mesh | None):
+    """Map a logical axis name to mesh axes (None if not shardable)."""
+    if logical is None or mesh is None:
+        return None
+    if logical == "dp":
+        axes = tuple(a for a in DP_AXES if a in mesh.axis_names)
+        return axes if axes else None
+    if logical == "tp":
+        return TP_AXIS if TP_AXIS in mesh.axis_names else None
+    if logical == "fsdp":
+        return FSDP_AXIS if FSDP_AXIS in mesh.axis_names else None
+    if logical == "sp":
+        if SEQ_PARALLEL and TP_AXIS in mesh.axis_names:
+            return TP_AXIS
+        return None
+    raise ValueError(f"unknown logical axis {logical!r}")
+
+
+def spec(*logical_axes: str | None, mesh: Mesh | None = None) -> P:
+    """PartitionSpec from logical axes, resolved against ``mesh`` (or the
+    active mesh)."""
+    mesh = mesh or current_mesh()
+    return P(*(resolve_axis(a, mesh) for a in logical_axes))
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return dim % n == 0
+
+
+def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """with_sharding_constraint against the active mesh (no-op without one).
+
+    Dims whose size does not divide the resolved axis product fall back to
+    replicated — e.g. 24 attention heads on a 16-way model axis.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    resolved = []
+    for dim, a in zip(x.shape, logical_axes):
+        r = resolve_axis(a, mesh)
+        resolved.append(r if _divisible(dim, mesh, r) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved))
+    )
+
+
+def named_sharding(mesh: Mesh, *logical_axes: str | None,
+                   shape: tuple[int, ...] | None = None) -> NamedSharding:
+    """NamedSharding for jit in/out shardings, with divisibility fallback."""
+    resolved = []
+    for i, a in enumerate(logical_axes):
+        r = resolve_axis(a, mesh)
+        if shape is not None and not _divisible(shape[i], mesh, r):
+            r = None
+        resolved.append(r)
+    return NamedSharding(mesh, P(*resolved))

@@ -1,0 +1,193 @@
+"""RWKV6 ("Finch") blocks: data-dependent decay linear attention.
+
+Training path uses a chunkwise-parallel GLA formulation (matmul-heavy, MXU
+friendly, O(T) memory) that is numerically equal to the sequential
+recurrence for bounded per-chunk decay; the sequential form is kept as the
+oracle (tests) and the decode step.  Exponent convention (matches
+``wkv_scan_ref``):
+
+    y_t = q_t @ S_t + (q_t . (u * k_t)) v_t
+    S_{t+1} = w_t[:, None] * S_t + k_t^T v_t        (w_t = exp(log_w_t))
+
+so kv_j reaches y_i (j < i) with decay prod_{s=j+1}^{i-1} w_s.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+from .sharding import shard
+
+CLAMP = 30.0  # exp(-x) below e^-30 treated as 0 (documented approximation)
+
+# Hillclimb lever (EXPERIMENTS.md SSPerf): WKV chunk length. The pairwise
+# decay tensor is (B, C, C, H, N) per scan step and total pairwise traffic
+# scales LINEARLY in C, so smaller chunks cut the dominant HBM term of the
+# rwkv train cell; too small starves the MXU. Baseline = 64.
+WKV_CHUNK = 64
+
+
+def set_wkv_chunk(c: int) -> None:
+    global WKV_CHUNK
+    WKV_CHUNK = c
+
+
+def wkv_scan_ref(q, k, v, log_w, u):
+    """Sequential oracle: q,k,v,log_w (B,T,H,N); u (H,N)."""
+    b, t, h, n = q.shape
+
+    def step(s, inp):
+        qt, kt, vt, lwt = inp  # (B,H,N)
+        y = jnp.einsum("bhn,bhnm->bhm", qt, s)
+        y = y + jnp.einsum("bhn,bhn->bh", qt, u * kt)[..., None] * vt
+        s = jnp.exp(lwt)[..., None] * s + kt[..., None] * vt[..., None, :]
+        return s, y
+
+    s0 = jnp.zeros((b, h, n, n), jnp.float32)
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32)
+               for a in (q, k, v, log_w))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), s
+
+
+def wkv_chunked(q, k, v, log_w, u, chunk: int = 16, state=None):
+    """Chunkwise-parallel WKV. Returns (y (B,T,H,N) f32, final state).
+
+    Numerically exact: every exponent is provably <= 0.
+      * intra-chunk decay is applied *pairwise*
+        (``exp(Lc_{i-1} - Lc_j)``, j < i  =>  exponent <= 0),
+      * state-to-query decay uses ``exp(Lc_{i-1})`` (<= 0),
+      * state update uses ``exp(Lc_last - Lc_j)`` (<= 0).
+    The pairwise tensor is (B, C, C, H, N); C=16 keeps it small while the
+    cross-chunk path stays matmul-bound.
+
+    T is padded up to a chunk multiple with zero k/q/v and log_w = 0
+    (decay 1): padding steps change neither the outputs nor the state.
+    """
+    b, t_orig, h, n = q.shape
+    pad = (-t_orig) % chunk
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v, log_w = zpad(q), zpad(k), zpad(v), zpad(log_w)
+    b, t, h, n = q.shape
+    nc = t // chunk
+    f32 = lambda a: a.astype(jnp.float32)
+    # (nc, B, C, H, N)
+    resh = lambda a: f32(a).reshape(b, nc, chunk, h, n).transpose(1, 0, 2, 3, 4)
+    qs, ks, vs, lws = map(resh, (q, k, v, log_w))
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def body(s, inp):
+        qc, kc, vc, lw = inp                       # (B, C, H, N)
+        lc = jnp.cumsum(lw, axis=1)                # inclusive cumsum
+        # pairwise decay exp(Lc_{i-1} - Lc_j) for j < i (exponent <= 0)
+        diff = (lc - lw)[:, :, None] - lc[:, None, :]      # (B, C, C, H, N)
+        dec = jnp.where(mask[None, :, :, None, None], jnp.exp(diff), 0.0)
+        a = jnp.einsum("bihn,bjhn,bijhn->bhij", qc, kc, dec)
+        y = jnp.einsum("bhij,bjhn->bihn", a, vc)
+        # u-bonus diagonal term
+        diag = jnp.einsum("bihn,bihn->bih", qc, u[None, None] * kc)
+        y = y + diag[..., None] * vc
+        # cross-chunk: state contribution (exponent <= 0)
+        q_t = qc * jnp.exp(lc - lw)
+        y = y + jnp.einsum("bihn,bhnm->bihm", q_t, s)
+        # state update (all exponents <= 0)
+        ltot = lc[:, -1:]                           # (B,1,H,N)
+        k_dec = kc * jnp.exp(ltot - lc)
+        s = jnp.exp(ltot[:, 0])[..., None] * s + jnp.einsum(
+            "bjhn,bjhm->bhnm", k_dec, vc
+        )
+        return s, y
+
+    s, ys = jax.lax.scan(body, state, (qs, ks, vs, lws))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, n)
+    return y[:, :t_orig], s
+
+
+def wkv_decode_step(q, k, v, log_w, u, state):
+    """One-token decode. q,k,v,log_w: (B,H,N); state (B,H,N,N) f32."""
+    y = jnp.einsum("bhn,bhnm->bhm", q, state)
+    y = y + jnp.einsum("bhn,bhn->bh", q, u * k)[..., None] * v
+    state = jnp.exp(log_w)[..., None] * state + k[..., None] * v[..., None, :]
+    return y, state
+
+
+def _ddlerp(x, x_prev, mu, lora_a, lora_b):
+    """RWKV6 data-dependent token-shift interpolation."""
+    base = x + (x_prev - x) * mu
+    dyn = jnp.tanh(jnp.einsum("btd,dr->btr", base, lora_a))
+    dyn = jnp.einsum("btr,rd->btd", dyn, lora_b)
+    return x + (x_prev - x) * (mu + dyn)
+
+
+def rwkv_time_mix(params, x, cfg, x_last=None, wkv_state=None,
+                  chunk: int | None = None):
+    """RWKV6 attention replacement. x: (B,T,d).
+
+    Returns (out, (new_x_last, new_wkv_state)).  With T==1 runs the decode
+    recurrence; otherwise the chunked-parallel path.
+    """
+    if chunk is None:
+        chunk = WKV_CHUNK
+    b, t, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    if x_last is None:
+        x_last = jnp.zeros((b, 1, d), x.dtype)
+    x_prev = jnp.concatenate([x_last, x[:, :-1]], axis=1)
+
+    mixed = {}
+    for name in ("r", "k", "v", "w", "g"):
+        mixed[name] = _ddlerp(x, x_prev, params[f"mu_{name}"],
+                              params["lora_a"], params[f"lora_b_{name}"])
+    r = jnp.einsum("btd,de->bte", mixed["r"], params["w_r"])
+    k = jnp.einsum("btd,de->bte", mixed["k"], params["w_k"])
+    v = jnp.einsum("btd,de->bte", mixed["v"], params["w_v"])
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", mixed["g"], params["w_g"]))
+    w_dyn = jnp.einsum("btd,dr->btr", mixed["w"], params["decay_a"])
+    w_dyn = jnp.einsum("btr,rd->btd", jnp.tanh(w_dyn), params["decay_b"])
+    log_w = -jnp.exp(
+        jnp.clip(params["decay_base"][None, None] + w_dyn.astype(jnp.float32),
+                 -8.0, 1.0)
+    )
+
+    heads = lambda a: a.reshape(b, t, h, n)
+    r_, k_, v_ = heads(r), heads(k), heads(v)
+    lw = log_w.reshape(b, t, h, n)
+    u = params["bonus"].reshape(h, n)
+
+    if t == 1:
+        y, wkv_state = wkv_decode_step(
+            r_[:, 0].astype(jnp.float32), k_[:, 0].astype(jnp.float32),
+            v_[:, 0].astype(jnp.float32), lw[:, 0],
+            u, wkv_state if wkv_state is not None
+            else jnp.zeros((b, h, n, n), jnp.float32),
+        )
+        y = y[:, None]
+    else:
+        y, wkv_state = wkv_chunked(r_, k_, v_, lw, u, chunk=chunk,
+                                   state=wkv_state)
+
+    y = rms_norm(y.reshape(b * t, h, n), params["ln_x"].reshape(h, n),
+                 eps=1e-5).reshape(b, t, d)
+    out = jnp.einsum("btd,de->bte", y.astype(x.dtype) * g, params["w_o"])
+    return shard(out, "dp", None, None), (x[:, -1:], wkv_state)
+
+
+def rwkv_channel_mix(params, x, cfg, x_last=None):
+    """RWKV6 FFN: squared-ReLU with token-shift mixing."""
+    b, t, d = x.shape
+    if x_last is None:
+        x_last = jnp.zeros((b, 1, d), x.dtype)
+    x_prev = jnp.concatenate([x_last, x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * params["mu_ffn_k"]
+    xr = x + (x_prev - x) * params["mu_ffn_r"]
+    kk = jnp.einsum("btd,df->btf", xk, params["w_ffn_k"])
+    kk = shard(kk, "dp", None, "tp")
+    vv = jnp.einsum("btf,fd->btd", jnp.square(jax.nn.relu(kk)),
+                    params["w_ffn_v"])
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, params["w_ffn_r"]))
+    return shard(rr * vv, "dp", None, None), x[:, -1:]

@@ -1,0 +1,621 @@
+"""Model assembly for every assigned architecture family.
+
+One parameter-definition tree (`ParamDef`) is the single source of truth:
+`init_params` materializes it, `param_specs` resolves the logical axes to
+PartitionSpecs for a mesh, and `jax.eval_shape` over init gives dry-run
+shapes.  All layer stacks run under `jax.lax.scan` over stacked (L, ...)
+parameters so the lowered HLO stays compact for 512-device compiles.
+
+Families:
+  dense | moe | vlm  -> decoder-only transformer (GQA + RoPE [+ MoE/patches])
+  ssm                -> RWKV6 (chunked GLA)
+  hybrid             -> Griffin/RecurrentGemma (RG-LRU + local attention)
+  encdec             -> Whisper (bidirectional encoder + causal decoder)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+from .attention import decode_attend, mha, ring_decode_attend
+from .layers import (
+    embed_lookup,
+    logits_projection,
+    rms_norm,
+    softmax_cross_entropy,
+    truncated_normal_init,
+)
+from .mlp import make_activation, mlp_block
+from .moe import moe_block
+from .rglru import recurrent_block, recurrent_block_step
+from .rope import apply_rope
+from .sharding import current_mesh, named_sharding, shard
+from .ssm import rwkv_channel_mix, rwkv_time_mix
+
+
+# =========================================================================
+# Parameter definitions
+# =========================================================================
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    scale: float = 1.0
+    dtype: str | None = None   # None => cfg dtype
+
+
+def _attn_defs(cfg: ArchConfig, L: int, d: int) -> dict[str, ParamDef]:
+    defs = {
+        "wq": ParamDef((L, d, cfg.q_dim), (None, "fsdp", "tp")),
+        "wk": ParamDef((L, d, cfg.kv_dim), (None, "fsdp", "tp")),
+        "wv": ParamDef((L, d, cfg.kv_dim), (None, "fsdp", "tp")),
+        "wo": ParamDef((L, cfg.q_dim, d), (None, "tp", "fsdp")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((L, cfg.d_head), (None, None), 0.0)
+        defs["k_norm"] = ParamDef((L, cfg.d_head), (None, None), 0.0)
+    return defs
+
+
+def _mlp_defs(cfg: ArchConfig, L: int, d: int, ff: int) -> dict[str, ParamDef]:
+    from .layers import is_gated
+    ff_in = 2 * ff if is_gated(cfg.activation) else ff
+    return {
+        "w_in": ParamDef((L, d, ff_in), (None, "fsdp", "tp")),
+        "w_out": ParamDef((L, ff, d), (None, "tp", "fsdp")),
+    }
+
+
+def _rwkv_defs(cfg: ArchConfig) -> dict[str, ParamDef]:
+    L, d, ff = cfg.n_layers, cfg.d_model, cfg.d_ff
+    vec = lambda scale=1.0: ParamDef((L, d), (None, None), scale)
+    mat = lambda m, n, ax=(None, "fsdp", "tp"): ParamDef((L, m, n), ax)
+    defs = {
+        "ln1": vec(0.0), "ln2": vec(0.0), "ln_x": vec(0.0),
+        "lora_a": ParamDef((L, d, 32), (None, None, None)),
+        "decay_a": ParamDef((L, d, 64), (None, None, None)),
+        "decay_b": ParamDef((L, 64, d), (None, None, None), 0.1),
+        "decay_base": vec(0.5),
+        "bonus": vec(0.5),
+        "mu_ffn_k": vec(0.5), "mu_ffn_r": vec(0.5),
+        "w_r": mat(d, d), "w_k": mat(d, d), "w_v": mat(d, d),
+        "w_g": mat(d, d), "w_o": ParamDef((L, d, d), (None, "tp", "fsdp")),
+        "w_ffn_k": ParamDef((L, d, ff), (None, "fsdp", "tp")),
+        "w_ffn_v": ParamDef((L, ff, d), (None, "tp", "fsdp")),
+        "w_ffn_r": mat(d, d),
+    }
+    for nm in ("r", "k", "v", "w", "g"):
+        defs[f"mu_{nm}"] = vec(0.5)
+        defs[f"lora_b_{nm}"] = ParamDef((L, 32, d), (None, None, None), 0.1)
+    return defs
+
+
+def _rec_defs(cfg: ArchConfig, L: int) -> dict[str, ParamDef]:
+    d, drnn = cfg.d_model, cfg.d_rnn or cfg.d_model
+    return {
+        "w_in": ParamDef((L, d, drnn), (None, "fsdp", "tp")),
+        "w_gate": ParamDef((L, d, drnn), (None, "fsdp", "tp")),
+        "w_out": ParamDef((L, drnn, d), (None, "tp", "fsdp")),
+        "conv_w": ParamDef((L, cfg.conv_width, drnn), (None, None, "tp")),
+        "w_a": ParamDef((L, drnn, drnn), (None, "fsdp", "tp")),
+        "w_x": ParamDef((L, drnn, drnn), (None, "fsdp", "tp")),
+        "lam": ParamDef((L, drnn), (None, "tp"), 0.5),
+    }
+
+
+def param_defs(cfg: ArchConfig) -> dict[str, Any]:
+    L, d = cfg.n_layers, cfg.d_model
+    defs: dict[str, Any] = {
+        "embed": ParamDef((cfg.vocab_size, d), ("tp", "fsdp")),
+        "final_norm": ParamDef((d,), (None,), 0.0),
+        "lm_head": ParamDef((d, cfg.vocab_size), ("fsdp", "tp")),
+    }
+    if cfg.family == "ssm":
+        defs["blocks"] = _rwkv_defs(cfg)
+        return defs
+    if cfg.family == "hybrid":
+        pattern = cfg.block_pattern or ("rec", "rec", "attn")
+        n_groups = L // len(pattern)
+        n_tail = L - n_groups * len(pattern)
+        group: dict[str, Any] = {}
+        for i, kind in enumerate(pattern):
+            sub = (_rec_defs(cfg, n_groups) if kind == "rec"
+                   else _attn_defs(cfg, n_groups, d))
+            group[f"t{i}_{kind}"] = sub
+            group[f"t{i}_ln"] = ParamDef((n_groups, d), (None, None), 0.0)
+            group[f"m{i}"] = _mlp_defs(cfg, n_groups, d, cfg.d_ff)
+            group[f"m{i}_ln"] = ParamDef((n_groups, d), (None, None), 0.0)
+        defs["groups"] = group
+        if n_tail:
+            tail: dict[str, Any] = {}
+            for i in range(n_tail):
+                tail[f"t{i}_rec"] = _rec_defs(cfg, 1)
+                tail[f"t{i}_ln"] = ParamDef((1, d), (None, None), 0.0)
+                tail[f"m{i}"] = _mlp_defs(cfg, 1, d, cfg.d_ff)
+                tail[f"m{i}_ln"] = ParamDef((1, d), (None, None), 0.0)
+            defs["tail"] = tail
+        return defs
+    if cfg.family == "encdec":
+        Le = cfg.n_encoder_layers
+        enc = _attn_defs(cfg, Le, d) | _mlp_defs(cfg, Le, d, cfg.d_ff)
+        enc["ln1"] = ParamDef((Le, d), (None, None), 0.0)
+        enc["ln2"] = ParamDef((Le, d), (None, None), 0.0)
+        dec = _attn_defs(cfg, L, d) | _mlp_defs(cfg, L, d, cfg.d_ff)
+        for k_, v_ in list(_attn_defs(cfg, L, d).items()):
+            dec["x" + k_] = v_
+        dec["ln1"] = ParamDef((L, d), (None, None), 0.0)
+        dec["lnx"] = ParamDef((L, d), (None, None), 0.0)
+        dec["ln2"] = ParamDef((L, d), (None, None), 0.0)
+        defs["enc_blocks"] = enc
+        defs["dec_blocks"] = dec
+        defs["enc_norm"] = ParamDef((d,), (None,), 0.0)
+        return defs
+
+    # decoder-only: dense / moe / vlm
+    blocks = _attn_defs(cfg, L, d)
+    blocks["ln1"] = ParamDef((L, d), (None, None), 0.0)
+    blocks["ln2"] = ParamDef((L, d), (None, None), 0.0)
+    if cfg.moe:
+        m = cfg.moe
+        blocks["router"] = ParamDef((L, d, m.n_experts), (None, None, None))
+        blocks["moe_w_in"] = ParamDef(
+            (L, m.n_experts, d, 2 * m.d_expert), (None, "tp", "fsdp", None))
+        blocks["moe_w_out"] = ParamDef(
+            (L, m.n_experts, m.d_expert, d), (None, "tp", None, "fsdp"))
+        if m.n_shared:
+            blocks["sh_w_in"] = ParamDef(
+                (L, d, 2 * m.d_expert * m.n_shared), (None, "fsdp", "tp"))
+            blocks["sh_w_out"] = ParamDef(
+                (L, m.d_expert * m.n_shared, d), (None, "tp", "fsdp"))
+    else:
+        blocks |= _mlp_defs(cfg, L, d, cfg.d_ff)
+    defs["blocks"] = blocks
+    if cfg.family == "vlm":
+        defs["patch_proj"] = ParamDef((d, d), (None, None))
+    return defs
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    defs = param_defs(cfg)
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    dtype = cfg.dtype
+
+    def mk(d: ParamDef, k):
+        dt = d.dtype if d.dtype else dtype
+        if d.scale == 0.0:
+            return jnp.zeros(d.shape, dt)
+        if len(d.shape) == 1 or d.shape[-1] <= 64 and len(d.shape) == 2:
+            return (jax.random.normal(k, d.shape) * 0.02 * d.scale).astype(dt)
+        return truncated_normal_init(k, d.shape, d.scale, dt)
+
+    return jax.tree.unflatten(treedef, [mk(d, k) for d, k in zip(leaves, keys)])
+
+
+def param_specs(cfg: ArchConfig, mesh, fsdp: bool = True) -> Any:
+    """NamedShardings for all params. ``fsdp=False`` (serving) drops the
+    ZeRO-3 axis so weights are only tensor-parallel (no per-step
+    all-gathers on the decode path)."""
+    defs = param_defs(cfg)
+
+    def resolve(d: ParamDef):
+        axes = tuple(a if (fsdp or a != "fsdp") else None for a in d.axes)
+        return named_sharding(mesh, *axes, shape=d.shape)
+
+    return jax.tree.map(resolve, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_pspecs(cfg: ArchConfig, mesh, fsdp: bool = True) -> Any:
+    ns = param_specs(cfg, mesh, fsdp=fsdp)
+    return jax.tree.map(lambda s: s.spec, ns,
+                        is_leaf=lambda s: isinstance(s, jax.sharding.NamedSharding))
+
+
+# =========================================================================
+# Attention sub-block (shared by decoder-only / encdec / hybrid-attn)
+# =========================================================================
+def _attn_apply(p, x, cfg, *, causal=True, window=None, pos_offset=0,
+                kv_override=None, rope=True, chunk_q=512):
+    """Returns (out, (k, v)) for cache building."""
+    b, t, d = x.shape
+    q = jnp.einsum("btd,dq->btq", x, p["wq"]).reshape(
+        b, t, cfg.n_heads, cfg.d_head)
+    if kv_override is None:
+        k = jnp.einsum("btd,dq->btq", x, p["wk"]).reshape(
+            b, t, cfg.n_kv_heads, cfg.d_head)
+        v = jnp.einsum("btd,dq->btq", x, p["wv"]).reshape(
+            b, t, cfg.n_kv_heads, cfg.d_head)
+    else:
+        k, v = kv_override
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if kv_override is None:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        positions = jnp.arange(t) + pos_offset
+        q = apply_rope(q, positions, cfg.rope_theta)
+        if kv_override is None:
+            k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "dp", None, "tp", None)
+    k = shard(k, "dp", None, None, None)
+    v = shard(v, "dp", None, None, None)
+    out = mha(q, k, v, causal=causal, window=window, q_offset=pos_offset,
+              chunk_q=chunk_q)
+    out = jnp.einsum("btq,qd->btd", out.reshape(b, t, cfg.q_dim), p["wo"])
+    return shard(out, "dp", "sp", None), (k, v)
+
+
+def _quantize_kv(x: jax.Array):
+    """(B, 1, KV, Dh) -> (int8 values, (B, 1, KV) f32 scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _decode_attn(p, x, cfg, k_cache, v_cache, pos, *, window=None,
+                 ring_pos=None, rope=True, scales=None):
+    """Single-token attention against a cache; returns (out, k_new, v_new).
+
+    ``scales``: (k_scale, v_scale) for int8 caches — quantize at write,
+    dequantize at read; k/v returns become ((cache, scale), ...) pairs.
+    """
+    b = x.shape[0]
+    q = jnp.einsum("btd,dq->btq", x, p["wq"]).reshape(
+        b, 1, cfg.n_heads, cfg.d_head)
+    k = jnp.einsum("btd,dq->btq", x, p["wk"]).reshape(
+        b, 1, cfg.n_kv_heads, cfg.d_head)
+    v = jnp.einsum("btd,dq->btq", x, p["wv"]).reshape(
+        b, 1, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        pos_arr = jnp.full((1,), 0) + pos
+        q = apply_rope(q, pos_arr, cfg.rope_theta)
+        k = apply_rope(k, pos_arr, cfg.rope_theta)
+    if window is None and scales is not None:
+        k_scale, v_scale = scales
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, kq, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, vq, (0, pos, 0, 0))
+        k_scale = jax.lax.dynamic_update_slice(
+            k_scale, ks.astype(k_scale.dtype), (0, pos, 0))
+        v_scale = jax.lax.dynamic_update_slice(
+            v_scale, vs.astype(v_scale.dtype), (0, pos, 0))
+        out = decode_attend(q, k_cache, v_cache, pos,
+                            k_scale=k_scale, v_scale=v_scale)
+        out = jnp.einsum("btq,qd->btd", out.reshape(b, 1, cfg.q_dim),
+                         p["wo"])
+        return out, (k_cache, k_scale), (v_cache, v_scale)
+    if window is None:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+        out = decode_attend(q, k_cache, v_cache, pos)
+    else:
+        w = k_cache.shape[1]
+        slot = pos % w
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+        slots = jnp.arange(w)
+        stored = pos - ((pos - slots) % w)
+        out = ring_decode_attend(q, k_cache, v_cache, stored, pos, window)
+    out = jnp.einsum("btq,qd->btd", out.reshape(b, 1, cfg.q_dim), p["wo"])
+    return out, k_cache, v_cache
+
+
+# =========================================================================
+# Decoder-only forward (dense / moe / vlm)
+# =========================================================================
+def _decoder_embed(params, cfg, tokens, patches=None):
+    x = embed_lookup(params["embed"], tokens)
+    if cfg.family == "vlm" and patches is not None:
+        pre = jnp.einsum("bpd,de->bpe", patches.astype(x.dtype),
+                         params["patch_proj"])
+        x = jnp.concatenate([pre, x], axis=1)
+    return x
+
+
+def _decoder_block(p, x, cfg, lut_tables, pos_offset=0, collect_kv=False,
+                   chunk_q=512):
+    h, kv = _attn_apply(p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                        pos_offset=pos_offset, chunk_q=chunk_q)
+    x = x + h
+    hin = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        shared = None
+        if cfg.moe.n_shared:
+            shared = lambda z: mlp_block(
+                {"w_in": p["sh_w_in"], "w_out": p["sh_w_out"]}, z, cfg,
+                lut_tables)
+        h, aux = moe_block(
+            {"router": p["router"], "w_in": p["moe_w_in"],
+             "w_out": p["moe_w_out"]}, hin, cfg, shared_mlp=shared)
+    else:
+        h = mlp_block(p, hin, cfg, lut_tables)
+        aux = jnp.zeros((), jnp.float32)
+    x = x + h
+    return x, aux, kv
+
+
+def decoder_forward(params, cfg: ArchConfig, tokens, patches=None,
+                    lut_tables=None, collect_kv=False, remat=False,
+                    chunk_q=512):
+    """Returns (hidden (B,T,d), aux, kv_stack | None)."""
+    x = _decoder_embed(params, cfg, tokens, patches)
+
+    def body(carry, p):
+        x = carry
+        y, aux, kv = _decoder_block(p, x, cfg, lut_tables, chunk_q=chunk_q)
+        out = (aux, kv) if collect_kv else (aux, None)
+        return y, out
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, (auxes, kvs) = jax.lax.scan(body, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.sum(auxes), kvs
+
+
+def decoder_loss(params, cfg, batch, lut_tables=None, remat=False,
+                 chunk_q=512):
+    patches = batch.get("patches")
+    x, aux, _ = decoder_forward(params, cfg, batch["tokens"],
+                                patches=patches, lut_tables=lut_tables,
+                                remat=remat, chunk_q=chunk_q)
+    if patches is not None:
+        x = x[:, patches.shape[1]:]
+    logits = logits_projection(x, params["lm_head"])
+    loss = softmax_cross_entropy(logits, batch["labels"])
+    if cfg.moe:
+        loss = loss + cfg.moe.router_aux_weight * aux / cfg.n_layers
+    return loss
+
+
+# =========================================================================
+# RWKV6 forward
+# =========================================================================
+def rwkv_forward(params, cfg, tokens, states=None, remat=False,
+                 collect_states=False):
+    """states: None (training) or per-layer decode state pytree with leaves
+    stacked over layers: {"att_x": (L,B,1,d), "ffn_x": (L,B,1,d),
+    "wkv": (L,B,H,N,N)}.  ``collect_states=True`` (prefill) returns the
+    segment-final states from a full-sequence pass."""
+    x = embed_lookup(params["embed"], tokens)
+    decode = states is not None
+
+    def body(carry, inp):
+        x = carry
+        if decode:
+            p, st = inp
+            h, (ax, wkv) = rwkv_time_mix(
+                p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                x_last=st["att_x"], wkv_state=st["wkv"])
+            x = x + h
+            h, fx = rwkv_channel_mix(
+                p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
+                x_last=st["ffn_x"])
+            x = x + h
+            return x, {"att_x": ax, "ffn_x": fx, "wkv": wkv}
+        p = inp
+        h, (ax, wkv) = rwkv_time_mix(
+            p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+        x = x + h
+        h, fx = rwkv_channel_mix(
+            p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        x = x + h
+        ys = ({"att_x": ax, "ffn_x": fx, "wkv": wkv} if collect_states
+              else jnp.zeros((), jnp.float32))
+        return x, ys
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs = (params["blocks"], states) if decode else params["blocks"]
+    x, out_states = jax.lax.scan(body, x, xs)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, (out_states if (decode or collect_states) else None)
+
+
+def rwkv_loss(params, cfg, batch, lut_tables=None, remat=False, **_):
+    x, _ = rwkv_forward(params, cfg, batch["tokens"], remat=remat)
+    logits = logits_projection(x, params["lm_head"])
+    return softmax_cross_entropy(logits, batch["labels"])
+
+
+# =========================================================================
+# Hybrid (Griffin / RecurrentGemma) forward
+# =========================================================================
+def _ring_from_segment(k, v, window):
+    """Build the decode ring buffer from a prefill segment (positions
+    0..T-1): slot s holds the latest position p with p % W == s."""
+    t = k.shape[1]
+    slots = jnp.arange(window)
+    p = (t - 1) - ((t - 1 - slots) % window)
+    valid = p >= 0
+    idx = jnp.clip(p, 0, t - 1)
+    kr = jnp.where(valid[None, :, None, None], k[:, idx], 0)
+    vr = jnp.where(valid[None, :, None, None], v[:, idx], 0)
+    return kr, vr
+
+
+def _hybrid_temporal(kind, p, x, cfg, pos_offset, state=None, mode="train"):
+    if kind == "rec":
+        if mode == "decode":
+            return recurrent_block_step(p, x, cfg, state)
+        out, st = recurrent_block(p, x, cfg, state)
+        return out, st
+    # local attention
+    if mode == "decode":
+        out, kc, vc = _decode_attn(p, x, cfg, state["k"], state["v"],
+                                   pos_offset, window=cfg.local_window)
+        return out, {"k": kc, "v": vc}
+    out, (k, v) = _attn_apply(p, x, cfg, causal=True,
+                              window=cfg.local_window,
+                              pos_offset=pos_offset)
+    if mode == "prefill":
+        kr, vr = _ring_from_segment(k, v, cfg.local_window)
+        return out, {"k": kr, "v": vr}
+    return out, {"k": k[:, :1], "v": v[:, :1]}  # placeholder (train)
+
+
+def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
+                   mode=None):
+    """Full-sequence forward. ``states`` (decode): pytree per group/tail.
+    mode: train | prefill | decode (inferred from ``states`` if None)."""
+    pattern = cfg.block_pattern or ("rec", "rec", "attn")
+    x = embed_lookup(params["embed"], tokens)
+    mode = mode or ("decode" if states is not None else "train")
+    decode = mode == "decode"
+    collect = mode in ("prefill", "decode")
+
+    def group_body(carry, inp):
+        x = carry
+        if decode:
+            p, st = inp
+        else:
+            p, st = inp, {}
+        new_st = {}
+        for i, kind in enumerate(pattern):
+            xin = rms_norm(x, p[f"t{i}_ln"], cfg.norm_eps)
+            h, s = _hybrid_temporal(kind, p[f"t{i}_{kind}"], xin, cfg, pos,
+                                    state=st.get(f"t{i}") if decode else None,
+                                    mode=mode)
+            new_st[f"t{i}"] = s
+            x = x + h
+            h = mlp_block(p[f"m{i}"], rms_norm(x, p[f"m{i}_ln"],
+                                               cfg.norm_eps), cfg)
+            x = x + h
+        return x, new_st if collect else jnp.zeros((), jnp.float32)
+
+    if remat:
+        group_body = jax.checkpoint(group_body)
+    xs = ((params["groups"], states["groups"]) if decode
+          else params["groups"])
+    x, g_states = jax.lax.scan(group_body, x, xs)
+
+    tail_states = {}
+    if "tail" in params:
+        tp_ = params["tail"]
+        i = 0
+        while f"t{i}_rec" in tp_:
+            p_rec = jax.tree.map(lambda a: a[0], tp_[f"t{i}_rec"])
+            ln = tp_[f"t{i}_ln"][0]
+            xin = rms_norm(x, ln, cfg.norm_eps)
+            st = states["tail"].get(f"t{i}") if decode else None
+            if decode:
+                h, s = recurrent_block_step(p_rec, xin, cfg, st)
+            else:
+                h, s = recurrent_block(p_rec, xin, cfg, st)
+            tail_states[f"t{i}"] = s
+            x = x + h
+            mp = jax.tree.map(lambda a: a[0], tp_[f"m{i}"])
+            h = mlp_block(mp, rms_norm(x, tp_[f"m{i}_ln"][0],
+                                       cfg.norm_eps), cfg)
+            x = x + h
+            i += 1
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    out_states = ({"groups": g_states, "tail": tail_states}
+                  if collect else None)
+    return x, out_states
+
+
+def hybrid_loss(params, cfg, batch, lut_tables=None, remat=False, **_):
+    x, _ = hybrid_forward(params, cfg, batch["tokens"], remat=remat)
+    logits = logits_projection(x, params["lm_head"])
+    return softmax_cross_entropy(logits, batch["labels"])
+
+
+# =========================================================================
+# Whisper (enc-dec) forward
+# =========================================================================
+def _sinusoid(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def encoder_forward(params, cfg, frames, remat=False):
+    """frames: (B, n_frames, d) stub embeddings (DESIGN.md: frontend stub)."""
+    x = frames.astype(cfg.dtype)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    x = shard(x, "dp", None, None)
+
+    def body(x, p):
+        h, _ = _attn_apply(p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                           causal=False, rope=False)
+        x = x + h
+        h = mlp_block(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        return x + h, jnp.zeros((), jnp.float32)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def encdec_forward(params, cfg, tokens, enc_out, collect_kv=False,
+                   remat=False):
+    x = embed_lookup(params["embed"], tokens)
+
+    def body(x, p):
+        h, kv = _attn_apply(p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                            causal=True, rope=True)
+        x = x + h
+        # cross attention (encoder K/V computed per layer)
+        xin = rms_norm(x, p["lnx"], cfg.norm_eps)
+        b, t, d = xin.shape
+        q = jnp.einsum("btd,dq->btq", xin, p["xwq"]).reshape(
+            b, t, cfg.n_heads, cfg.d_head)
+        ek = jnp.einsum("bsd,dq->bsq", enc_out, p["xwk"]).reshape(
+            b, -1, cfg.n_kv_heads, cfg.d_head)
+        ev = jnp.einsum("bsd,dq->bsq", enc_out, p["xwv"]).reshape(
+            b, -1, cfg.n_kv_heads, cfg.d_head)
+        h = mha(q, ek, ev, causal=False)
+        h = jnp.einsum("btq,qd->btd", h.reshape(b, t, cfg.q_dim), p["xwo"])
+        x = x + h
+        h = mlp_block(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        out = (jnp.zeros((), jnp.float32), kv if collect_kv else None)
+        return x + h, out
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, (_, kvs) = jax.lax.scan(body, x, params["dec_blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, kvs
+
+
+def encdec_loss(params, cfg, batch, lut_tables=None, remat=False, **_):
+    enc = encoder_forward(params, cfg, batch["frames"], remat=remat)
+    x, _ = encdec_forward(params, cfg, batch["tokens"], enc, remat=remat)
+    logits = logits_projection(x, params["lm_head"])
+    return softmax_cross_entropy(logits, batch["labels"])
+
+
+LOSS_FNS = {
+    "dense": decoder_loss,
+    "moe": decoder_loss,
+    "vlm": decoder_loss,
+    "ssm": rwkv_loss,
+    "hybrid": hybrid_loss,
+    "encdec": encdec_loss,
+}
+
+
+def loss_fn(cfg: ArchConfig):
+    return functools.partial(LOSS_FNS[cfg.family], cfg=cfg)

@@ -1,0 +1,12 @@
+"""Optimizers and schedules (pure JAX, pytree-based — no optax)."""
+from .adamw import AdamWConfig, adamw_init, adamw_update, apply_updates
+from .schedules import constant_schedule, warmup_cosine_schedule
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "apply_updates",
+    "constant_schedule",
+    "warmup_cosine_schedule",
+]

@@ -1,0 +1,27 @@
+"""Learning-rate schedules as step -> lr callables (jit-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, dtype=jnp.float32)
+    return fn
+
+
+def warmup_cosine_schedule(
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    end_frac: float = 0.1,
+):
+    """Linear warmup then cosine decay to ``end_frac * peak_lr``."""
+    def fn(step):
+        step = jnp.asarray(step, dtype=jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+        prog = (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = end_frac + (1 - end_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return fn

@@ -1,0 +1,15 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from .analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineTerms,
+    analyze_compiled,
+    collective_bytes,
+    model_flops_per_step,
+)
+
+__all__ = [
+    "RooflineTerms", "analyze_compiled", "collective_bytes",
+    "model_flops_per_step", "PEAK_FLOPS", "HBM_BW", "ICI_BW",
+]

@@ -1,0 +1,343 @@
+"""Loop-aware cost extraction from post-SPMD optimized HLO text.
+
+``compiled.cost_analysis()`` visits every computation exactly once, so
+anything inside a ``while`` body (every ``lax.scan`` — i.e. *all* of our
+layer stacks and microbatch loops) is counted a single time.  This module
+re-derives FLOPs / HBM bytes / collective bytes with loop trip-count
+multipliers:
+
+  * parse computations and ops from ``compiled.as_text()``
+  * walk the call graph from ENTRY; ``while`` ops multiply their body's
+    and condition's multiplier by the trip count (max s32 constant in the
+    condition computation — scans lower to 0..N-1 counters)
+  * FLOPs: ``dot`` ops (2 * prod(result) * prod(contracting dims)),
+    counted wherever they appear (including inside fusions)
+  * HBM bytes: operand + result bytes of kernel-level ops (fusions count
+    as one kernel: their operands/result are the actual HBM traffic —
+    XLA's own fusion cost model); bookkeeping ops (tuple/gte/bitcast/
+    parameter/constant) are free
+  * collective bytes: result bytes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute times multiplier
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_OP_RE = re.compile(
+    r"^\s*(ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_ATTR_COMP_RE = re.compile(
+    r"(to_apply|body|condition|calls|branch_computations)="
+    r"(%[\w.\-]+|\{[^}]*\})"
+)
+_CONST_S32_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done",
+    # control flow: loop/branch state is aliased, bodies are accounted
+    "while", "conditional", "call", "optimization-barrier",
+}
+
+
+def _shape_info(type_str: str) -> tuple[int, list[list[int]]]:
+    """(total bytes, list of dims arrays) of a (possibly tuple) type."""
+    total = 0
+    shapes = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dd = [int(x) for x in dims.split(",")] if dims else []
+        total += math.prod(dd) * _DTYPE_BYTES[dtype]
+        shapes.append(dd)
+    return total, shapes
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    rest: str
+    is_root: bool = False
+    param_idx: int | None = None
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: list[Op]
+    shapes: dict[str, str]   # op name -> result type string
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = ""
+    for line in text.splitlines():
+        ls = re.sub(r"/\*.*?\*/", "", line).rstrip()
+        m = _COMP_RE.match(ls.strip())
+        if m and ls.strip().endswith("{"):
+            cur = Computation(m.group(2), bool(m.group(1)), [], {})
+            comps[cur.name] = cur
+            if cur.is_entry:
+                entry = cur.name
+            # parameters appear in the signature AND as ops; ops cover them
+            continue
+        if ls.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(ls)
+        if not om:
+            continue
+        root_flag, name, type_str, opcode, rest = om.groups()
+        # operand list: names up to the closing paren at depth 0
+        depth, i = 1, 0
+        while i < len(rest) and depth > 0:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        operand_str = rest[:i - 1] if i > 0 else ""
+        operands = re.findall(r"%([\w.\-]+)", operand_str)
+        pidx = None
+        if opcode == "parameter":
+            pm = re.match(r"\s*(\d+)", operand_str)
+            if pm:
+                pidx = int(pm.group(1))
+        op = Op(name, type_str.strip(), opcode, operands, rest[i:],
+                is_root=bool(root_flag), param_idx=pidx)
+        cur.ops.append(op)
+        cur.shapes[name] = op.type_str
+    return comps, entry
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    per_op_coll: dict
+    trip_counts: dict
+    per_comp_hbm: dict = dataclasses.field(default_factory=dict)
+    per_comp_flops: dict = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze_hlo(text: str) -> HloCosts:
+    comps, entry = parse_hlo(text)
+
+    # --- trip counts: max s32 constant inside each while condition -------
+    # reparse constants directly from the raw text (robust)
+    cur_name = None
+    consts_per_comp: dict[str, list[int]] = {}
+    for line in text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m and line.strip().endswith("{"):
+            cur_name = m.group(2)
+            continue
+        if line.strip() == "}":
+            cur_name = None
+            continue
+        if cur_name:
+            for c in _CONST_S32_RE.findall(line):
+                consts_per_comp.setdefault(cur_name, []).append(int(c))
+
+    # --- call-graph multipliers ------------------------------------------
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    kernel_level: dict[str, bool] = {c: False for c in comps}
+    if entry:
+        mult[entry] = 1.0
+        kernel_level[entry] = True
+    trip_counts: dict[str, int] = {}
+    # BFS: propagate multipliers through while/call/conditional; fusions &
+    # to_apply lambdas get multipliers for FLOP counting but are not
+    # kernel-level for bytes.
+    order = [entry] if entry else []
+    seen = set(order)
+    qi = 0
+    while qi < len(order):
+        cname = order[qi]
+        qi += 1
+        comp = comps[cname]
+        m = mult[cname]
+        for op in comp.ops:
+            refs = dict()
+            for am in _ATTR_COMP_RE.finditer(op.rest):
+                key, val = am.group(1), am.group(2)
+                names = re.findall(r"%([\w.\-]+)", val)
+                refs[key] = names
+            if op.opcode == "while":
+                cond = refs.get("condition", [None])[0]
+                body = refs.get("body", [None])[0]
+                trip = max(consts_per_comp.get(cond, [1]) or [1])
+                trip = max(trip, 1)
+                trip_counts[body] = trip
+                for target, factor, kl in ((body, trip, True),
+                                           (cond, trip, True)):
+                    if target in comps:
+                        mult[target] += m * factor
+                        kernel_level[target] |= kl
+                        if target not in seen:
+                            seen.add(target)
+                            order.append(target)
+            else:
+                for key, names in refs.items():
+                    kl = key in ("branch_computations",) or op.opcode in (
+                        "call", "conditional")
+                    for target in names:
+                        if target in comps:
+                            mult[target] += m
+                            kernel_level[target] |= kl
+                            if target not in seen:
+                                seen.add(target)
+                                order.append(target)
+
+    # --- cost accumulation -------------------------------------------------
+    # HBM byte model follows XLA's bytes-accessed semantics:
+    #   * dynamic-slice reads only the slice;
+    #   * dynamic-update-slice reads+writes only the update (output aliases);
+    #   * a fusion's traffic is its root output plus, per parameter, either
+    #     the full buffer or — when every use inside the fusion is as the
+    #     sliced operand of a (dynamic-)slice/DUS — just the slice sizes.
+    def _operand_bytes(comp, name):
+        return _shape_info(comp.shapes.get(name, ""))[0]
+
+    def _fusion_traffic(op, comp):
+        called = None
+        cm = _ATTR_COMP_RE.search(op.rest)
+        for am in _ATTR_COMP_RE.finditer(op.rest):
+            if am.group(1) == "calls":
+                called = re.findall(r"%([\w.\-]+)", am.group(2))
+                called = called[0] if called else None
+        fc = comps.get(called) if called else None
+        rbytes, _ = _shape_info(op.type_str)
+        if fc is None:
+            return rbytes + sum(_operand_bytes(comp, o) for o in op.operands)
+        # map parameter index -> op name, and find uses
+        param_names = {}
+        for fop in fc.ops:
+            if fop.opcode == "parameter" and fop.param_idx is not None:
+                param_names[fop.param_idx] = fop.name
+        uses: dict[str, list] = {}
+        root_op = None
+        for fop in fc.ops:
+            if fop.is_root:
+                root_op = fop
+            for o in fop.operands:
+                uses.setdefault(o, []).append(fop)
+        total = 0.0
+        for idx, operand in enumerate(op.operands):
+            pname = param_names.get(idx)
+            full = _operand_bytes(comp, operand)
+            if pname is None:
+                total += full
+                continue
+            consumers = uses.get(pname, [])
+            slicey = consumers and all(
+                f.opcode in ("dynamic-slice", "slice", "gather")
+                and f.operands and f.operands[0] == pname
+                or (f.opcode == "dynamic-update-slice"
+                    and f.operands and f.operands[0] == pname)
+                for f in consumers
+            )
+            if slicey:
+                sb = 0
+                for f in consumers:
+                    if f.opcode == "dynamic-update-slice":
+                        sb += 2 * _shape_info(
+                            fc.shapes.get(f.operands[1], ""))[0]
+                    else:
+                        sb += _shape_info(f.type_str)[0]
+                total += min(sb, full)
+            else:
+                total += full
+        if root_op is not None and root_op.opcode == "dynamic-update-slice":
+            total += _shape_info(fc.shapes.get(root_op.operands[1], ""))[0]
+        else:
+            total += rbytes
+        return total
+
+    flops = 0.0
+    hbm = 0.0
+    coll: dict[str, float] = {}
+    per_comp_hbm: dict[str, float] = {}
+    per_comp_flops: dict[str, float] = {}
+
+    def _add(d, key, v):
+        d[key] = d.get(key, 0.0) + v
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        hbm0, flops0 = hbm, flops
+        for op in comp.ops:
+            rbytes, rshapes = _shape_info(op.type_str)
+            if op.opcode == "dot":
+                lhs = comp.shapes.get(op.operands[0]) if op.operands else None
+                cm = _CONTRACT_RE.search(op.rest)
+                if lhs and cm:
+                    _, lshapes = _shape_info(lhs)
+                    ldims = lshapes[0] if lshapes else []
+                    cdims = [int(x) for x in cm.group(1).split(",") if x]
+                    csize = math.prod(ldims[i] for i in cdims
+                                      if i < len(ldims))
+                    out = math.prod(rshapes[0]) if rshapes else 0
+                    flops += 2.0 * out * csize * m
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES and kernel_level.get(comp.name):
+                # ring cost convention: all-reduce moves ~2x its payload
+                # (reduce-scatter + all-gather phases); others ~1x.
+                factor = 2.0 if base == "all-reduce" else 1.0
+                coll[base] = coll.get(base, 0.0) + rbytes * m * factor
+            if not kernel_level.get(comp.name) or op.opcode in _FREE_OPS \
+                    or op.opcode.endswith("-done"):
+                continue
+            if op.opcode == "fusion":
+                hbm += _fusion_traffic(op, comp) * m
+            elif op.opcode in ("dynamic-slice", "slice"):
+                hbm += 2 * rbytes * m
+            elif op.opcode == "dynamic-update-slice":
+                upd = _operand_bytes(comp, op.operands[1]) \
+                    if len(op.operands) > 1 else rbytes
+                hbm += 2 * upd * m
+            elif op.opcode == "gather":
+                hbm += 2 * rbytes * m
+            else:
+                obytes = sum(_operand_bytes(comp, o) for o in op.operands)
+                hbm += (rbytes + obytes) * m
+
+        if hbm > hbm0:
+            _add(per_comp_hbm, comp.name, hbm - hbm0)
+        if flops > flops0:
+            _add(per_comp_flops, comp.name, flops - flops0)
+
+    return HloCosts(
+        flops=flops, hbm_bytes=hbm, coll_bytes=float(sum(coll.values())),
+        per_op_coll=coll, trip_counts=trip_counts,
+        per_comp_hbm=per_comp_hbm, per_comp_flops=per_comp_flops,
+    )

@@ -1,0 +1,7 @@
+"""Serving runtime: prefill, decode, KV-cache management, batching."""
+from .batching import ContinuousBatcher, Request
+from .decode import decode_step, prefill
+from .kvcache import cache_shardings, cache_specs, init_cache
+
+__all__ = ["prefill", "decode_step", "cache_specs", "init_cache",
+           "cache_shardings", "ContinuousBatcher", "Request"]

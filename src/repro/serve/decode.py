@@ -1,0 +1,197 @@
+"""Prefill and single-token decode per architecture family.
+
+``prefill(params, cfg, batch)`` -> (last-token logits, decode state)
+``decode_step(params, cfg, cache, tokens, pos)`` -> (logits, new state)
+
+decode_step is the function lowered for the ``decode_*`` / ``long_*``
+dry-run cells (one new token against a seq_len-deep cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn.layers import logits_projection, rms_norm
+from repro.nn.mlp import mlp_block
+from repro.nn.moe import moe_block
+from repro.nn.transformer import (
+    _attn_apply,
+    _decode_attn,
+    _decoder_embed,
+    decoder_forward,
+    encoder_forward,
+    encdec_forward,
+    hybrid_forward,
+    rwkv_forward,
+)
+from repro.nn.attention import mha
+from repro.nn.sharding import shard
+
+
+# =========================================================================
+# decoder-only (dense / moe / vlm)
+# =========================================================================
+def decoder_prefill(params, cfg, batch, max_seq: int | None = None):
+    tokens = batch["tokens"]
+    x, _, kvs = decoder_forward(
+        params, cfg, tokens, patches=batch.get("patches"), collect_kv=True)
+    logits = logits_projection(x[:, -1:], params["lm_head"])
+    k, v = kvs
+    cache = {"k": k, "v": v}
+    if max_seq and max_seq > k.shape[2]:
+        pad = max_seq - k.shape[2]
+        cache = {
+            n: jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            for n, c in cache.items()
+        }
+    return logits, cache
+
+
+def decoder_decode_step(params, cfg, cache, tokens, pos,
+                        lut_tables=None):
+    x = _decoder_embed(params, cfg, tokens)
+    int8 = "k_scale" in cache
+
+    def body(x, inp):
+        if int8:
+            p, kc, vc, ksc, vsc = inp
+            h, (kc, ksc), (vc, vsc) = _decode_attn(
+                p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg, kc, vc, pos,
+                scales=(ksc, vsc))
+        else:
+            p, kc, vc = inp
+            h, kc, vc = _decode_attn(
+                p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg, kc, vc, pos)
+        x = x + h
+        hin = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            shared = None
+            if cfg.moe.n_shared:
+                shared = lambda z: mlp_block(
+                    {"w_in": p["sh_w_in"], "w_out": p["sh_w_out"]}, z, cfg)
+            h, _ = moe_block(
+                {"router": p["router"], "w_in": p["moe_w_in"],
+                 "w_out": p["moe_w_out"]}, hin, cfg, shared_mlp=shared)
+        else:
+            h = mlp_block(p, hin, cfg, lut_tables)
+        out = (kc, vc, ksc, vsc) if int8 else (kc, vc)
+        return x + h, out
+
+    if int8:
+        xs = (params["blocks"], cache["k"], cache["v"], cache["k_scale"],
+              cache["v_scale"])
+        x, (ks, vs, kss, vss) = jax.lax.scan(body, x, xs)
+        new_cache = {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss}
+    else:
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_projection(x, params["lm_head"])
+    return logits, new_cache
+
+
+# =========================================================================
+# encdec (whisper)
+# =========================================================================
+def encdec_prefill(params, cfg, batch, max_seq: int | None = None):
+    enc = encoder_forward(params, cfg, batch["frames"])
+    # per-layer cross K/V from the encoder output
+    def xkv(p):
+        b, s, d = enc.shape
+        ek = jnp.einsum("bsd,dq->bsq", enc, p["xwk"]).reshape(
+            b, s, cfg.n_kv_heads, cfg.d_head)
+        ev = jnp.einsum("bsd,dq->bsq", enc, p["xwv"]).reshape(
+            b, s, cfg.n_kv_heads, cfg.d_head)
+        return ek, ev
+
+    xks, xvs = jax.vmap(xkv)(params["dec_blocks"])
+    x, kvs = encdec_forward(params, cfg, batch["tokens"], enc,
+                            collect_kv=True)
+    logits = logits_projection(x[:, -1:], params["lm_head"])
+    k, v = kvs
+    cache = {"k": k, "v": v, "xk": xks.astype(k.dtype),
+             "xv": xvs.astype(k.dtype)}
+    return logits, cache
+
+
+def encdec_decode_step(params, cfg, cache, tokens, pos):
+    from repro.nn.layers import embed_lookup
+
+    x = embed_lookup(params["embed"], tokens)
+
+    def body(x, inp):
+        p, kc, vc, xk, xv = inp
+        h, kc, vc = _decode_attn(
+            p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg, kc, vc, pos)
+        x = x + h
+        xin = rms_norm(x, p["lnx"], cfg.norm_eps)
+        b = xin.shape[0]
+        q = jnp.einsum("btd,dq->btq", xin, p["xwq"]).reshape(
+            b, 1, cfg.n_heads, cfg.d_head)
+        h = mha(q, xk, xv, causal=False)
+        h = jnp.einsum("btq,qd->btd", h.reshape(b, 1, cfg.q_dim), p["xwo"])
+        x = x + h
+        h = mlp_block(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        return x + h, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x,
+        (params["dec_blocks"], cache["k"], cache["v"], cache["xk"],
+         cache["xv"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_projection(x, params["lm_head"])
+    return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}
+
+
+# =========================================================================
+# ssm (rwkv6) / hybrid (recurrentgemma)
+# =========================================================================
+def rwkv_prefill(params, cfg, batch, max_seq: int | None = None):
+    x, states = rwkv_forward(params, cfg, batch["tokens"],
+                             collect_states=True)
+    logits = logits_projection(x[:, -1:], params["lm_head"])
+    return logits, states
+
+
+def rwkv_decode_step(params, cfg, cache, tokens, pos):
+    x, states = rwkv_forward(params, cfg, tokens, states=cache)
+    logits = logits_projection(x, params["lm_head"])
+    return logits, states
+
+
+def hybrid_prefill(params, cfg, batch, max_seq: int | None = None):
+    x, states = hybrid_forward(params, cfg, batch["tokens"], mode="prefill")
+    logits = logits_projection(x[:, -1:], params["lm_head"])
+    return logits, states
+
+
+def hybrid_decode_step(params, cfg, cache, tokens, pos):
+    x, states = hybrid_forward(params, cfg, tokens, states=cache, pos=pos,
+                               mode="decode")
+    logits = logits_projection(x, params["lm_head"])
+    return logits, states
+
+
+PREFILL_FNS = {
+    "dense": decoder_prefill, "moe": decoder_prefill, "vlm": decoder_prefill,
+    "encdec": encdec_prefill, "ssm": rwkv_prefill, "hybrid": hybrid_prefill,
+}
+DECODE_FNS = {
+    "dense": decoder_decode_step, "moe": decoder_decode_step,
+    "vlm": decoder_decode_step, "encdec": encdec_decode_step,
+    "ssm": rwkv_decode_step, "hybrid": hybrid_decode_step,
+}
+
+
+def prefill(params, cfg: ArchConfig, batch, max_seq=None):
+    return PREFILL_FNS[cfg.family](params, cfg, batch, max_seq)
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens, pos,
+                lut_tables=None):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return decoder_decode_step(params, cfg, cache, tokens, pos,
+                                   lut_tables=lut_tables)
+    return DECODE_FNS[cfg.family](params, cfg, cache, tokens, pos)

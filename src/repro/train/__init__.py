@@ -1,0 +1,12 @@
+"""Distributed training runtime."""
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .fault_tolerance import StragglerMonitor, Supervisor
+from .state import TrainConfig, abstract_train_state, init_train_state, train_state_shardings
+from .step import input_batch_specs, make_prefill, make_serve_step, make_train_step
+
+__all__ = [
+    "TrainConfig", "init_train_state", "abstract_train_state",
+    "train_state_shardings", "make_train_step", "make_serve_step",
+    "make_prefill", "input_batch_specs", "save_checkpoint",
+    "restore_checkpoint", "latest_step", "Supervisor", "StragglerMonitor",
+]

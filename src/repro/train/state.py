@@ -1,0 +1,64 @@
+"""Train state: params + AdamW moments + step counter, mesh-aware."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.nn.transformer import init_params, param_specs
+from repro.optim import AdamWConfig, adamw_init
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    remat: bool = True
+    microbatch: int | None = None      # micro-steps per global step
+    grad_compress: bool = False        # int8 error-feedback DP all-reduce
+    chunk_q: int = 512                 # attention query-chunk length
+    seed: int = 0
+
+
+def init_train_state(cfg: ArchConfig, tcfg: TrainConfig):
+    """Concrete state (smoke/example scale)."""
+    params = init_params(cfg, jax.random.PRNGKey(tcfg.seed))
+    state = {
+        "params": params,
+        "opt": adamw_init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if tcfg.grad_compress:
+        state["ef_error"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def train_state_shardings(cfg: ArchConfig, tcfg: TrainConfig, mesh):
+    """NamedSharding pytree matching ``init_train_state`` structure.
+    Optimizer moments inherit the parameter shardings (no resharding in
+    the update)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    pspecs = param_specs(cfg, mesh)
+    rep = NamedSharding(mesh, P())
+    out = {
+        "params": pspecs,
+        "opt": {
+            "mu": pspecs,
+            "nu": pspecs,
+            "count": rep,
+        },
+        "step": rep,
+    }
+    if tcfg.grad_compress:
+        out["ef_error"] = pspecs
+    return out
+
+
+def abstract_train_state(cfg: ArchConfig, tcfg: TrainConfig):
+    """ShapeDtypeStructs for dry-run lowering (no allocation)."""
+    return jax.eval_shape(lambda: init_train_state(cfg, tcfg))

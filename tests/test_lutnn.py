@@ -1,0 +1,108 @@
+"""Integration tests for the LUT-NN substrate (paper toolflow, Fig. 2)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import CompressConfig, compress_network, rom_baseline_cost, verify_care_exact
+from repro.data import make_jsc
+from repro.lutnn import (
+    extract_tables,
+    mark_observed,
+    quantize_input,
+    table_accuracy,
+    table_forward,
+    train_lutnn,
+)
+from repro.lutnn.extract import network_table_specs, specs_to_tables
+from repro.lutnn.model import LUTNNConfig, lutnn_forward, paper_model
+
+
+@pytest.fixture(scope="module")
+def tiny_net():
+    """A trained tiny LUT-NN shared across tests (module-scoped for speed)."""
+    cfg = LUTNNConfig(
+        name="tiny", n_inputs=16, layer_sizes=(12, 5),
+        beta=3, fanin=3, beta0=3, fanin0=3, seed=0,
+    )
+    xtr, ytr, xte, yte = make_jsc(3000, 800, seed=1)
+    params, conn, metrics = train_lutnn(cfg, xtr, ytr, xte, yte, epochs=6)
+    tables = extract_tables(params, cfg)
+    return cfg, params, conn, tables, (xtr, ytr, xte, yte), metrics
+
+
+def test_training_learns(tiny_net):
+    *_, metrics = tiny_net
+    assert metrics["train_acc"] > 0.5
+    assert metrics["test_acc"] > 0.5
+
+
+def test_table_eval_matches_functional_form(tiny_net):
+    """The extracted truth tables compute exactly the quantized network."""
+    cfg, params, conn, tables, (xtr, *_), _ = tiny_net
+    x = xtr[:256]
+    codes = quantize_input(x, cfg.beta0)
+    tf = table_forward(tables, conn, cfg, codes)
+    ff = lutnn_forward(params, [jnp.asarray(c) for c in conn], cfg,
+                       jnp.asarray(x))
+    ff_codes = np.rint(np.asarray(ff) * (2 ** cfg.beta - 1)).astype(np.int64)
+    assert np.array_equal(tf, ff_codes)
+
+
+def test_observed_masks_shapes_and_coverage(tiny_net):
+    cfg, _, conn, tables, (xtr, *_), _ = tiny_net
+    obs = mark_observed(tables, conn, cfg, xtr)
+    assert len(obs) == len(tables)
+    for o, t in zip(obs, tables):
+        assert o.shape == t.shape
+        frac = o.mean()
+        assert 0.0 < frac < 1.0  # some observed, some don't care
+
+
+def test_compression_preserves_training_accuracy_exactly(tiny_net):
+    """Paper SS4.1: training accuracy is unchanged by ReducedLUT."""
+    cfg, _, conn, tables, (xtr, ytr, _, _), _ = tiny_net
+    obs = mark_observed(tables, conn, cfg, xtr)
+    specs = network_table_specs(tables, obs, cfg)
+    ccfg = CompressConfig(exiguity=100, m_candidates=(16, 64),
+                          lb_candidates=(0, 1))
+    plans = compress_network(specs, ccfg)
+    for spec, plan in zip(specs, plans):
+        assert verify_care_exact(spec, plan)
+    tab_r = specs_to_tables([p.reconstruct() for p in plans], cfg)
+    acc_before = table_accuracy(tables, conn, cfg, xtr, ytr)
+    acc_after = table_accuracy(tab_r, conn, cfg, xtr, ytr)
+    assert acc_before == acc_after
+
+
+def test_reducedlut_beats_compressedlut_on_lutnn_tables(tiny_net):
+    """The headline claim on real (trained) LUT-NN tables."""
+    cfg, _, conn, tables, (xtr, *_), _ = tiny_net
+    obs = mark_observed(tables, conn, cfg, xtr)
+    specs_ac = network_table_specs(tables, None, cfg)
+    specs_dc = network_table_specs(tables, obs, cfg)
+    mc, lc = (16, 64), (0, 1)
+    cost_c = sum(
+        p.plut_cost() for p in compress_network(
+            specs_ac, CompressConfig(exiguity=None, m_candidates=mc,
+                                     lb_candidates=lc))
+    )
+    cost_r = sum(
+        p.plut_cost() for p in compress_network(
+            specs_dc, CompressConfig(exiguity=250, m_candidates=mc,
+                                     lb_candidates=lc))
+    )
+    baseline = sum(rom_baseline_cost(s) for s in specs_ac)
+    assert cost_c <= baseline
+    assert cost_r < cost_c  # don't cares must strictly help on these tables
+
+
+def test_paper_model_zoo_matches_table1():
+    jsc2 = paper_model("jsc-2l")
+    assert jsc2.layer_sizes == (32, 5) and jsc2.beta == 4 and jsc2.fanin == 3
+    jsc5 = paper_model("jsc-5l")
+    assert jsc5.layer_sizes == (128, 128, 128, 64, 5)
+    assert jsc5.beta0 == 7 and jsc5.fanin0 == 2
+    mnist = paper_model("mnist")
+    assert mnist.layer_sizes == (256, 100, 100, 100, 10)
+    assert mnist.beta == 2 and mnist.fanin == 6
+    assert mnist.n_inputs == 784

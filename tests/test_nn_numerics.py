@@ -1,0 +1,194 @@
+"""Numerical equivalence tests for the model-substrate primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nn.attention import mha
+from repro.nn.rglru import causal_conv1d, rg_lru, rg_lru_step
+from repro.nn.ssm import wkv_chunked, wkv_decode_step, wkv_scan_ref
+
+
+# --------------------------------------------------------------------------
+# RWKV6 chunked GLA
+# --------------------------------------------------------------------------
+@given(
+    t=st.integers(min_value=1, max_value=70),
+    seed=st.integers(min_value=0, max_value=20),
+    strong=st.booleans(),
+)
+@settings(max_examples=12, deadline=None)
+def test_wkv_chunked_equals_scan(t, seed, strong):
+    rng = np.random.default_rng(seed)
+    b, h, n = 2, 2, 8
+    q, k, v = (jnp.asarray(rng.normal(size=(b, t, h, n)), jnp.float32)
+               for _ in range(3))
+    hi = 1.2 if strong else -1.0
+    log_w = jnp.asarray(-np.exp(rng.uniform(-4, hi, size=(b, t, h, n))),
+                        jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, n)), jnp.float32)
+    y_ref, s_ref = wkv_scan_ref(q, k, v, log_w, u)
+    y, s = wkv_chunked(q, k, v, log_w, u, chunk=16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_wkv_decode_chain_equals_scan():
+    rng = np.random.default_rng(0)
+    b, t, h, n = 1, 12, 2, 8
+    q, k, v = (jnp.asarray(rng.normal(size=(b, t, h, n)), jnp.float32)
+               for _ in range(3))
+    log_w = jnp.asarray(-np.exp(rng.uniform(-3, 0, size=(b, t, h, n))),
+                        jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, n)), jnp.float32)
+    y_ref, _ = wkv_scan_ref(q, k, v, log_w, u)
+    s = jnp.zeros((b, h, n, n))
+    ys = []
+    for i in range(t):
+        y, s = wkv_decode_step(q[:, i], k[:, i], v[:, i], log_w[:, i], u, s)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_wkv_state_handoff_mid_sequence():
+    """chunked(T) == chunked(T/2) -> carry state -> chunked(T/2)."""
+    rng = np.random.default_rng(3)
+    b, t, h, n = 2, 64, 2, 8
+    q, k, v = (jnp.asarray(rng.normal(size=(b, t, h, n)), jnp.float32)
+               for _ in range(3))
+    log_w = jnp.asarray(-np.exp(rng.uniform(-3, 0.5, size=(b, t, h, n))),
+                        jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, n)), jnp.float32)
+    y_full, s_full = wkv_chunked(q, k, v, log_w, u, chunk=16)
+    half = t // 2
+    y1, s1 = wkv_chunked(q[:, :half], k[:, :half], v[:, :half],
+                         log_w[:, :half], u, chunk=16)
+    y2, s2 = wkv_chunked(q[:, half:], k[:, half:], v[:, half:],
+                         log_w[:, half:], u, chunk=16, state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU
+# --------------------------------------------------------------------------
+def _lru_params(d, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w_a": jnp.asarray(rng.normal(size=(d, d)) * 0.2, jnp.float32),
+        "w_x": jnp.asarray(rng.normal(size=(d, d)) * 0.2, jnp.float32),
+        "lam": jnp.asarray(rng.uniform(0.5, 2.0, size=(d,)), jnp.float32),
+    }
+
+
+def test_rg_lru_scan_equals_steps():
+    d, b, t = 6, 2, 20
+    params = _lru_params(d)
+    rng = np.random.default_rng(1)
+    u = jnp.asarray(rng.normal(size=(b, t, d)), jnp.float32)
+    h_scan, last = rg_lru(params, u)
+    h = jnp.zeros((b, d))
+    outs = []
+    for i in range(t):
+        y, h = rg_lru_step(params, u[:, i], h)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(h_scan), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(last),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rg_lru_state_carry():
+    d, b, t = 4, 1, 16
+    params = _lru_params(d, 2)
+    rng = np.random.default_rng(2)
+    u = jnp.asarray(rng.normal(size=(b, t, d)), jnp.float32)
+    h_full, last_full = rg_lru(params, u)
+    h1, s1 = rg_lru(params, u[:, :8])
+    h2, s2 = rg_lru(params, u[:, 8:], h_prev=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(h_full), rtol=1e-5, atol=1e-5)
+
+
+def test_causal_conv1d_matches_direct():
+    rng = np.random.default_rng(0)
+    b, t, d, kw = 2, 10, 3, 4
+    w = jnp.asarray(rng.normal(size=(kw, d)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(b, t, d)), jnp.float32)
+    out, state = causal_conv1d(w, x)
+    # direct: y[t] = sum_k w[k] x[t - (K-1) + k]
+    xp = np.concatenate([np.zeros((b, kw - 1, d), np.float32),
+                         np.asarray(x)], axis=1)
+    want = sum(np.asarray(w)[k][None, None] * xp[:, k:k + t]
+               for k in range(kw))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(state), xp[:, -(kw - 1):])
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def _naive_attention(q, k, v, causal, window, q_offset=0):
+    b, tq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qr = q.reshape(b, tq, kvh, g, dh)
+    s = np.einsum("bqkgd,btkd->bkgqt", np.asarray(qr, np.float32),
+                  np.asarray(k, np.float32)) / np.sqrt(dh)
+    pos_q = np.arange(tq) + q_offset
+    pos_k = np.arange(k.shape[1])
+    mask = np.ones((tq, k.shape[1]), bool)
+    if causal:
+        mask &= pos_q[:, None] >= pos_k[None]
+    if window:
+        mask &= (pos_q[:, None] - pos_k[None]) < window
+    s = np.where(mask[None, None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    out = np.einsum("bkgqt,btkd->bqkgd", p, np.asarray(v, np.float32))
+    return out.reshape(b, tq, h, dh)
+
+
+@pytest.mark.parametrize("tq,chunk_q,causal,window", [
+    (16, 512, True, None),     # single chunk
+    (64, 16, True, None),      # chunked causal
+    (48, 16, True, None),      # ragged chunking (pad path)
+    (64, 16, False, None),     # encoder
+    (64, 16, True, 8),         # local window
+])
+def test_mha_matches_naive(tq, chunk_q, causal, window):
+    rng = np.random.default_rng(tq + chunk_q)
+    b, h, kvh, dh = 2, 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, tq, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, tq, kvh, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, tq, kvh, dh)), jnp.float32)
+    out = mha(q, k, v, causal=causal, window=window, chunk_q=chunk_q)
+    want = _naive_attention(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# LUT activation integration
+# --------------------------------------------------------------------------
+def test_lut_activation_build_and_apply():
+    from repro.nn.lut_act import build_lut_activation
+    from repro.nn.mlp import lut_act_jnp
+
+    calib = np.random.default_rng(0).normal(size=20000) * 2
+    lut = build_lut_activation("silu", calib, w_in=9, w_out=9,
+                               x_lo=-6.0, x_hi=6.0)
+    assert 0.0 < lut.dontcare_frac < 1.0
+    tables = lut.tables_for_model()
+    x = jnp.asarray(np.clip(np.random.default_rng(1).normal(size=512) * 2,
+                            -5.9, 5.9), jnp.float32)
+    y = lut_act_jnp(x, tables["arrays"], **tables["meta"])
+    ref = jax.nn.silu(x)
+    step = 12.0 / 511 + 12.0 / 511
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=2 * step + 1e-3)
