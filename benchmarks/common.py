@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.core import (
     CompressConfig,
-    compress_network,
+    compress_network_report,
     rom_baseline_cost,
 )
 from repro.data import make_jsc, make_mnist_like
@@ -57,6 +57,11 @@ _CACHE: dict = {}
 
 def bench_scale() -> str:
     return os.environ.get("REPRO_BENCH_SCALE", "small")
+
+
+def bench_workers() -> int:
+    """Engine worker processes for benchmark compression runs."""
+    return max(1, int(os.environ.get("REPRO_BENCH_WORKERS", "2")))
 
 
 @dataclasses.dataclass
@@ -122,14 +127,17 @@ def compress_and_eval(net: TrainedNet, method: str, exiguity: int | None,
     specs = network_table_specs(net.tables, observed, cfg)
     ccfg = CompressConfig(exiguity=ex, m_candidates=M_CANDIDATES,
                           lb_candidates=LB_CANDIDATES)
-    plans = compress_network(specs, ccfg)
-    cost = sum(p.plut_cost() for p in plans)
-    tabs = specs_to_tables([p.reconstruct() for p in plans], cfg)
+    report = compress_network_report(specs, ccfg, workers=bench_workers())
+    tabs = specs_to_tables([p.reconstruct() for p in report.plans], cfg)
     return {
-        "pluts": cost,
+        "pluts": report.total_cost,
         "test_acc": table_accuracy(tabs, conn, cfg, xte, yte),
         "train_acc": table_accuracy(tabs, conn, cfg, xtr, ytr),
         "seconds": time.time() - t0,
+        "compress_seconds": report.seconds,
+        "workers": report.workers,
+        "n_decomposed": report.n_decomposed,
+        "eliminated": report.total_eliminated,
     }
 
 

@@ -19,7 +19,7 @@ def main() -> None:
 
     print("## Table 2: P-LUT utilization / accuracy (paper SS5.2)")
     t0 = time.time()
-    t2 = table2.run()
+    t2, timing = table2.run()
     for r in t2:
         name = f"table2_{r['model']}_{r['method']}" + (
             f"_ex{r['exiguity']}" if r["exiguity"] else "")
@@ -30,6 +30,13 @@ def main() -> None:
         if "vs_compressedlut" in r:
             derived += f";vs_compressedlut={r['vs_compressedlut']}"
         rows.append((name, r["seconds"] * 1e6, derived))
+    for t in timing:
+        rows.append((
+            f"table2_engine_{t['model']}_w{t['workers']}",
+            t["engine_s"] * 1e6,
+            f"serial_s={t['serial_s']};speedup={t['speedup']};"
+            f"identical={t['identical']}",
+        ))
     print(f"  [table2 {time.time() - t0:.0f}s]")
 
     print("## Fig 3: exiguity sweep")

@@ -10,7 +10,7 @@ import numpy as np
 
 from repro.core import (
     CompressConfig,
-    compress_network,
+    compress_network_report,
     network_to_verilog,
     rom_baseline_cost,
 )
@@ -39,7 +39,7 @@ def main() -> None:
     dc = [f"{1 - o.mean():.2f}" for o in observed]
     print(f"   don't-care fraction per layer: {dc}")
 
-    print("3. compressing network (37 L-LUTs)")
+    print("3. compressing network (37 L-LUTs, engine workers=2)")
     specs_ac = network_table_specs(tables, None, cfg)
     specs_dc = network_table_specs(tables, observed, cfg)
     baseline = sum(rom_baseline_cost(s) for s in specs_ac)
@@ -47,10 +47,12 @@ def main() -> None:
                         lb_candidates=(0, 1, 2))
     rc = CompressConfig(exiguity=250, m_candidates=(8, 16, 32, 64),
                         lb_candidates=(0, 1, 2))
-    plans_c = compress_network(specs_ac, mc)
-    plans_r = compress_network(specs_dc, rc)
-    cost_c = sum(p.plut_cost() for p in plans_c)
-    cost_r = sum(p.plut_cost() for p in plans_r)
+    rep_c = compress_network_report(specs_ac, mc, workers=2)
+    rep_r = compress_network_report(specs_dc, rc, workers=2)
+    plans_r = rep_r.plans
+    cost_c, cost_r = rep_c.total_cost, rep_r.total_cost
+    print(f"   CompressedLUT: {rep_c.summary()}")
+    print(f"   ReducedLUT:    {rep_r.summary()}")
     print(f"   baseline {baseline} | CompressedLUT {cost_c} "
           f"({1 - cost_c / baseline:.0%} saved) | ReducedLUT {cost_r} "
           f"({1 - cost_r / baseline:.0%} saved, "

@@ -12,10 +12,17 @@ from .cost_model import (
     rom_plut_cost,
     shifter_plut_cost,
 )
+from .engine import (
+    CompressReport,
+    TableReport,
+    compress_network_report,
+)
 from .pipeline import (
     CompressConfig,
     compress_network,
+    compress_network_serial,
     compress_table,
+    compress_table_serial,
     rom_baseline_cost,
     verify_care_exact,
 )
@@ -28,8 +35,13 @@ from .verilog import network_to_verilog, plan_to_verilog
 __all__ = [
     "TableSpec",
     "CompressConfig",
+    "CompressReport",
+    "TableReport",
     "compress_table",
+    "compress_table_serial",
     "compress_network",
+    "compress_network_serial",
+    "compress_network_report",
     "rom_baseline_cost",
     "verify_care_exact",
     "Plan",

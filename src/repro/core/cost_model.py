@@ -24,6 +24,8 @@ from __future__ import annotations
 
 import math
 
+import numpy as np
+
 
 def rom_plut_cost(q: int, w: int) -> int:
     """P-LUTs to implement a ``2^q``-entry, ``w``-bit-wide ROM."""
@@ -62,3 +64,78 @@ def shifter_plut_cost(data_bits: int, shift_bits: int) -> int:
 def concat_plut_cost() -> int:
     """Bit concatenation is wiring on an FPGA: free."""
     return 0
+
+
+# ---------------------------------------------------------------------------
+# Batched candidate scoring (engine fast path)
+# ---------------------------------------------------------------------------
+# The compression search scores every (w_lb, M) candidate of every table;
+# the vectorized forms below evaluate all candidates of a table in one
+# numpy pass from summary statistics, so the engine only materializes the
+# winning plan.  Each function is the exact elementwise extension of its
+# scalar counterpart above (enforced by tests/test_engine.py).
+
+def rom_plut_cost_batch(q: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`rom_plut_cost` over int arrays ``q``/``w``."""
+    q = np.asarray(q, dtype=np.int64)
+    w = np.asarray(w, dtype=np.int64)
+    q, w = np.broadcast_arrays(q, w)
+    leaves = np.where(q > 6, 1 << np.maximum(q - 6, 0), 1).astype(np.int64)
+    total = leaves.copy()
+    fanin = -(-leaves // 4)  # ceil div: free F7/F8 level per slice
+    while (fanin > 1).any():
+        muxes = -(-fanin // 4)
+        total = np.where(fanin > 1, total + muxes, total)
+        fanin = np.where(fanin > 1, muxes, fanin)
+    deep = w * total
+    out = np.where(q <= 6, w, deep)
+    return np.where((w <= 0) | (q < 0), 0, out)
+
+
+def adder_plut_cost_batch(w: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`adder_plut_cost`."""
+    return np.maximum(0, np.asarray(w, dtype=np.int64))
+
+
+def shifter_plut_cost_batch(
+    data_bits: np.ndarray, shift_bits: np.ndarray
+) -> np.ndarray:
+    """Vectorized :func:`shifter_plut_cost`."""
+    data_bits = np.asarray(data_bits, dtype=np.int64)
+    shift_bits = np.asarray(shift_bits, dtype=np.int64)
+    cost = data_bits * -(-shift_bits // 2)
+    return np.where((shift_bits <= 0) | (data_bits <= 0), 0, cost)
+
+
+def decomposed_plut_cost_batch(
+    *,
+    w_in: int,
+    w_out: int,
+    l: np.ndarray,
+    w_lb: np.ndarray,
+    w_st: np.ndarray,
+    idx_bits: np.ndarray,
+    rsh_bits: np.ndarray,
+    bias_bits: np.ndarray,
+) -> np.ndarray:
+    """Total P-LUT cost of decomposed-plan candidates from summary stats.
+
+    Mirrors ``DecomposedPlan.component_costs()`` without building plans:
+    t_ust + t_idx + t_rsh + t_bias + t_lb ROMs, the barrel shifter, and
+    the bias adder (charged only when any bias bit is nonzero).
+    """
+    l = np.asarray(l, dtype=np.int64)
+    w_lb = np.asarray(w_lb, dtype=np.int64)
+    q_hb = w_in - l
+    w_hb = w_out - w_lb
+    return (
+        rom_plut_cost_batch(idx_bits + l, w_st)
+        + rom_plut_cost_batch(q_hb, idx_bits)
+        + rom_plut_cost_batch(q_hb, rsh_bits)
+        + rom_plut_cost_batch(q_hb, bias_bits)
+        + rom_plut_cost_batch(np.full_like(l, w_in), w_lb)
+        + shifter_plut_cost_batch(w_st, rsh_bits)
+        + np.where(
+            np.asarray(bias_bits) > 0, adder_plut_cost_batch(w_hb), 0
+        )
+    )

@@ -6,6 +6,15 @@ merge sweep for each configuration, scores every candidate with the
 analytical P-LUT model, and returns the cheapest plan — falling back to
 plain tabulation when decomposition does not pay, exactly as CompressedLUT
 does.
+
+Two implementations share this search space:
+
+* the ``*_serial`` functions below — the straightforward reference
+  transcription of the paper's loop nest, kept for equivalence testing and
+  benchmarking;
+* :mod:`repro.core.engine` — the batched/parallel production path that the
+  public ``compress_table``/``compress_network`` delegate to.  It is
+  bit-identical to the serial reference (see ``tests/test_engine.py``).
 """
 from __future__ import annotations
 
@@ -15,7 +24,7 @@ import numpy as np
 
 from .plan import DecomposedPlan, Plan, PlainPlan
 from .reduced import reduce_uniques
-from .similarity import make_decomposition
+from .similarity import Decomposition, make_decomposition
 from .table import TableSpec
 
 
@@ -44,6 +53,31 @@ class CompressConfig:
         return tuple(range(0, w_out))
 
 
+def pack_decomposition(
+    d: Decomposition,
+    *,
+    w_in: int,
+    w_hb: int,
+    w_lb: int,
+    lb_values: np.ndarray | None,
+    name: str,
+) -> DecomposedPlan:
+    """Pack a (possibly merge-reduced) decomposition into a plan: unique
+    sub-tables concatenated in selection order, index/shift/bias maps, and
+    the plain low-bit table when a split is in play."""
+    uniques = d.uniques
+    pos = {u: k for k, u in enumerate(uniques)}
+    t_ust = d.res[uniques].reshape(-1)
+    t_idx = np.array([pos[int(d.gen[j])] for j in range(d.n_sub)], dtype=np.int64)
+    w_st = int(t_ust.max(initial=0)).bit_length()
+    return DecomposedPlan(
+        w_in=w_in, w_out=w_hb + w_lb, w_lb=w_lb,
+        l=int(np.log2(d.m)), w_st=w_st,
+        t_ust=t_ust, t_idx=t_idx, t_rsh=d.rsh.copy(), t_bias=d.bias.copy(),
+        t_lb=lb_values, name=name,
+    )
+
+
 def _decompose_hb(
     hb_values: np.ndarray,
     care: np.ndarray,
@@ -60,22 +94,15 @@ def _decompose_hb(
         for _ in range(max(1, cfg.merge_sweeps)):
             if reduce_uniques(d, cfg.exiguity) == 0:
                 break
-    # Pack final unique sub-tables and index maps.
-    uniques = d.uniques
-    pos = {u: k for k, u in enumerate(uniques)}
-    t_ust = d.res[uniques].reshape(-1)
-    t_idx = np.array([pos[int(d.gen[j])] for j in range(d.n_sub)], dtype=np.int64)
-    w_st = int(t_ust.max(initial=0)).bit_length()
-    return DecomposedPlan(
-        w_in=w_in, w_out=w_hb + w_lb, w_lb=w_lb,
-        l=int(np.log2(m)), w_st=w_st,
-        t_ust=t_ust, t_idx=t_idx, t_rsh=d.rsh.copy(), t_bias=d.bias.copy(),
-        t_lb=lb_values, name=name,
+    return pack_decomposition(
+        d, w_in=w_in, w_hb=w_hb, w_lb=w_lb, lb_values=lb_values, name=name
     )
 
 
-def compress_table(spec: TableSpec, cfg: CompressConfig | None = None) -> Plan:
-    """Compress one L-LUT; returns the cheapest plan under the cost model.
+def compress_table_serial(
+    spec: TableSpec, cfg: CompressConfig | None = None
+) -> Plan:
+    """Reference serial search (paper loop nest, one candidate at a time).
 
     Care entries are always reconstructed bit-exactly (Eq. 3 constraint);
     don't-care entries may change — callers measure accuracy effects.
@@ -103,14 +130,14 @@ def compress_table(spec: TableSpec, cfg: CompressConfig | None = None) -> Plan:
     return best
 
 
-def compress_network(
+def compress_network_serial(
     specs: list[TableSpec], cfg: CompressConfig | None = None,
     verbose: bool = False,
 ) -> list[Plan]:
-    """Compress every L-LUT of a network independently (paper flow)."""
+    """Reference serial network flow: one table after another."""
     plans = []
     for i, spec in enumerate(specs):
-        plan = compress_table(spec, cfg)
+        plan = compress_table_serial(spec, cfg)
         plans.append(plan)
         if verbose:
             base = rom_baseline_cost(spec)
@@ -119,6 +146,32 @@ def compress_network(
                 f"cost={plan.plut_cost()} (plain={base})"
             )
     return plans
+
+
+def compress_table(spec: TableSpec, cfg: CompressConfig | None = None) -> Plan:
+    """Compress one L-LUT; returns the cheapest plan under the cost model.
+
+    Delegates to the batched engine (bit-identical to
+    :func:`compress_table_serial`, measurably faster).
+    """
+    from .engine import compress_table as _engine_compress_table
+
+    return _engine_compress_table(spec, cfg)
+
+
+def compress_network(
+    specs: list[TableSpec], cfg: CompressConfig | None = None,
+    verbose: bool = False, workers: int | None = None,
+) -> list[Plan]:
+    """Compress every L-LUT of a network independently (paper flow).
+
+    ``workers > 1`` fans tables out over a process pool; see
+    :func:`repro.core.engine.compress_network_report` for the structured
+    per-table report variant.
+    """
+    from .engine import compress_network as _engine_compress_network
+
+    return _engine_compress_network(specs, cfg, workers=workers, verbose=verbose)
 
 
 def rom_baseline_cost(spec: TableSpec) -> int:

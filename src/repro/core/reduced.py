@@ -93,6 +93,12 @@ def reduce_uniques(d: Decomposition, exiguity: int) -> int:
     # Candidates with the fewest dependencies first (paper SS4.2).
     order = sorted(d.uniques, key=lambda u: len(deps[u]))
     unique_set = set(d.uniques)
+    # Dep-count ranking of the surviving uniques.  ``unique_set`` and
+    # ``deps`` only mutate on commit, so the sort is cached between
+    # successful merges; dropping ``u`` from a stably-sorted list equals
+    # sorting without it, so per-candidate views stay bit-identical to
+    # re-sorting from scratch.
+    ranked: list[int] | None = None
 
     for u in order:
         if u not in unique_set:
@@ -106,12 +112,14 @@ def reduce_uniques(d: Decomposition, exiguity: int) -> int:
             continue
 
         # Targets: most-depended-on unique first.
-        targets = sorted(
-            (v for v in unique_set if v != u),
-            key=lambda v: -len(deps[v]),
-        )
+        if ranked is None:
+            ranked = sorted(unique_set, key=lambda v: -len(deps[v]))
+        targets = [v for v in ranked if v != u]
         if not targets:
             break
+        # Invariant across this whole iteration (including the re-homing
+        # loop below): set_row only ever touches ``u`` and non-unique
+        # dependents, never another unique's row.
         t_rows = d.res[targets]
 
         hit = _find_shift_match(d.res[u], eff_care(u), t_rows, d.w_st)
@@ -128,17 +136,15 @@ def reduce_uniques(d: Decomposition, exiguity: int) -> int:
 
         ok = True
         rehomed: list[int] = []
-        remaining = [w for w in unique_set if w != u]
         for j in sorted(u_deps):
-            rem_sorted = sorted(remaining, key=lambda w: -len(deps[w]))
             hit_j = _find_shift_match(
-                d.res[j], eff_care(j), d.res[rem_sorted], d.w_st
+                d.res[j], eff_care(j), t_rows, d.w_st
             )
             if hit_j is None:
                 ok = False
                 break
             rj, tj = hit_j
-            w = rem_sorted[rj]
+            w = targets[rj]
             txn.set_row(j, d.res[w] >> tj)
             txn.reassign(j, w, tj)
             txn.freeze(j)
@@ -158,5 +164,6 @@ def reduce_uniques(d: Decomposition, exiguity: int) -> int:
             deps[w].add(j)
         deps.pop(u, None)
         eliminated += 1
+        ranked = None  # unique_set / dep counts changed
 
     return eliminated

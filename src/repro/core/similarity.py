@@ -68,19 +68,43 @@ def split_residualize(
     care entries only (beyond-paper option; default matches CompressedLUT,
     which uses the plain per-sub-table minimum).
     """
-    n = values.shape[0]
+    res, bias, care2d = split_residualize_batch(
+        values[None, :], care, m, bias_care_only
+    )
+    return res[0], bias[0], care2d
+
+
+def split_residualize_batch(
+    hb_values: np.ndarray,
+    care: np.ndarray,
+    m: int,
+    bias_care_only: bool = False,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Batched :func:`split_residualize` over a stack of high-bit tables.
+
+    ``hb_values`` is ``(n_cand, 2**w_in)`` — one row per ``w_lb`` candidate
+    (the table's values right-shifted by each candidate split).  The care
+    mask is shared by every candidate, so its ``(n_sub, M)`` reshape and
+    the residual/bias extraction happen once here instead of once per
+    ``(w_lb, M)`` pair in the search's inner loop.
+
+    Returns ``(res, bias, care2d)`` where ``res`` is ``(n_cand, n_sub, M)``
+    and ``bias`` is ``(n_cand, n_sub)``; slice ``i`` is bit-identical to
+    ``split_residualize(hb_values[i], care, m, bias_care_only)``.
+    """
+    n = hb_values.shape[1]
     if n % m != 0:
         raise ValueError(f"table size {n} not divisible by sub-table size {m}")
-    sub = values.reshape(-1, m).astype(np.int64)
+    sub = hb_values.reshape(hb_values.shape[0], -1, m).astype(np.int64)
     care2d = care.reshape(-1, m)
     if bias_care_only:
-        masked = np.where(care2d, sub, np.iinfo(np.int64).max)
-        bias = masked.min(axis=1)
+        masked = np.where(care2d[None], sub, np.iinfo(np.int64).max)
+        bias = masked.min(axis=2)
         # all-don't-care sub-table: bias 0
-        bias = np.where(care2d.any(axis=1), bias, 0)
+        bias = np.where(care2d.any(axis=1)[None], bias, 0)
     else:
-        bias = sub.min(axis=1)
-    res = sub - bias[:, None]
+        bias = sub.min(axis=2)
+    res = sub - bias[:, :, None]
     if bias_care_only:
         # don't-care residuals may go negative; they are free anyway — clamp.
         res = np.maximum(res, 0)

@@ -18,7 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from .layers import activation_fn
 from .sharding import DP_AXES, TP_AXIS, current_mesh

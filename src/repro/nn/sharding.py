@@ -48,6 +48,49 @@ def use_mesh(mesh: Mesh | None):
         _STATE.mesh = prev
 
 
+def current_manual_axes() -> frozenset:
+    return getattr(_STATE, "manual", frozenset())
+
+
+@contextlib.contextmanager
+def manual_axes(axes):
+    """Mark mesh axes as shard_map-manual for the enclosed trace.
+
+    Inside a shard_map that is manual over some axes, a sharding
+    constraint naming those axes is invalid (XLA check-fails on older
+    releases); ``shard()`` drops manual axes from every constraint it
+    emits while this context is active.
+    """
+    prev = current_manual_axes()
+    _STATE.manual = prev | frozenset(axes)
+    try:
+        yield
+    finally:
+        _STATE.manual = prev
+
+
+def layer_scan(body, carry, xs):
+    """``jax.lax.scan`` that unrolls inside shard_map-manual regions.
+
+    XLA's SPMD partitioner (through at least jax 0.4.x) check-fails on
+    control-flow ops nested in a partially-manual computation — e.g. the
+    grad-compress path, manual over dp with tp left GSPMD-auto.  A python
+    unroll emits straight-line HLO that partitions fine; outside a manual
+    region this is exactly ``jax.lax.scan``.
+    """
+    if not current_manual_axes():
+        return jax.lax.scan(body, carry, xs)
+    import jax.numpy as jnp
+
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    stacked = jax.tree.map(lambda *vs: jnp.stack(vs), *ys)
+    return carry, stacked
+
+
 def resolve_axis(logical: str | None, mesh: Mesh | None):
     """Map a logical axis name to mesh axes (None if not shardable)."""
     if logical is None or mesh is None:
@@ -93,9 +136,14 @@ def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
     mesh = current_mesh()
     if mesh is None:
         return x
+    manual = current_manual_axes()
     resolved = []
     for dim, a in zip(x.shape, logical_axes):
         r = resolve_axis(a, mesh)
+        if isinstance(r, tuple):
+            r = tuple(ax for ax in r if ax not in manual) or None
+        elif r in manual:
+            r = None
         resolved.append(r if _divisible(dim, mesh, r) else None)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*resolved))

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from .layers import rms_norm
-from .sharding import shard
+from .sharding import layer_scan, shard
 
 CLAMP = 30.0  # exp(-x) below e^-30 treated as 0 (documented approximation)
 
@@ -47,7 +47,7 @@ def wkv_scan_ref(q, k, v, log_w, u):
     s0 = jnp.zeros((b, h, n, n), jnp.float32)
     xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32)
                for a in (q, k, v, log_w))
-    s, ys = jax.lax.scan(step, s0, xs)
+    s, ys = layer_scan(step, s0, xs)
     return ys.transpose(1, 0, 2, 3), s
 
 
@@ -102,7 +102,7 @@ def wkv_chunked(q, k, v, log_w, u, chunk: int = 16, state=None):
         )
         return s, y
 
-    s, ys = jax.lax.scan(body, state, (qs, ks, vs, lws))
+    s, ys = layer_scan(body, state, (qs, ks, vs, lws))
     y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, n)
     return y[:, :t_orig], s
 

@@ -37,7 +37,7 @@ from .mlp import make_activation, mlp_block
 from .moe import moe_block
 from .rglru import recurrent_block, recurrent_block_step
 from .rope import apply_rope
-from .sharding import current_mesh, named_sharding, shard
+from .sharding import current_mesh, layer_scan, named_sharding, shard
 from .ssm import rwkv_channel_mix, rwkv_time_mix
 
 
@@ -367,7 +367,7 @@ def decoder_forward(params, cfg: ArchConfig, tokens, patches=None,
 
     if remat:
         body = jax.checkpoint(body)
-    x, (auxes, kvs) = jax.lax.scan(body, x, params["blocks"])
+    x, (auxes, kvs) = layer_scan(body, x, params["blocks"])
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return x, jnp.sum(auxes), kvs
 
@@ -426,7 +426,7 @@ def rwkv_forward(params, cfg, tokens, states=None, remat=False,
     if remat:
         body = jax.checkpoint(body)
     xs = (params["blocks"], states) if decode else params["blocks"]
-    x, out_states = jax.lax.scan(body, x, xs)
+    x, out_states = layer_scan(body, x, xs)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return x, (out_states if (decode or collect_states) else None)
 
@@ -506,7 +506,7 @@ def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
         group_body = jax.checkpoint(group_body)
     xs = ((params["groups"], states["groups"]) if decode
           else params["groups"])
-    x, g_states = jax.lax.scan(group_body, x, xs)
+    x, g_states = layer_scan(group_body, x, xs)
 
     tail_states = {}
     if "tail" in params:
@@ -565,7 +565,7 @@ def encoder_forward(params, cfg, frames, remat=False):
 
     if remat:
         body = jax.checkpoint(body)
-    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    x, _ = layer_scan(body, x, params["enc_blocks"])
     return rms_norm(x, params["enc_norm"], cfg.norm_eps)
 
 
@@ -595,7 +595,7 @@ def encdec_forward(params, cfg, tokens, enc_out, collect_kv=False,
 
     if remat:
         body = jax.checkpoint(body)
-    x, (_, kvs) = jax.lax.scan(body, x, params["dec_blocks"])
+    x, (_, kvs) = layer_scan(body, x, params["dec_blocks"])
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return x, kvs
 

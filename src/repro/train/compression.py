@@ -14,8 +14,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:

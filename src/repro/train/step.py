@@ -15,12 +15,20 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.configs.base import ArchConfig
 from repro.data.tokens import lm_batch_specs
-from repro.nn.sharding import DP_AXES, TP_AXIS, use_mesh, named_sharding
+from repro.nn.sharding import (
+    DP_AXES,
+    TP_AXIS,
+    layer_scan,
+    manual_axes,
+    named_sharding,
+    use_mesh,
+)
 from repro.nn.transformer import loss_fn
 from repro.optim import adamw_update
 
@@ -77,7 +85,7 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, mesh,
 
             zeros = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            acc, losses = jax.lax.scan(acc_step, zeros, micro)
+            acc, losses = layer_scan(acc_step, zeros, micro)
             g = jax.tree.map(lambda a: a / tcfg.microbatch, acc)
             return jnp.mean(losses), g
         return jax.value_and_grad(loss_of)(params, batch)
@@ -93,7 +101,8 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, mesh,
                     n_dp *= mesh.shape[a]
 
                 def per_shard(params, batch, error):
-                    loss, g = grads_of(params, batch)
+                    with manual_axes(dp_axes):
+                        loss, g = grads_of(params, batch)
                     q8, scales, new_e = ef_compress_grads(g, error)
                     summed = jax.tree.map(
                         lambda q: jax.lax.psum(q.astype(jnp.int32), dp_axes),

@@ -1,0 +1,136 @@
+"""Golden tests: every Pallas kernel (interpret mode) vs its ref.py oracle.
+
+Unlike the shape sweeps in ``test_kernels.py``, the plans here are built
+*directly* from decompositions (never falling back to plain), so the
+decomposed path is always exercised, and the table geometries are chosen
+to be non-lane-aligned (32/64/512-entry tables vs the 128-lane layout) so
+``ops._pad_to`` padding is on the line for every operand.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TableSpec
+from repro.core.pipeline import pack_decomposition
+from repro.core.plan import PlainPlan
+from repro.core.similarity import make_decomposition
+from repro.kernels import PlanArrays, lut_act, lut_reconstruct, lutnn_layer
+from repro.kernels.ops import LANES, _pad_to
+from repro.kernels.ref import (
+    lut_act_ref,
+    lut_reconstruct_ref,
+    lutnn_layer_ref,
+    plain_lookup_ref,
+)
+
+
+def _decomposed_plan(w_in, w_out, w_lb, m, seed=0, frac=0.3):
+    """A guaranteed-decomposed plan (no cost-based plain fallback)."""
+    spec = TableSpec.random(w_in, w_out, frac, seed, smooth=True)
+    hb = spec.values >> w_lb
+    lb = (spec.values & ((1 << w_lb) - 1)) if w_lb else None
+    d = make_decomposition(hb, spec.care_mask(), m)
+    plan = pack_decomposition(
+        d, w_in=w_in, w_hb=w_out - w_lb, w_lb=w_lb, lb_values=lb, name="g"
+    )
+    return spec, plan
+
+
+def test_pad_to_rounds_up_to_multiple():
+    for n in (1, 5, 127, 128, 129, 300):
+        out = _pad_to(np.arange(n, dtype=np.int32), LANES)
+        assert out.shape[0] % LANES == 0
+        assert out.shape[0] - n < LANES
+        np.testing.assert_array_equal(out[:n], np.arange(n))
+        assert (out[n:] == 0).all()
+
+
+@pytest.mark.parametrize("w_in,w_out,w_lb,m", [
+    (5, 4, 0, 4),    # 32-entry table, everything shorter than one lane
+    (5, 6, 2, 8),    # low-bit split, 32-entry t_lb
+    (6, 5, 1, 8),    # 64-entry table
+    (9, 8, 3, 16),   # 512-entry table, 64-entry index maps
+])
+def test_lut_reconstruct_golden_decomposed(w_in, w_out, w_lb, m):
+    spec, plan = _decomposed_plan(w_in, w_out, w_lb, m, seed=w_in + m)
+    assert plan.kind == "decomposed"
+    pa = PlanArrays.from_plan(plan)
+    # non-lane-aligned component tables force _pad_to on every operand
+    assert plan.t_idx.shape[0] < LANES or plan.t_idx.shape[0] % LANES != 0 \
+        or plan.t_ust.shape[0] % LANES != 0 or w_in == 9
+    x = np.arange(spec.size)  # exhaustive addresses
+    got = lut_reconstruct(jnp.asarray(x), pa)
+    want = lut_reconstruct_ref(
+        jnp.asarray(x, jnp.int32), pa.arrays["t_ust"], pa.arrays["t_idx"],
+        pa.arrays["t_rsh"], pa.arrays["t_bias"], pa.arrays["t_lb"],
+        l=pa.l, w_lb=pa.w_lb, w_hb=pa.w_hb,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got), plan.reconstruct())
+
+
+@pytest.mark.parametrize("w_in,w_out", [(5, 3), (7, 6)])
+def test_lut_reconstruct_golden_plain(w_in, w_out):
+    spec = TableSpec.random(w_in, w_out, 0.0, 2, smooth=False)
+    plan = PlainPlan(spec.values, w_in, w_out)
+    pa = PlanArrays.from_plan(plan)
+    x = np.arange(spec.size)
+    got = lut_reconstruct(jnp.asarray(x), pa)
+    want = plain_lookup_ref(jnp.asarray(x, jnp.int32),
+                            jnp.asarray(spec.values, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lut_reconstruct_golden_odd_query_shapes():
+    """Ragged query tensors exercise the row padding of x itself."""
+    spec, plan = _decomposed_plan(6, 6, 1, 8, seed=11)
+    pa = PlanArrays.from_plan(plan)
+    rng = np.random.default_rng(0)
+    for shape in [(1,), (3, 5), (129,), (2, 3, 7)]:
+        x = rng.integers(0, spec.size, size=shape)
+        got = lut_reconstruct(jnp.asarray(x), pa)
+        want = lut_reconstruct_ref(
+            jnp.asarray(x, jnp.int32), pa.arrays["t_ust"], pa.arrays["t_idx"],
+            pa.arrays["t_rsh"], pa.arrays["t_bias"], pa.arrays["t_lb"],
+            l=pa.l, w_lb=pa.w_lb, w_hb=pa.w_hb,
+        )
+        assert got.shape == shape
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,p,n,f,bits", [
+    (37, 11, 3, 2, 3),    # every dimension ragged vs (128, 8) blocks
+    (130, 7, 9, 4, 2),    # batch just over one block
+])
+def test_lutnn_layer_golden(b, p, n, f, bits):
+    rng = np.random.default_rng(b * n)
+    codes = rng.integers(0, 1 << bits, size=(b, p)).astype(np.int32)
+    conn = rng.integers(0, p, size=(n, f)).astype(np.int32)
+    tables = rng.integers(0, 1 << bits, size=(n, 1 << (bits * f))).astype(np.int32)
+    got = lutnn_layer(jnp.asarray(codes), jnp.asarray(conn),
+                      jnp.asarray(tables), bits=bits)
+    want = lutnn_layer_ref(jnp.asarray(codes), jnp.asarray(conn),
+                           jnp.asarray(tables), bits=bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("w_in,w_out,w_lb,m,shape", [
+    (6, 6, 0, 8, (7, 13)),
+    (5, 7, 2, 4, (33,)),
+])
+def test_lut_act_golden(w_in, w_out, w_lb, m, shape):
+    _, plan = _decomposed_plan(w_in, w_out, w_lb, m, seed=5)
+    pa = PlanArrays.from_plan(plan)
+    x = jnp.asarray(
+        np.random.default_rng(1).normal(size=shape) * 2, jnp.float32)
+    kw = dict(x_lo=-3.0, x_hi=3.0, y_lo=-1.0, y_hi=2.0)
+    got = lut_act(x, pa, **kw)
+    want = lut_act_ref(
+        x, pa.arrays["t_ust"], pa.arrays["t_idx"], pa.arrays["t_rsh"],
+        pa.arrays["t_bias"], pa.arrays["t_lb"],
+        l=pa.l, w_lb=pa.w_lb, w_hb=pa.w_hb, w_in=pa.w_in, w_out=pa.w_out,
+        **kw,
+    )
+    assert got.shape == shape
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
