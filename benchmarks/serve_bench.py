@@ -1,0 +1,205 @@
+"""Serving benchmark: plain vs LUT-compressed activations on the decode path.
+
+Measures, per architecture family (dense / moe / ssm by default):
+  - prefill latency (compile and steady-state),
+  - decode tokens/sec for plain activations, the gather-backend LUT path
+    and the fused-Pallas LUT path,
+  - the engine plan stats behind the served tables (P-LUT cost, saved
+    fraction, dedupe hit-rate),
+and runs the backend equivalence harness (gather vs pallas decode must
+bit-match token-for-token) before timing anything.
+
+Writes the trajectory file ``BENCH_serve.json`` (schema: serve_bench/v1).
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke
+  PYTHONPATH=src python benchmarks/serve_bench.py \
+      --archs qwen3-0.6b,deepseek-moe-16b,rwkv6-3b --new-tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config, smoke_config
+from repro.nn import init_params
+from repro.serve import (
+    build_serving_plans,
+    decode_step,
+    prefill,
+    verify_backend_equivalence,
+)
+
+DEFAULT_ARCHS = "qwen3-0.6b,deepseek-moe-16b,rwkv6-3b"  # dense / moe / ssm
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+
+def _make_batch(cfg, rng, b, t):
+    batch = {"tokens": jnp.asarray(
+        rng.integers(1, cfg.vocab_size, (b, t)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_patches, cfg.d_model)), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_frames, cfg.d_model)), jnp.float32)
+    return batch
+
+
+def _time_mode(cfg, params, batch, *, max_seq, n_new, lut_tables):
+    """One serving mode: returns prefill/decode timings + greedy tokens."""
+    b, t = batch["tokens"].shape
+    pf = jax.jit(lambda p, x: prefill(p, cfg, x, max_seq=max_seq,
+                                      lut_tables=lut_tables))
+    t0 = time.perf_counter()
+    logits, cache = pf(params, batch)
+    jax.block_until_ready(logits)
+    prefill_compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    logits, cache = pf(params, batch)
+    jax.block_until_ready(logits)
+    prefill_s = time.perf_counter() - t0
+
+    step = jax.jit(lambda p, c, tk, pos: decode_step(
+        p, cfg, c, tk, pos, lut_tables=lut_tables))
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    # warm the decode compile outside the timed loop
+    lg_w, cache = step(params, cache, tok, jnp.asarray(t))
+    jax.block_until_ready(lg_w)
+    logits = lg_w
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    outs = []
+    t0 = time.perf_counter()
+    for i in range(n_new):
+        outs.append(np.asarray(tok)[:, 0].tolist())
+        logits, cache = step(params, cache, tok, jnp.asarray(t + 1 + i))
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    return {
+        "prefill_compile_s": round(prefill_compile_s, 4),
+        "prefill_s": round(prefill_s, 4),
+        "decode_s": round(dt, 4),
+        "decode_tok_s": round(n_new * b / dt, 2),
+        "tokens_req0": [o[0] for o in outs],
+    }
+
+
+def bench_arch(arch: str, *, batch: int, prompt_len: int, n_new: int,
+               full: bool, workers: int | None) -> dict:
+    cfg = get_config(arch)
+    if not full:
+        cfg = smoke_config(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    b, t = batch, prompt_len
+    max_seq = t + n_new + 1
+    bt = _make_batch(cfg, rng, b, t)
+
+    calib = rng.normal(size=100000) * 3
+    plans = build_serving_plans(cfg, calib, workers=workers)
+    rep = plans.report
+    lut_cfg = plans.patched_config(cfg)
+
+    # Equivalence harness first: gather and pallas decode must bit-match.
+    prompt = np.asarray(bt["tokens"])
+    equivalence_ok = False
+    if cfg.family not in ("vlm", "encdec"):  # prefill needs extra inputs
+        verify_backend_equivalence(cfg, params, plans, prompt,
+                                   min(n_new, 4), max_seq=max_seq)
+        equivalence_ok = True
+
+    out = {
+        "family": cfg.family,
+        "plain": _time_mode(cfg, params, bt, max_seq=max_seq, n_new=n_new,
+                            lut_tables=None),
+        "lut_gather": _time_mode(
+            lut_cfg, params, bt, max_seq=max_seq, n_new=n_new,
+            lut_tables=plans.tables_for_model(backend="gather")),
+        "lut_pallas": _time_mode(
+            lut_cfg, params, bt, max_seq=max_seq, n_new=n_new,
+            lut_tables=plans.tables_for_model(backend="pallas")),
+        "equivalence_ok": equivalence_ok,
+        "plans": {
+            "sites": sorted(plans.sites),
+            "total_cost": rep.total_cost,
+            "total_plain_cost": rep.total_plain_cost,
+            "saved_frac": round(rep.saved_frac, 4),
+            "n_tables": len(rep.tables),
+            "n_unique": rep.n_unique,
+            "dedup_hits": rep.dedup_hits,
+            "dedup_rate": round(rep.dedup_rate, 4),
+            "compress_s": round(rep.seconds, 3),
+            "dontcare_frac": {
+                k: round(sp.lut.dontcare_frac, 4)
+                for k, sp in plans.sites.items()},
+        },
+    }
+    # the LUT paths must bit-match each other token-for-token
+    assert (out["lut_gather"]["tokens_req0"]
+            == out["lut_pallas"]["tokens_req0"]), (
+        "gather/pallas decode diverged: "
+        f"{out['lut_gather']['tokens_req0']} vs "
+        f"{out['lut_pallas']['tokens_req0']}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=DEFAULT_ARCHS,
+                    help="comma-separated arch names (>=3 families default)")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (overrides batch/lens)")
+    ap.add_argument("--full", action="store_true",
+                    help="full (non-smoke) model configs")
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    if args.smoke:
+        args.batch, args.prompt_len, args.new_tokens = 2, 6, 4
+
+    archs = [a for a in args.archs.split(",") if a]
+    for a in archs:
+        if a not in ARCH_NAMES:
+            raise SystemExit(f"unknown arch {a!r}; have {sorted(ARCH_NAMES)}")
+
+    results = {
+        "schema": "serve_bench/v1",
+        "scale": "full" if args.full else "smoke",
+        "batch": args.batch,
+        "prompt_len": args.prompt_len,
+        "new_tokens": args.new_tokens,
+        "backend": jax.default_backend(),
+        "archs": {},
+    }
+    for arch in archs:
+        t0 = time.perf_counter()
+        res = bench_arch(arch, batch=args.batch, prompt_len=args.prompt_len,
+                         n_new=args.new_tokens, full=args.full,
+                         workers=args.workers)
+        res["wall_s"] = round(time.perf_counter() - t0, 2)
+        results["archs"][arch] = res
+        fam = res["family"]
+        print(f"{arch} [{fam}]: plain {res['plain']['decode_tok_s']} tok/s | "
+              f"lut-gather {res['lut_gather']['decode_tok_s']} tok/s | "
+              f"lut-pallas {res['lut_pallas']['decode_tok_s']} tok/s | "
+              f"dedupe {res['plans']['dedup_rate']:.0%} | "
+              f"equivalence={'ok' if res['equivalence_ok'] else 'skipped'}")
+
+    families = {r["family"] for r in results["archs"].values()}
+    print(f"{len(results['archs'])} archs over {len(families)} families "
+          f"-> {os.path.abspath(args.out)}")
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -76,13 +76,19 @@ class CompressReport:
     """Structured result of :func:`compress_network_report`.
 
     ``plans[i]`` and ``tables[i]`` describe ``specs[i]`` — result order is
-    input order regardless of ``workers``.
+    input order regardless of ``workers``.  When duplicate-table sharing is
+    on (the default), identical ``(values, care)`` tables are compressed
+    once and the shared result is cloned per input site: ``n_unique``
+    counts the distinct searches actually run and ``dedup_hits`` the input
+    tables served from a shared result.
     """
 
     plans: list[Plan]
     tables: list[TableReport]
     workers: int
     seconds: float           # wall clock for the whole network
+    n_unique: int | None = None   # distinct (values, care) tables searched
+    dedup_hits: int = 0           # inputs that reused a shared search
 
     @property
     def total_cost(self) -> int:
@@ -105,15 +111,25 @@ class CompressReport:
     def total_eliminated(self) -> int:
         return sum(t.eliminated for t in self.tables)
 
+    @property
+    def dedup_rate(self) -> float:
+        """Fraction of input tables served by a shared duplicate result."""
+        n = len(self.tables)
+        return self.dedup_hits / n if n else 0.0
+
     def summary(self) -> str:
         n = len(self.tables)
-        return (
+        msg = (
             f"{n} tables in {self.seconds:.2f}s (workers={self.workers}): "
             f"{self.total_cost} P-LUTs vs {self.total_plain_cost} plain "
             f"({self.saved_frac:.1%} saved); "
             f"{self.n_decomposed} decomposed / {n - self.n_decomposed} plain; "
             f"{self.total_eliminated} sub-tables eliminated"
         )
+        if self.n_unique is not None and self.dedup_hits:
+            msg += (f"; dedupe: {self.n_unique} unique, "
+                    f"{self.dedup_hits} shared ({self.dedup_rate:.0%} hit-rate)")
+        return msg
 
     def table_lines(self) -> list[str]:
         return [
@@ -290,18 +306,33 @@ def default_workers() -> int:
     return 1
 
 
+def _spec_key(spec: TableSpec) -> tuple:
+    """Content identity of a table: two specs with the same key compress to
+    bit-identical plans (the search never looks at ``name``)."""
+    return (spec.w_in, spec.w_out, spec.values.tobytes(),
+            spec.care_mask().tobytes())
+
+
 def compress_network_report(
     specs: list[TableSpec],
     cfg: CompressConfig | None = None,
     workers: int | None = None,
     verbose: bool = False,
+    dedupe: bool = True,
 ) -> CompressReport:
     """Compress every L-LUT of a network; tables are independent (paper
     flow), so they fan out over a process pool when ``workers > 1``.
 
     Result order is input order and the per-table plans are bit-identical
     to ``workers=1`` (each table's search is self-contained and
-    deterministic).  Pools use the ``spawn`` context (workers import only
+    deterministic).  ``dedupe=True`` (default) compresses each distinct
+    ``(values, care)`` table once and shares the result across duplicate
+    sites — networks of repeated layers pay one search per unique table;
+    duplicate sites get a renamed clone of the shared plan and a
+    ``seconds=0`` table report, and the hit-rate lands in the report's
+    ``n_unique``/``dedup_hits``/``dedup_rate``.
+
+    Pools use the ``spawn`` context (workers import only
     :mod:`repro.core` — pure numpy, never the caller's JAX state) and are
     cached per worker count so repeated network-sized batches pay startup
     once; use :func:`warm_pool` to pre-pay it and :func:`shutdown_pools`
@@ -310,26 +341,60 @@ def compress_network_report(
     cfg = cfg or CompressConfig()
     workers = default_workers() if workers is None else max(1, workers)
     t0 = time.perf_counter()
-    jobs = [(spec, cfg) for spec in specs]
-    if workers == 1 or len(specs) < 2:
+
+    # Duplicate-table sharing: first occurrence of each content key is the
+    # representative that actually runs the search.
+    if dedupe:
+        key_of: list[tuple] = [_spec_key(s) for s in specs]
+        rep_index: dict[tuple, int] = {}
+        uniq_specs: list[TableSpec] = []
+        for i, (spec, key) in enumerate(zip(specs, key_of)):
+            if key not in rep_index:
+                rep_index[key] = len(uniq_specs)
+                uniq_specs.append(spec)
+    else:
+        key_of = list(range(len(specs)))  # every spec its own key
+        rep_index = {i: i for i in range(len(specs))}
+        uniq_specs = list(specs)
+
+    jobs = [(spec, cfg) for spec in uniq_specs]
+    if workers == 1 or len(jobs) < 2:
         workers = 1
-        results = [_compress_one(spec, cfg) for spec, cfg in jobs]
+        uniq_results = [_compress_one(spec, cfg) for spec, cfg in jobs]
     else:
         chunk = max(1, len(jobs) // (workers * 4))
         try:
             pool = _get_pool(workers)
-            results = list(pool.map(_pool_worker, jobs, chunksize=chunk))
+            uniq_results = list(pool.map(_pool_worker, jobs, chunksize=chunk))
         except Exception:
             # Broken/unpicklable pool state: drop the cached pool and fall
             # back to the in-process path rather than failing the caller.
             shutdown_pools()
             workers = 1
-            results = [_compress_one(spec, cfg) for spec, cfg in jobs]
-    plans = [plan for plan, _ in results]
-    tables = [rep for _, rep in results]
+            uniq_results = [_compress_one(spec, cfg) for spec, cfg in jobs]
+
+    plans: list[Plan] = []
+    tables: list[TableReport] = []
+    served = [False] * len(uniq_specs)
+    dedup_hits = 0
+    for spec, key in zip(specs, key_of):
+        u = rep_index[key]
+        plan, rep = uniq_results[u]
+        if not served[u]:
+            # representative == first input spec with this key, so its
+            # plan/report already carry the right name
+            served[u] = True
+        else:
+            dedup_hits += 1
+            plan = dataclasses.replace(plan, name=spec.name)
+            rep = dataclasses.replace(rep, name=spec.name, seconds=0.0)
+        plans.append(plan)
+        tables.append(rep)
+
     report = CompressReport(
         plans=plans, tables=tables, workers=workers,
         seconds=time.perf_counter() - t0,
+        n_unique=len(uniq_specs), dedup_hits=dedup_hits,
     )
     if verbose:
         for line in report.table_lines():

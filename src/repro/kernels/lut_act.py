@@ -59,6 +59,11 @@ def lut_act_pallas(
     interpret: bool = True,
 ) -> jax.Array:
     rows, lanes = x.shape
+    if rows % block_rows != 0:
+        raise ValueError(
+            f"lut_act_pallas: rows={rows} not a multiple of "
+            f"block_rows={block_rows}; trailing rows would be dropped by "
+            f"the grid — pad the input (ops.lut_act does this)")
     full = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
     return pl.pallas_call(
         functools.partial(

@@ -53,6 +53,11 @@ def lut_reconstruct_pallas(
     interpret: bool = True,
 ) -> jax.Array:
     rows, lanes = x.shape
+    if rows % block_rows != 0:
+        raise ValueError(
+            f"lut_reconstruct_pallas: rows={rows} not a multiple of "
+            f"block_rows={block_rows}; trailing rows would be dropped by "
+            f"the grid — pad the input (ops.lut_reconstruct does this)")
     grid = (rows // block_rows,)
     full = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
     return pl.pallas_call(
@@ -77,6 +82,11 @@ def plain_lookup_pallas(
     interpret: bool = True,
 ) -> jax.Array:
     rows, lanes = x.shape
+    if rows % block_rows != 0:
+        raise ValueError(
+            f"plain_lookup_pallas: rows={rows} not a multiple of "
+            f"block_rows={block_rows}; trailing rows would be dropped by "
+            f"the grid — pad the input (ops.lut_reconstruct does this)")
     return pl.pallas_call(
         _plain_kernel,
         grid=(rows // block_rows,),

@@ -6,7 +6,13 @@ the compile-only proof at 256/512 chips).  Supports the int8 KV cache and
 ReducedLUT-compressed activations (the paper feature).
 
   PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
-      --batch 4 --prompt-len 48 --new-tokens 16 [--kv-int8] [--lut-act]
+      --batch 4 --prompt-len 48 --new-tokens 16 [--kv-int8] [--lut-act] \
+      [--lut-backend gather|pallas]
+
+``--lut-act`` serves engine-selected plans: every activation site of the
+network is compressed through the batched engine (duplicate tables shared
+— see the dedupe hit-rate it prints) and the decode loop evaluates the
+resulting plan arrays.
 """
 from __future__ import annotations
 
@@ -20,7 +26,7 @@ import numpy as np
 from repro.configs import ARCH_NAMES, get_config, smoke_config
 from repro.launch.mesh import make_host_mesh
 from repro.nn import init_params
-from repro.serve import decode_step, init_cache, prefill
+from repro.serve import build_serving_plans, decode_step, init_cache, prefill
 
 
 def main() -> None:
@@ -31,6 +37,8 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--kv-int8", action="store_true")
     ap.add_argument("--lut-act", action="store_true")
+    ap.add_argument("--lut-backend", choices=("gather", "pallas"),
+                    default="gather")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -51,21 +59,17 @@ def main() -> None:
 
     lut_tables = None
     if args.lut_act:
-        import dataclasses
-        from repro.nn.lut_act import build_lut_activation
         calib = rng.normal(size=100000) * 3
-        act = "relu2" if cfg.activation == "relu2" else "silu"
-        lut = build_lut_activation(act, calib, w_in=10, w_out=10,
-                                   x_lo=-8.0, x_hi=8.0)
-        cfg = dataclasses.replace(cfg, lut_activation=True)
-        lut_tables = lut.tables_for_model()
-        print(f"LUT activation: {lut.dontcare_frac:.0%} don't-care bins, "
-              f"{lut.plan.plut_cost()} P-LUTs")
+        plans = build_serving_plans(cfg, calib, backend=args.lut_backend)
+        cfg = plans.patched_config(cfg)
+        lut_tables = plans.tables_for_model()
+        print(plans.summary())
 
     max_seq = t + args.new_tokens
     t0 = time.time()
     logits, cache = jax.jit(
-        lambda p, x: prefill(p, cfg, x, max_seq=max_seq))(params, batch)
+        lambda p, x: prefill(p, cfg, x, max_seq=max_seq,
+                             lut_tables=lut_tables))(params, batch)
     print(f"prefill {b}x{t}: {time.time() - t0:.2f}s")
 
     if args.kv_int8 and cfg.family in ("dense", "moe", "vlm"):

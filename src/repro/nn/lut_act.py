@@ -66,13 +66,102 @@ class LUTActivation:
 
 def calibrate_bins(samples: np.ndarray, w_in: int, x_lo: float,
                    x_hi: float) -> np.ndarray:
-    """Observed-bin mask from calibration activations (care mask)."""
+    """Observed-bin mask from calibration activations (care mask).
+
+    Degenerate inputs raise instead of silently producing an all- or
+    near-all-don't-care table the compressor may rewrite into garbage:
+    an empty/non-finite calibration set, an inverted or zero-width input
+    range, or a constant calibration array (one observed bin).
+    """
+    if x_hi <= x_lo:
+        raise ValueError(
+            f"calibrate_bins: empty input range [x_lo={x_lo}, x_hi={x_hi}]")
+    flat = np.asarray(samples, dtype=np.float64).reshape(-1)
+    flat = flat[np.isfinite(flat)]
+    if flat.size == 0:
+        raise ValueError(
+            "calibrate_bins: calibration array is empty (or all non-finite) "
+            "— the resulting all-don't-care table is unconstrained and the "
+            "compressor may rewrite every entry")
     levels = (1 << w_in) - 1
-    xn = np.clip((samples.reshape(-1) - x_lo) / (x_hi - x_lo), 0.0, 1.0)
+    xn = np.clip((flat - x_lo) / (x_hi - x_lo), 0.0, 1.0)
     codes = np.rint(xn * levels).astype(np.int64)
     care = np.zeros(1 << w_in, dtype=bool)
     care[codes] = True
+    if int(care.sum()) < 2:
+        raise ValueError(
+            "calibrate_bins: calibration is constant (a single observed "
+            "bin); the table would be all-don't-care away from one entry — "
+            "pass a representative activation sample instead")
     return care
+
+
+def activation_table(
+    act: str,
+    calibration: np.ndarray | None = None,
+    *,
+    w_in: int = 10,
+    w_out: int = 10,
+    x_lo: float = -8.0,
+    x_hi: float = 8.0,
+    name: str | None = None,
+) -> tuple[TableSpec, dict]:
+    """Tabulate + quantize an activation into a compressor-ready spec.
+
+    Returns ``(TableSpec, quant)`` where ``quant`` carries the output
+    dequantization range (``y_lo``/``y_hi``, computed over *care* bins
+    only — don't-care bins are never served, so letting them widen the
+    range would just coarsen the output grid) and ``dontcare_frac``.
+    """
+    if x_hi <= x_lo:
+        raise ValueError(
+            f"activation_table: empty input range "
+            f"[x_lo={x_lo}, x_hi={x_hi}]")
+    fn = ACT_FNS[act]
+    xs = np.linspace(x_lo, x_hi, 1 << w_in)
+    ys = fn(xs)
+    care = None
+    if calibration is not None:
+        care = calibrate_bins(np.asarray(calibration), w_in, x_lo, x_hi)
+    ys_care = ys if care is None else ys[care]
+    y_lo, y_hi = float(ys_care.min()), float(ys_care.max())
+    span = max(y_hi - y_lo, 1e-6)
+    codes = np.clip(
+        np.rint((ys - y_lo) / span * ((1 << w_out) - 1)),
+        0, (1 << w_out) - 1).astype(np.int64)
+    spec = TableSpec(codes, w_in, w_out, care=care,
+                     name=name or f"act_{act}")
+    quant = {
+        "y_lo": y_lo, "y_hi": y_hi,
+        "dontcare_frac": float(0.0 if care is None else 1 - care.mean()),
+    }
+    return spec, quant
+
+
+def ensure_decomposed(plan, spec: TableSpec,
+                      exiguity: int | None = 250) -> DecomposedPlan:
+    """Force an Eq. (1) decomposition when the search picked plain — the
+    runtime activation evaluators only consume decomposed plan arrays."""
+    if isinstance(plan, DecomposedPlan):
+        return plan
+    from repro.core.pipeline import _decompose_hb
+
+    cfg = CompressConfig(exiguity=exiguity, m_candidates=(32,),
+                         lb_candidates=(0,))
+    return _decompose_hb(spec.values, spec.care_mask(), spec.w_in,
+                         spec.w_out, 0, None, 32, cfg, spec.name)
+
+
+def lut_activation_from_plan(plan, spec: TableSpec, quant: dict, *,
+                             x_lo: float, x_hi: float,
+                             exiguity: int | None = 250) -> LUTActivation:
+    """Wrap an engine-selected plan + quantization meta for the runtime."""
+    return LUTActivation(
+        plan=ensure_decomposed(plan, spec, exiguity),
+        w_in=spec.w_in, w_out=spec.w_out, x_lo=x_lo, x_hi=x_hi,
+        y_lo=quant["y_lo"], y_hi=quant["y_hi"],
+        dontcare_frac=quant["dontcare_frac"],
+    )
 
 
 def build_lut_activation(
@@ -87,28 +176,13 @@ def build_lut_activation(
     m_candidates=(8, 16, 32, 64),
     lb_candidates=(0, 1, 2, 3),
 ) -> LUTActivation:
-    fn = ACT_FNS[act]
-    xs = np.linspace(x_lo, x_hi, 1 << w_in)
-    ys = fn(xs)
-    y_lo, y_hi = float(ys.min()), float(ys.max())
-    span = max(y_hi - y_lo, 1e-6)
-    codes = np.rint((ys - y_lo) / span * ((1 << w_out) - 1)).astype(np.int64)
-    care = None
-    if calibration is not None:
-        care = calibrate_bins(np.asarray(calibration), w_in, x_lo, x_hi)
-    spec = TableSpec(codes, w_in, w_out, care=care, name=f"act_{act}")
+    """Single-table convenience path (one activation, compressed inline).
+    Network-level serving goes through :func:`repro.serve.plans.
+    build_serving_plans`, which dedupes identical tables across sites."""
+    spec, quant = activation_table(
+        act, calibration, w_in=w_in, w_out=w_out, x_lo=x_lo, x_hi=x_hi)
     cfg = CompressConfig(exiguity=exiguity, m_candidates=m_candidates,
                          lb_candidates=lb_candidates)
     plan = compress_table(spec, cfg)
-    if not isinstance(plan, DecomposedPlan):
-        # force a decomposed plan (runtime path expects Eq. 1 arrays)
-        cfg = CompressConfig(exiguity=exiguity, m_candidates=(32,),
-                             lb_candidates=(0,))
-        from repro.core.pipeline import _decompose_hb
-        plan = _decompose_hb(codes, spec.care_mask(), w_in, w_out, 0, None,
-                             32, cfg, spec.name)
-    return LUTActivation(
-        plan=plan, w_in=w_in, w_out=w_out, x_lo=x_lo, x_hi=x_hi,
-        y_lo=y_lo, y_hi=y_hi,
-        dontcare_frac=float(0.0 if care is None else 1 - care.mean()),
-    )
+    return lut_activation_from_plan(plan, spec, quant, x_lo=x_lo, x_hi=x_hi,
+                                    exiguity=exiguity)

@@ -38,21 +38,61 @@ def lut_act_jnp(x, arrays, *, l, w_lb, w_hb, w_in, w_out,
     return y.astype(x.dtype)
 
 
-def make_activation(cfg, lut_tables: dict | None):
+def site_tables(lut_tables: dict | None, site: str) -> dict | None:
+    """Resolve one activation site's ``{"meta", "arrays"}`` entry.
+
+    Two shapes are accepted: the legacy single-table dict (applies to the
+    ``"mlp"`` site only — the pre-plans behavior) and the serving-plans
+    multi-site dict ``{"sites": {site: {...}}, "backend": ...}`` produced
+    by :mod:`repro.serve.plans`.
+    """
+    if lut_tables is None:
+        return None
+    if "sites" in lut_tables:
+        return lut_tables["sites"].get(site)
+    return lut_tables if site == "mlp" else None
+
+
+def apply_lut_act(x, tab: dict, backend: str = "gather"):
+    """Evaluate one compressed-table activation entry on ``x``.
+
+    ``backend="gather"`` is the GSPMD-shardable ``jnp.take`` form used
+    inside distributed steps; ``backend="pallas"`` routes through the fused
+    quantize/reconstruct/dequantize kernel (single-device serving fast
+    path).  Both compute the identical quantize -> Eq. (1) -> dequantize
+    math and bit-match each other (tests/test_serve_plans.py).
+    """
+    meta, arrays = tab["meta"], tab["arrays"]
+    if backend == "pallas":
+        from repro.kernels import PlanArrays
+        from repro.kernels.ops import lut_act as lut_act_fused
+
+        pa = PlanArrays(
+            kind="decomposed", w_in=meta["w_in"], w_out=meta["w_out"],
+            l=meta["l"], w_lb=meta["w_lb"], w_hb=meta["w_hb"],
+            arrays=arrays,
+        )
+        return lut_act_fused(
+            x, pa, x_lo=meta["x_lo"], x_hi=meta["x_hi"],
+            y_lo=meta["y_lo"], y_hi=meta["y_hi"],
+        )
+    return lut_act_jnp(x, arrays, **meta)
+
+
+def make_activation(cfg, lut_tables: dict | None, site: str = "mlp",
+                    fallback: str | None = None):
     """Returns act(x) for the configured nonlinearity.
 
-    With ``cfg.lut_activation`` and compiled plan arrays available, the
-    activation evaluates the ReducedLUT-compressed table.
+    With ``cfg.lut_activation`` and compiled plan arrays available for
+    ``site``, the activation evaluates the ReducedLUT-compressed table;
+    otherwise the exact ``fallback`` (default ``cfg.activation``) runs.
     """
     if cfg.lut_activation and lut_tables is not None:
-        meta = lut_tables["meta"]
-        arrays = lut_tables["arrays"]
-
-        def act(x):
-            return lut_act_jnp(x, arrays, **meta)
-
-        return act
-    return activation_fn(cfg.activation)
+        tab = site_tables(lut_tables, site)
+        if tab is not None:
+            backend = lut_tables.get("backend", "gather")
+            return lambda x: apply_lut_act(x, tab, backend)
+    return activation_fn(fallback or cfg.activation)
 
 
 def mlp_block(params: dict, x: jax.Array, cfg, lut_tables=None) -> jax.Array:

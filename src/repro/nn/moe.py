@@ -40,6 +40,7 @@ def moe_ffn_local(
     capacity: int,
     e0,                     # first resident expert id (traced or 0)
     act_name: str = "silu",
+    act_fn=None,            # override (e.g. LUT-compressed expert act)
 ):
     """Route + gather + expert GEMM + weighted scatter for local experts."""
     s, d = x.shape
@@ -64,7 +65,7 @@ def moe_ffn_local(
     buf = buf.at[slot].set(x[src], mode="drop")
     tokens = buf[:-1].reshape(e_loc, capacity, d)
 
-    act = activation_fn(act_name)
+    act = act_fn if act_fn is not None else activation_fn(act_name)
     h = jnp.einsum("ecd,edf->ecf", tokens, w_in)
     gate, up = jnp.split(h, 2, axis=-1)
     h = act(gate) * up
@@ -86,14 +87,24 @@ def moe_ffn_local(
     return y, aux
 
 
-def moe_block(params: dict, x: jax.Array, cfg, shared_mlp=None):
+def moe_block(params: dict, x: jax.Array, cfg, shared_mlp=None,
+              lut_tables=None):
     """(B, T, d) -> ((B, T, d), aux_loss). Uses shard_map EP under a mesh
-    with a model axis; plain local compute otherwise."""
+    with a model axis; plain local compute otherwise.  With serving plans
+    carrying an ``"expert"`` site, the per-expert nonlinearity evaluates
+    the ReducedLUT-compressed table (arrays are closed over and replicate
+    across the expert-parallel shard_map — they are KB-sized)."""
+    from .mlp import make_activation
+
     b, t, d = x.shape
     m = cfg.moe
     mesh = current_mesh()
     s_local_tokens = b * t
     act_name = "silu"
+    act_fn = None
+    if getattr(cfg, "lut_activation", False) and lut_tables is not None:
+        act_fn = make_activation(cfg, lut_tables, site="expert",
+                                 fallback=act_name)
 
     tp = (mesh is not None and TP_AXIS in mesh.axis_names
           and m.n_experts % mesh.shape[TP_AXIS] == 0)
@@ -114,7 +125,7 @@ def moe_block(params: dict, x: jax.Array, cfg, shared_mlp=None):
             y, aux = moe_ffn_local(
                 xl.reshape(-1, d), router_w, w_in, w_out,
                 n_experts=m.n_experts, top_k=m.top_k, capacity=capacity,
-                e0=e0, act_name=act_name,
+                e0=e0, act_name=act_name, act_fn=act_fn,
             )
             y = jax.lax.psum(y, TP_AXIS)
             aux = jax.lax.psum(aux, TP_AXIS) / n_tp
@@ -137,7 +148,7 @@ def moe_block(params: dict, x: jax.Array, cfg, shared_mlp=None):
         y, aux = moe_ffn_local(
             x.reshape(-1, d), params["router"], params["w_in"],
             params["w_out"], n_experts=m.n_experts, top_k=m.top_k,
-            capacity=capacity, e0=0, act_name=act_name,
+            capacity=capacity, e0=0, act_name=act_name, act_fn=act_fn,
         )
         y = y.reshape(b, t, d)
 

@@ -177,8 +177,15 @@ def rwkv_time_mix(params, x, cfg, x_last=None, wkv_state=None,
     return shard(out, "dp", None, None), (x[:, -1:], wkv_state)
 
 
-def rwkv_channel_mix(params, x, cfg, x_last=None):
-    """RWKV6 FFN: squared-ReLU with token-shift mixing."""
+def rwkv_channel_mix(params, x, cfg, x_last=None, lut_tables=None):
+    """RWKV6 FFN: squared-ReLU with token-shift mixing.
+
+    With serving plans carrying an ``"ffn"`` site, the squared-ReLU
+    evaluates the ReducedLUT-compressed table (cfg.activation is "relu2"
+    for the rwkv family, so the exact fallback is the same function).
+    """
+    from .mlp import make_activation
+
     b, t, d = x.shape
     if x_last is None:
         x_last = jnp.zeros((b, 1, d), x.dtype)
@@ -187,7 +194,7 @@ def rwkv_channel_mix(params, x, cfg, x_last=None):
     xr = x + (x_prev - x) * params["mu_ffn_r"]
     kk = jnp.einsum("btd,df->btf", xk, params["w_ffn_k"])
     kk = shard(kk, "dp", None, "tp")
-    vv = jnp.einsum("btf,fd->btd", jnp.square(jax.nn.relu(kk)),
-                    params["w_ffn_v"])
+    act = make_activation(cfg, lut_tables, site="ffn", fallback="relu2")
+    vv = jnp.einsum("btf,fd->btd", act(kk), params["w_ffn_v"])
     rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, params["w_ffn_r"]))
     return shard(rr * vv, "dp", None, None), x[:, -1:]

@@ -345,7 +345,8 @@ def _decoder_block(p, x, cfg, lut_tables, pos_offset=0, collect_kv=False,
                 lut_tables)
         h, aux = moe_block(
             {"router": p["router"], "w_in": p["moe_w_in"],
-             "w_out": p["moe_w_out"]}, hin, cfg, shared_mlp=shared)
+             "w_out": p["moe_w_out"]}, hin, cfg, shared_mlp=shared,
+            lut_tables=lut_tables)
     else:
         h = mlp_block(p, hin, cfg, lut_tables)
         aux = jnp.zeros((), jnp.float32)
@@ -391,7 +392,7 @@ def decoder_loss(params, cfg, batch, lut_tables=None, remat=False,
 # RWKV6 forward
 # =========================================================================
 def rwkv_forward(params, cfg, tokens, states=None, remat=False,
-                 collect_states=False):
+                 collect_states=False, lut_tables=None):
     """states: None (training) or per-layer decode state pytree with leaves
     stacked over layers: {"att_x": (L,B,1,d), "ffn_x": (L,B,1,d),
     "wkv": (L,B,H,N,N)}.  ``collect_states=True`` (prefill) returns the
@@ -409,7 +410,7 @@ def rwkv_forward(params, cfg, tokens, states=None, remat=False,
             x = x + h
             h, fx = rwkv_channel_mix(
                 p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
-                x_last=st["ffn_x"])
+                x_last=st["ffn_x"], lut_tables=lut_tables)
             x = x + h
             return x, {"att_x": ax, "ffn_x": fx, "wkv": wkv}
         p = inp
@@ -417,7 +418,8 @@ def rwkv_forward(params, cfg, tokens, states=None, remat=False,
             p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
         x = x + h
         h, fx = rwkv_channel_mix(
-            p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+            p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
+            lut_tables=lut_tables)
         x = x + h
         ys = ({"att_x": ax, "ffn_x": fx, "wkv": wkv} if collect_states
               else jnp.zeros((), jnp.float32))
@@ -474,7 +476,7 @@ def _hybrid_temporal(kind, p, x, cfg, pos_offset, state=None, mode="train"):
 
 
 def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
-                   mode=None):
+                   mode=None, lut_tables=None):
     """Full-sequence forward. ``states`` (decode): pytree per group/tail.
     mode: train | prefill | decode (inferred from ``states`` if None)."""
     pattern = cfg.block_pattern or ("rec", "rec", "attn")
@@ -498,7 +500,8 @@ def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
             new_st[f"t{i}"] = s
             x = x + h
             h = mlp_block(p[f"m{i}"], rms_norm(x, p[f"m{i}_ln"],
-                                               cfg.norm_eps), cfg)
+                                               cfg.norm_eps), cfg,
+                          lut_tables)
             x = x + h
         return x, new_st if collect else jnp.zeros((), jnp.float32)
 
@@ -525,7 +528,7 @@ def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
             x = x + h
             mp = jax.tree.map(lambda a: a[0], tp_[f"m{i}"])
             h = mlp_block(mp, rms_norm(x, tp_[f"m{i}_ln"][0],
-                                       cfg.norm_eps), cfg)
+                                       cfg.norm_eps), cfg, lut_tables)
             x = x + h
             i += 1
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)

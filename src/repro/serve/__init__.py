@@ -1,7 +1,17 @@
-"""Serving runtime: prefill, decode, KV-cache management, batching."""
+"""Serving runtime: prefill, decode, KV-cache management, batching,
+compressed-activation serving plans."""
 from .batching import ContinuousBatcher, Request
 from .decode import decode_step, prefill
 from .kvcache import cache_shardings, cache_specs, init_cache
+from .plans import (
+    ServingPlans,
+    SitePlan,
+    activation_sites,
+    build_serving_plans,
+    verify_backend_equivalence,
+)
 
 __all__ = ["prefill", "decode_step", "cache_specs", "init_cache",
-           "cache_shardings", "ContinuousBatcher", "Request"]
+           "cache_shardings", "ContinuousBatcher", "Request",
+           "ServingPlans", "SitePlan", "activation_sites",
+           "build_serving_plans", "verify_backend_equivalence"]

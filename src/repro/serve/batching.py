@@ -47,12 +47,13 @@ class ContinuousBatcher:
 
     def __init__(self, cfg: ArchConfig, params, batch_size: int,
                  max_seq: int, eos_token: int = 0,
-                 kv_dtype: str = "bfloat16"):
+                 kv_dtype: str = "bfloat16", lut_tables: dict | None = None):
         self.cfg = cfg
         self.params = params
         self.b = batch_size
         self.max_seq = max_seq
         self.eos = eos_token
+        self.lut_tables = lut_tables
         self.cache = init_cache(cfg, batch_size, max_seq, kv_dtype)
         self.slots = [_Slot() for _ in range(batch_size)]
         self.queue: deque[Request] = deque()
@@ -66,7 +67,8 @@ class ContinuousBatcher:
         # group — offline simplification: slots advance in lock-step per
         # step call with their own positions through masked writes.
         self._step = jax.jit(
-            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos,
+                                             lut_tables=lut_tables))
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -109,6 +111,13 @@ class ContinuousBatcher:
             if slot.req is not None:
                 by_pos.setdefault(slot.pos, []).append(i)
         for pos, idxs in sorted(by_pos.items()):
+            # A slot is evicted the moment its position reaches max_seq, so
+            # every write lands strictly inside the cache.  Without this,
+            # JAX clamps an out-of-range cache write index to the last row,
+            # silently corrupting position max_seq-1 for other requests.
+            assert pos < self.max_seq, (
+                f"slot position {pos} out of cache bounds "
+                f"(max_seq={self.max_seq}); eviction failed to fire")
             # the shared step writes cache index `pos` for EVERY row; rows
             # outside this position group must keep their entry — snapshot
             # the (L, B, KV, D) slice and restore the other rows after.
@@ -136,10 +145,16 @@ class ContinuousBatcher:
                         req.out.append(int(nxt[i]))
                 else:
                     req.out.append(int(nxt[i]))
-                if (not slot.pending and
-                        (len(req.out) >= req.max_new
-                         or req.out[-1] == self.eos
-                         or slot.pos >= self.max_seq - 1)):
+                # Evict when finished (max_new / EOS) or when the cache is
+                # exactly full: ``slot.pos`` is the *next* write index, so
+                # the slot may keep decoding until pos == max_seq — the
+                # last row (max_seq - 1) is usable, and a slot whose prompt
+                # alone fills the cache is truncated rather than allowed to
+                # write out of bounds.
+                if (slot.pos >= self.max_seq
+                        or (not slot.pending
+                            and (len(req.out) >= req.max_new
+                                 or req.out[-1] == self.eos))):
                     req.done = True
                     self.finished.append(req)
                     slot.req = None

@@ -32,10 +32,12 @@ from repro.nn.sharding import shard
 # =========================================================================
 # decoder-only (dense / moe / vlm)
 # =========================================================================
-def decoder_prefill(params, cfg, batch, max_seq: int | None = None):
+def decoder_prefill(params, cfg, batch, max_seq: int | None = None,
+                    lut_tables=None):
     tokens = batch["tokens"]
     x, _, kvs = decoder_forward(
-        params, cfg, tokens, patches=batch.get("patches"), collect_kv=True)
+        params, cfg, tokens, patches=batch.get("patches"), collect_kv=True,
+        lut_tables=lut_tables)
     logits = logits_projection(x[:, -1:], params["lm_head"])
     k, v = kvs
     cache = {"k": k, "v": v}
@@ -69,10 +71,12 @@ def decoder_decode_step(params, cfg, cache, tokens, pos,
             shared = None
             if cfg.moe.n_shared:
                 shared = lambda z: mlp_block(
-                    {"w_in": p["sh_w_in"], "w_out": p["sh_w_out"]}, z, cfg)
+                    {"w_in": p["sh_w_in"], "w_out": p["sh_w_out"]}, z, cfg,
+                    lut_tables)
             h, _ = moe_block(
                 {"router": p["router"], "w_in": p["moe_w_in"],
-                 "w_out": p["moe_w_out"]}, hin, cfg, shared_mlp=shared)
+                 "w_out": p["moe_w_out"]}, hin, cfg, shared_mlp=shared,
+                lut_tables=lut_tables)
         else:
             h = mlp_block(p, hin, cfg, lut_tables)
         out = (kc, vc, ksc, vsc) if int8 else (kc, vc)
@@ -95,7 +99,10 @@ def decoder_decode_step(params, cfg, cache, tokens, pos,
 # =========================================================================
 # encdec (whisper)
 # =========================================================================
-def encdec_prefill(params, cfg, batch, max_seq: int | None = None):
+def encdec_prefill(params, cfg, batch, max_seq: int | None = None,
+                   lut_tables=None):
+    # encdec prefill runs the exact activations (the encoder pass is
+    # one-shot per request); the LUT tables apply to the decode loop.
     enc = encoder_forward(params, cfg, batch["frames"])
     # per-layer cross K/V from the encoder output
     def xkv(p):
@@ -116,7 +123,7 @@ def encdec_prefill(params, cfg, batch, max_seq: int | None = None):
     return logits, cache
 
 
-def encdec_decode_step(params, cfg, cache, tokens, pos):
+def encdec_decode_step(params, cfg, cache, tokens, pos, lut_tables=None):
     from repro.nn.layers import embed_lookup
 
     x = embed_lookup(params["embed"], tokens)
@@ -133,7 +140,8 @@ def encdec_decode_step(params, cfg, cache, tokens, pos):
         h = mha(q, xk, xv, causal=False)
         h = jnp.einsum("btq,qd->btd", h.reshape(b, 1, cfg.q_dim), p["xwo"])
         x = x + h
-        h = mlp_block(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        h = mlp_block(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
+                      lut_tables)
         return x + h, (kc, vc)
 
     x, (ks, vs) = jax.lax.scan(
@@ -148,28 +156,32 @@ def encdec_decode_step(params, cfg, cache, tokens, pos):
 # =========================================================================
 # ssm (rwkv6) / hybrid (recurrentgemma)
 # =========================================================================
-def rwkv_prefill(params, cfg, batch, max_seq: int | None = None):
+def rwkv_prefill(params, cfg, batch, max_seq: int | None = None,
+                 lut_tables=None):
     x, states = rwkv_forward(params, cfg, batch["tokens"],
-                             collect_states=True)
+                             collect_states=True, lut_tables=lut_tables)
     logits = logits_projection(x[:, -1:], params["lm_head"])
     return logits, states
 
 
-def rwkv_decode_step(params, cfg, cache, tokens, pos):
-    x, states = rwkv_forward(params, cfg, tokens, states=cache)
+def rwkv_decode_step(params, cfg, cache, tokens, pos, lut_tables=None):
+    x, states = rwkv_forward(params, cfg, tokens, states=cache,
+                             lut_tables=lut_tables)
     logits = logits_projection(x, params["lm_head"])
     return logits, states
 
 
-def hybrid_prefill(params, cfg, batch, max_seq: int | None = None):
-    x, states = hybrid_forward(params, cfg, batch["tokens"], mode="prefill")
+def hybrid_prefill(params, cfg, batch, max_seq: int | None = None,
+                   lut_tables=None):
+    x, states = hybrid_forward(params, cfg, batch["tokens"], mode="prefill",
+                               lut_tables=lut_tables)
     logits = logits_projection(x[:, -1:], params["lm_head"])
     return logits, states
 
 
-def hybrid_decode_step(params, cfg, cache, tokens, pos):
+def hybrid_decode_step(params, cfg, cache, tokens, pos, lut_tables=None):
     x, states = hybrid_forward(params, cfg, tokens, states=cache, pos=pos,
-                               mode="decode")
+                               mode="decode", lut_tables=lut_tables)
     logits = logits_projection(x, params["lm_head"])
     return logits, states
 
@@ -185,13 +197,12 @@ DECODE_FNS = {
 }
 
 
-def prefill(params, cfg: ArchConfig, batch, max_seq=None):
-    return PREFILL_FNS[cfg.family](params, cfg, batch, max_seq)
+def prefill(params, cfg: ArchConfig, batch, max_seq=None, lut_tables=None):
+    return PREFILL_FNS[cfg.family](params, cfg, batch, max_seq,
+                                   lut_tables=lut_tables)
 
 
 def decode_step(params, cfg: ArchConfig, cache, tokens, pos,
                 lut_tables=None):
-    if cfg.family in ("dense", "moe", "vlm"):
-        return decoder_decode_step(params, cfg, cache, tokens, pos,
-                                   lut_tables=lut_tables)
-    return DECODE_FNS[cfg.family](params, cfg, cache, tokens, pos)
+    return DECODE_FNS[cfg.family](params, cfg, cache, tokens, pos,
+                                  lut_tables=lut_tables)

@@ -1,0 +1,226 @@
+"""Compressed-serving plans: network CompressReport -> decode-ready tables.
+
+This is the layer that turns the engine's :class:`CompressReport` into
+something the serving loop actually runs (ROADMAP: "wire CompressReport-
+selected plans into serve/lut_act end-to-end"):
+
+1. **Site enumeration** — every activation site of an architecture
+   (per-layer MLP nonlinearity, MoE expert activation, RWKV channel-mix
+   squared-ReLU) is tabulated + calibration-quantized into a
+   :class:`~repro.core.TableSpec` (one per layer per site kind, the same
+   granularity a per-layer-calibrated deployment would use).
+2. **Dedupe + compression** — the specs go through
+   :func:`~repro.core.engine.compress_network_report`, which shares
+   duplicate ``(values, care)`` tables so each unique table is compressed
+   once; the hit-rate is reported in the :class:`CompressReport`.
+3. **Materialization** — the winning plan per site kind is packed into
+   device-ready :class:`~repro.kernels.PlanArrays` and exported as the
+   ``lut_tables`` dict that :func:`repro.serve.decode_step`,
+   :class:`repro.serve.ContinuousBatcher` and :mod:`repro.launch.serve`
+   consume, with a choice of runtime backend: ``"gather"`` (GSPMD-
+   shardable ``jnp.take`` form) or ``"pallas"`` (fused quantize/
+   reconstruct/dequantize kernel).  The two backends bit-match
+   (:func:`verify_backend_equivalence`, asserted in tests and the bench).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import CompressConfig, CompressReport, compress_network_report
+from repro.core.table import TableSpec
+from repro.kernels import PlanArrays
+from repro.nn.lut_act import (
+    LUTActivation,
+    activation_table,
+    lut_activation_from_plan,
+)
+
+# Engine search space for serving tables (same defaults as
+# nn.lut_act.build_lut_activation).
+DEFAULT_COMPRESS = dict(exiguity=250, m_candidates=(8, 16, 32, 64),
+                        lb_candidates=(0, 1, 2, 3))
+
+
+def base_activation(name: str) -> str:
+    """The elementwise nonlinearity inside a (possibly gated) MLP."""
+    if name in ("swiglu", "silu"):
+        return "silu"
+    if name in ("geglu", "gelu"):
+        return "gelu"
+    return name
+
+
+def activation_sites(cfg: ArchConfig) -> list[tuple[str, str]]:
+    """``(site, act)`` kinds per layer for one architecture family.
+
+    ``site`` is the table key the nn layer resolves at runtime
+    (``repro.nn.mlp.site_tables``): ``"mlp"`` for dense FFN blocks,
+    ``"expert"`` for the MoE per-expert activation, ``"ffn"`` for the RWKV
+    channel-mix squared-ReLU.
+    """
+    act = base_activation(cfg.activation)
+    if cfg.family == "moe" or cfg.moe is not None:
+        sites = [("expert", "silu")]
+        if cfg.moe is not None and cfg.moe.n_shared:
+            sites.append(("mlp", act))
+        return sites
+    if cfg.family == "ssm":
+        return [("ffn", "relu2")]
+    # dense / vlm / hybrid / encdec all route their FFN through mlp_block
+    return [("mlp", act)]
+
+
+@dataclasses.dataclass
+class SitePlan:
+    """One site kind's served table (shared by every layer's site)."""
+
+    site: str
+    act: str
+    lut: LUTActivation
+    n_sites: int          # how many per-layer sites share this table
+
+    def entry(self) -> dict:
+        """The ``{"meta", "arrays"}`` dict the nn layer consumes."""
+        return {"meta": self.lut.meta(),
+                "arrays": PlanArrays.from_plan(self.lut.plan).arrays}
+
+
+@dataclasses.dataclass
+class ServingPlans:
+    """Device-ready compressed-activation tables for one architecture."""
+
+    arch: str
+    family: str
+    report: CompressReport
+    sites: dict[str, SitePlan]
+    backend: str = "gather"
+
+    def tables_for_model(self, backend: str | None = None) -> dict:
+        """The ``lut_tables`` dict threaded through decode/prefill/batcher."""
+        return {
+            "backend": backend or self.backend,
+            "sites": {k: sp.entry() for k, sp in self.sites.items()},
+        }
+
+    def patched_config(self, cfg: ArchConfig) -> ArchConfig:
+        return dataclasses.replace(cfg, lut_activation=True)
+
+    @property
+    def total_cost(self) -> int:
+        return sum(sp.lut.plan.plut_cost() for sp in self.sites.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{sp.site}({sp.act}): {sp.lut.plan.plut_cost()} P-LUTs, "
+            f"{sp.lut.dontcare_frac:.0%} don't-care, "
+            f"shared by {sp.n_sites} sites"
+            for sp in self.sites.values()
+        ]
+        return (f"{self.arch} [{self.family}] serving plans — "
+                + "; ".join(parts)
+                + f" | engine: {self.report.summary()}")
+
+
+def build_serving_plans(
+    cfg: ArchConfig,
+    calibration: np.ndarray,
+    *,
+    w_in: int | None = None,
+    w_out: int | None = None,
+    x_lo: float = -8.0,
+    x_hi: float = 8.0,
+    compress_cfg: CompressConfig | None = None,
+    workers: int | None = None,
+    backend: str = "gather",
+    verbose: bool = False,
+) -> ServingPlans:
+    """Compress every activation site of ``cfg`` into serving tables.
+
+    One :class:`TableSpec` is built per (layer, site kind); with a shared
+    calibration set the per-layer tables are identical and the engine's
+    dedupe compresses each unique table once (``report.dedup_rate`` is
+    (L-1)/L per site kind — the ROADMAP duplicate-sharing item).
+    """
+    w_in = w_in or cfg.lut_act_bits_in
+    w_out = w_out or cfg.lut_act_bits_out
+    kinds = activation_sites(cfg)
+    # Tabulate + calibrate once per distinct activation function — the
+    # per-layer specs are renamed views of the same table (shared
+    # calibration), so there is no reason to re-histogram the calibration
+    # array per layer just to feed tables the engine dedupe collapses.
+    by_act: dict[str, tuple[TableSpec, dict]] = {}
+    for _, act in kinds:
+        if act not in by_act:
+            by_act[act] = activation_table(
+                act, calibration, w_in=w_in, w_out=w_out,
+                x_lo=x_lo, x_hi=x_hi, name=f"act_{act}")
+    specs: list[TableSpec] = []
+    metas: list[tuple[str, str, dict]] = []
+    for layer in range(cfg.n_layers):
+        for site, act in kinds:
+            spec, quant = by_act[act]
+            specs.append(dataclasses.replace(spec, name=f"L{layer}/{site}"))
+            metas.append((site, act, quant))
+    ccfg = compress_cfg or CompressConfig(**DEFAULT_COMPRESS)
+    report = compress_network_report(specs, ccfg, workers=workers,
+                                     verbose=verbose)
+    sites: dict[str, SitePlan] = {}
+    for (site, act, quant), spec, plan in zip(metas, specs, report.plans):
+        if site in sites:
+            sites[site].n_sites += 1
+            continue
+        lut = lut_activation_from_plan(plan, spec, quant, x_lo=x_lo,
+                                       x_hi=x_hi, exiguity=ccfg.exiguity)
+        sites[site] = SitePlan(site=site, act=act, lut=lut, n_sites=1)
+    return ServingPlans(arch=cfg.name, family=cfg.family, report=report,
+                        sites=sites, backend=backend)
+
+
+def verify_backend_equivalence(
+    cfg: ArchConfig,
+    params,
+    plans: ServingPlans,
+    prompt: np.ndarray,      # (B, T) int32
+    n_new: int,
+    max_seq: int | None = None,
+) -> list[list[int]]:
+    """Decode ``n_new`` greedy tokens with the gather backend and the fused
+    Pallas backend and assert they bit-match token-for-token.
+
+    Both backends run identical integer reconstruction math and the same
+    float dequantization expression, so the served logits — and therefore
+    every sampled token — must agree exactly.  Returns the (B, n_new)
+    token lists on success; raises ``AssertionError`` on the first
+    diverging token.
+    """
+    from .decode import decode_step, prefill
+
+    cfg = plans.patched_config(cfg)
+    b, t = prompt.shape
+    max_seq = max_seq or (t + n_new)
+    outs: dict[str, list[list[int]]] = {}
+    for backend in ("gather", "pallas"):
+        tables = plans.tables_for_model(backend=backend)
+        lg, cache = jax.jit(
+            lambda p, x: prefill(p, cfg, x, max_seq=max_seq,
+                                 lut_tables=tables))(
+            params, {"tokens": jnp.asarray(prompt, jnp.int32)})
+        step = jax.jit(lambda p, c, tk, pos: decode_step(
+            p, cfg, c, tk, pos, lut_tables=tables))
+        tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        toks = []
+        for i in range(n_new):
+            toks.append(np.asarray(tok)[:, 0].tolist())
+            lg, cache = step(params, cache, tok, jnp.asarray(t + i))
+            tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        outs[backend] = [[toks[i][r] for i in range(n_new)]
+                         for r in range(b)]
+    for r, (a, bb) in enumerate(zip(outs["gather"], outs["pallas"])):
+        assert a == bb, (
+            f"backend divergence on request {r}: gather={a} pallas={bb}")
+    return outs["gather"]

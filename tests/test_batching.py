@@ -54,6 +54,94 @@ def test_batcher_completes_all_requests(model):
     assert 0 < b.utilization <= 1.0
 
 
+def test_slot_fills_to_max_seq(model):
+    """Regression: a slot may decode until its position reaches max_seq
+    (the last cache row is usable); eviction fires exactly at the cache
+    boundary instead of one row early, and never lets a write get clamped
+    out of bounds."""
+    cfg, params = model
+    rng = np.random.default_rng(2)
+    max_seq = 8
+    prompt = list(rng.integers(1, cfg.vocab_size, 5))
+    b = ContinuousBatcher(cfg, params, batch_size=1, max_seq=max_seq,
+                          eos_token=-1)
+    b.submit(Request(rid=0, prompt=prompt, max_new=100))  # cache-bound
+    done = b.run()
+    assert len(done) == 1 and done[0].done
+    # positions 0..max_seq-1 all written: len(prompt) prompt tokens plus
+    # (max_seq - len(prompt)) decode writes; one output per write from the
+    # final prompt position on.
+    assert len(done[0].out) == max_seq - len(prompt) + 1
+    assert all(s.req is None for s in b.slots)
+
+
+def test_prompt_longer_than_cache_truncates(model):
+    """A prompt that alone overflows the cache is truncated and evicted
+    (previously the slot was never evicted and kept clamp-writing into the
+    last row, corrupting other slots)."""
+    cfg, params = model
+    rng = np.random.default_rng(3)
+    max_seq = 8
+    long_prompt = list(rng.integers(1, cfg.vocab_size, max_seq + 4))
+    short_prompt = list(rng.integers(1, cfg.vocab_size, 3))
+    ref = _greedy_reference(cfg, params, short_prompt, 3, max_seq)
+
+    b = ContinuousBatcher(cfg, params, batch_size=2, max_seq=max_seq,
+                          eos_token=-1)
+    b.submit(Request(rid=0, prompt=long_prompt, max_new=4))
+    b.submit(Request(rid=1, prompt=short_prompt, max_new=3))
+    done = sorted(b.run(), key=lambda r: r.rid)
+    assert len(done) == 2
+    assert done[0].done  # truncated, not stuck
+    # the well-formed request is unaffected by its neighbor hitting the
+    # cache boundary
+    assert done[1].out == ref
+
+
+def test_eos_eviction_and_slot_refill(model):
+    """EOS evicts a request early and the freed slot picks up queued work."""
+    cfg, params = model
+    rng = np.random.default_rng(4)
+    prompt = list(rng.integers(1, cfg.vocab_size, 4))
+    # learn what the model will emit first, then declare it the EOS token
+    probe = _greedy_reference(cfg, params, prompt, 1, 32)
+    eos = probe[0]
+
+    b = ContinuousBatcher(cfg, params, batch_size=1, max_seq=32,
+                          eos_token=eos)
+    b.submit(Request(rid=0, prompt=prompt, max_new=10))
+    other = list(rng.integers(1, cfg.vocab_size, 3))
+    b.submit(Request(rid=1, prompt=other, max_new=2))
+    done = sorted(b.run(), key=lambda r: r.rid)
+    assert len(done) == 2  # the single slot was refilled from the queue
+    assert done[0].out == [eos]  # stopped at EOS, not at max_new
+    assert len(done[1].out) == 2
+
+
+def test_utilization_accounting(model):
+    """utilization == active-slot work / (ticks * slots), exactly."""
+    cfg, params = model
+    rng = np.random.default_rng(5)
+    prompts = [list(rng.integers(1, cfg.vocab_size, 4)) for _ in range(2)]
+
+    # both slots busy on every tick (same prompt length, same max_new)
+    b = ContinuousBatcher(cfg, params, batch_size=2, max_seq=16,
+                          eos_token=-1)
+    for i, p in enumerate(prompts):
+        b.submit(Request(rid=i, prompt=p, max_new=3))
+    b.run()
+    assert b.utilization == 1.0
+    assert b.active_slot_steps == b.steps * 2
+
+    # one busy slot of two => utilization 0.5
+    b2 = ContinuousBatcher(cfg, params, batch_size=2, max_seq=16,
+                           eos_token=-1)
+    b2.submit(Request(rid=0, prompt=prompts[0], max_new=3))
+    b2.run()
+    assert b2.utilization == 0.5
+    assert b2.active_slot_steps == b2.steps
+
+
 def test_batcher_matches_single_request_decode(model):
     """Staggered multi-request batching must not change any request's
     greedy output (cache isolation across slots and positions)."""

@@ -1,0 +1,235 @@
+"""Compressed-serving plan layer: engine dedupe, site materialization,
+backend bit-equivalence, batcher integration, and the serving-layer
+degenerate-input / kernel-grid guards."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core import CompressConfig, TableSpec, compress_network_report
+from repro.kernels.lut_act import lut_act_pallas
+from repro.kernels.lut_gather import lut_reconstruct_pallas, plain_lookup_pallas
+from repro.kernels.ops import PlanArrays, lut_reconstruct
+from repro.nn import init_params
+from repro.nn.lut_act import build_lut_activation, calibrate_bins
+from repro.serve import (
+    ContinuousBatcher,
+    Request,
+    activation_sites,
+    build_serving_plans,
+    decode_step,
+    init_cache,
+    verify_backend_equivalence,
+)
+
+RNG = np.random.default_rng(0)
+CALIB = RNG.normal(size=60000) * 3
+
+
+# =========================================================================
+# engine dedupe
+# =========================================================================
+def test_network_dedupe_shares_identical_tables():
+    base = TableSpec.random(8, 5, 0.4, seed=1, smooth=True, name="a")
+    dup = TableSpec(base.values.copy(), 8, 5, care=base.care.copy(),
+                    name="b")
+    other = TableSpec.random(8, 5, 0.4, seed=2, smooth=True, name="c")
+    rep = compress_network_report([base, dup, other],
+                                  CompressConfig(exiguity=250))
+    assert rep.n_unique == 2
+    assert rep.dedup_hits == 1
+    assert rep.dedup_rate == pytest.approx(1 / 3)
+    assert [t.name for t in rep.tables] == ["a", "b", "c"]
+    assert [p.name for p in rep.plans] == ["a", "b", "c"]
+    # shared result is bit-identical across duplicate sites
+    np.testing.assert_array_equal(rep.plans[0].reconstruct(),
+                                  rep.plans[1].reconstruct())
+    assert rep.tables[0].cost == rep.tables[1].cost
+    assert rep.tables[1].seconds == 0.0  # served from the shared search
+    assert "dedupe" in rep.summary()
+
+
+def test_network_dedupe_off_matches_on():
+    specs = [TableSpec.random(7, 5, 0.3, seed=i % 2, smooth=True,
+                              name=f"t{i}") for i in range(4)]
+    cfg = CompressConfig(exiguity=250)
+    rep_on = compress_network_report(specs, cfg, dedupe=True)
+    rep_off = compress_network_report(specs, cfg, dedupe=False)
+    assert rep_on.n_unique == 2 and rep_off.n_unique == len(specs)
+    assert rep_off.dedup_hits == 0
+    for a, b in zip(rep_on.plans, rep_off.plans):
+        assert a.plut_cost() == b.plut_cost()
+        np.testing.assert_array_equal(a.reconstruct(), b.reconstruct())
+
+
+def test_dedupe_distinguishes_care_masks():
+    """Same values, different care => different tables (not shared)."""
+    values = np.arange(256, dtype=np.int64) % 32
+    care_a = np.ones(256, bool)
+    care_b = np.ones(256, bool)
+    care_b[:64] = False
+    specs = [TableSpec(values, 8, 5, care=care_a, name="a"),
+             TableSpec(values, 8, 5, care=care_b, name="b")]
+    rep = compress_network_report(specs, CompressConfig(exiguity=250))
+    assert rep.n_unique == 2 and rep.dedup_hits == 0
+
+
+# =========================================================================
+# serving plans
+# =========================================================================
+def test_activation_sites_per_family():
+    assert activation_sites(smoke_config(get_config("qwen3-0.6b"))) == [
+        ("mlp", "silu")]
+    assert activation_sites(smoke_config(get_config("rwkv6-3b"))) == [
+        ("ffn", "relu2")]
+    moe_sites = activation_sites(smoke_config(get_config("deepseek-moe-16b")))
+    assert ("expert", "silu") in moe_sites
+
+
+def test_build_serving_plans_dedupes_layers():
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    plans = build_serving_plans(cfg, CALIB, w_in=8, w_out=8)
+    rep = plans.report
+    assert len(rep.tables) == cfg.n_layers  # one spec per layer site
+    assert rep.n_unique == 1                # identical across layers
+    assert rep.dedup_hits == cfg.n_layers - 1
+    assert rep.dedup_rate == pytest.approx((cfg.n_layers - 1) / cfg.n_layers)
+    tabs = plans.tables_for_model()
+    assert set(tabs["sites"]) == {"mlp"}
+    entry = tabs["sites"]["mlp"]
+    assert {"t_ust", "t_idx", "t_rsh", "t_bias", "t_lb"} <= set(
+        entry["arrays"])
+    assert entry["meta"]["w_in"] == 8
+    assert plans.patched_config(cfg).lut_activation
+    assert "serving plans" in plans.summary()
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "deepseek-moe-16b",
+                                  "rwkv6-3b"])
+def test_backend_equivalence_token_for_token(arch):
+    """The served Pallas path bit-matches the reference gather path."""
+    cfg = smoke_config(get_config(arch))
+    plans = build_serving_plans(cfg, CALIB, w_in=8, w_out=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.asarray(
+        RNG.integers(1, cfg.vocab_size, (2, 5)), np.int32)
+    toks = verify_backend_equivalence(cfg, params, plans, prompt, 3)
+    assert len(toks) == 2 and all(len(t) == 3 for t in toks)
+
+
+def test_batcher_serves_lut_plans():
+    """ContinuousBatcher with serving plans matches the raw decode loop
+    run with the same tables (the batcher no longer drops lut_tables)."""
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    plans = build_serving_plans(cfg, CALIB, w_in=8, w_out=8)
+    cfg_lut = plans.patched_config(cfg)
+    tables = plans.tables_for_model()
+    prompt = list(RNG.integers(1, cfg.vocab_size, 4))
+
+    # reference: single-request decode-only loop with the same tables
+    cache = init_cache(cfg_lut, 1, 16)
+    step = jax.jit(lambda p, c, t, pos: decode_step(
+        p, cfg_lut, c, t, pos, lut_tables=tables))
+    out = []
+    for pos in range(4 + 3 - 1):
+        t = prompt[pos] if pos < len(prompt) else out[-1]
+        lg, cache = step(params, cache, jnp.asarray([[t]], jnp.int32),
+                         jnp.asarray(pos))
+        nxt = int(jnp.argmax(lg[0, -1]))
+        if pos >= len(prompt) - 1:
+            out.append(nxt)
+
+    b = ContinuousBatcher(cfg_lut, params, batch_size=2, max_seq=16,
+                          eos_token=-1, lut_tables=tables)
+    b.submit(Request(rid=0, prompt=prompt, max_new=3))
+    done = b.run()
+    assert done[0].out == out
+
+    # and the LUT tables actually change the served tokens vs plain
+    b2 = ContinuousBatcher(cfg, params, batch_size=2, max_seq=16,
+                           eos_token=-1)
+    b2.submit(Request(rid=0, prompt=prompt, max_new=3))
+    b2.run()  # no assertion on inequality (could coincide); just exercises
+
+
+# =========================================================================
+# degenerate calibration guards
+# =========================================================================
+def test_calibrate_bins_rejects_empty():
+    with pytest.raises(ValueError, match="empty"):
+        calibrate_bins(np.array([]), 8, -8.0, 8.0)
+
+
+def test_calibrate_bins_rejects_constant():
+    with pytest.raises(ValueError, match="constant"):
+        calibrate_bins(np.full(1000, 1.5), 8, -8.0, 8.0)
+
+
+def test_calibrate_bins_rejects_bad_range():
+    with pytest.raises(ValueError, match="range"):
+        calibrate_bins(np.ones(10), 8, 8.0, 8.0)
+    with pytest.raises(ValueError, match="range"):
+        build_lut_activation("silu", x_lo=2.0, x_hi=-2.0)
+
+
+def test_calibrate_bins_rejects_all_nonfinite():
+    with pytest.raises(ValueError, match="empty"):
+        calibrate_bins(np.full(16, np.nan), 8, -8.0, 8.0)
+
+
+def test_y_range_over_care_bins_only():
+    """Don't-care bins must not widen the output quantization grid: exp()
+    over [-8, 8] spans ~3000, but with calibration confined to [-2, 0]
+    the served range stays near [exp(-2), exp(0)]."""
+    calib = RNG.uniform(-2.0, 0.0, size=20000)
+    lut = build_lut_activation("exp", calib, w_in=8, w_out=8,
+                               x_lo=-8.0, x_hi=8.0)
+    assert lut.y_hi < 2.0, lut.y_hi
+    assert lut.y_lo >= 0.0
+    assert 0.0 < lut.dontcare_frac < 1.0
+
+
+# =========================================================================
+# kernel grid guards (rows % block_rows)
+# =========================================================================
+def _decomposed_arrays():
+    lut = build_lut_activation("silu", CALIB, w_in=8, w_out=8)
+    return lut.plan_arrays()
+
+
+def test_pallas_kernels_reject_row_remainder():
+    pa = _decomposed_arrays()
+    a = pa.arrays
+    x9 = jnp.zeros((9, 128), jnp.int32)  # 9 % 8 != 0
+    with pytest.raises(ValueError, match="block_rows"):
+        lut_reconstruct_pallas(x9, a["t_ust"], a["t_idx"], a["t_rsh"],
+                               a["t_bias"], a["t_lb"], l=pa.l,
+                               w_lb=pa.w_lb, w_hb=pa.w_hb, interpret=True)
+    with pytest.raises(ValueError, match="block_rows"):
+        plain_lookup_pallas(x9, jnp.zeros(256, jnp.int32), interpret=True)
+    with pytest.raises(ValueError, match="block_rows"):
+        lut_act_pallas(jnp.zeros((9, 128), jnp.float32), a["t_ust"],
+                       a["t_idx"], a["t_rsh"], a["t_bias"], a["t_lb"],
+                       l=pa.l, w_lb=pa.w_lb, w_hb=pa.w_hb, w_in=8, w_out=8,
+                       x_lo=-8.0, x_hi=8.0, y_lo=0.0, y_hi=1.0,
+                       interpret=True)
+
+
+def test_ops_wrapper_pads_non_multiple_rows():
+    """The public wrapper pads internally, so awkward sizes (n not a
+    multiple of 8*128) evaluate every element instead of dropping the
+    tail."""
+    spec = TableSpec.random(8, 6, 0.0, seed=7, smooth=True)
+    from repro.core import compress_table
+
+    plan = compress_table(spec, CompressConfig(exiguity=250))
+    pa = PlanArrays.from_plan(plan)
+    # 1300 elements => 11 rows of 128 lanes, padded up to 16 block rows
+    x = jnp.asarray(RNG.integers(0, 256, size=1300), jnp.int32)
+    got = np.asarray(lut_reconstruct(x, pa, interpret=True))
+    want = plan.reconstruct()[np.asarray(x)]
+    np.testing.assert_array_equal(got, want)
