@@ -2,14 +2,17 @@
 
 Measures, per architecture family (dense / moe / ssm by default):
   - prefill latency (compile and steady-state),
-  - decode tokens/sec for plain activations, the gather-backend LUT path
-    and the fused-Pallas LUT path,
+  - decode tokens/sec for plain activations and, per calibration mode
+    (``calib=shared|per_site``), the gather-backend LUT path and the
+    fused-Pallas LUT path,
   - the engine plan stats behind the served tables (P-LUT cost, saved
-    fraction, dedupe hit-rate),
+    fraction, dedupe hit-rate — ``per_site`` captures real per-layer
+    activations through repro.calib, so dedupe stops collapsing the
+    layers and the shared-vs-per-site total plan cost is comparable),
 and runs the backend equivalence harness (gather vs pallas decode must
-bit-match token-for-token) before timing anything.
+bit-match token-for-token) per calibration mode before timing anything.
 
-Writes the trajectory file ``BENCH_serve.json`` (schema: serve_bench/v1).
+Writes the trajectory file ``BENCH_serve.json`` (schema: serve_bench/v2).
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
   PYTHONPATH=src python benchmarks/serve_bench.py \
@@ -26,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.calib import capture_calibration, synthetic_batches
 from repro.configs import ARCH_NAMES, get_config, smoke_config
 from repro.nn import init_params
 from repro.serve import (
@@ -40,15 +44,10 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 
 
 def _make_batch(cfg, rng, b, t):
-    batch = {"tokens": jnp.asarray(
-        rng.integers(1, cfg.vocab_size, (b, t)), jnp.int32)}
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.asarray(
-            rng.normal(size=(b, cfg.n_patches, cfg.d_model)), jnp.float32)
-    if cfg.family == "encdec":
-        batch["frames"] = jnp.asarray(
-            rng.normal(size=(b, cfg.n_frames, cfg.d_model)), jnp.float32)
-    return batch
+    from repro.calib import model_batch
+
+    return {k: jnp.asarray(v) for k, v in
+            model_batch(cfg, rng, b, t).items()}
 
 
 def _time_mode(cfg, params, batch, *, max_seq, n_new, lut_tables):
@@ -90,8 +89,30 @@ def _time_mode(cfg, params, batch, *, max_seq, n_new, lut_tables):
     }
 
 
+def _plan_stats(plans) -> dict:
+    rep = plans.report
+    return {
+        "sites": sorted(plans.sites),
+        "calib": plans.calib,
+        "per_layer": plans.per_layer,
+        "total_cost": rep.total_cost,
+        "total_plain_cost": rep.total_plain_cost,
+        "served_cost": plans.total_cost,   # tables the runtime holds
+        "saved_frac": round(rep.saved_frac, 4),
+        "n_tables": len(rep.tables),
+        "n_unique": rep.n_unique,
+        "dedup_hits": rep.dedup_hits,
+        "dedup_rate": round(rep.dedup_rate, 4),
+        "compress_s": round(rep.seconds, 3),
+        "dontcare_frac": {
+            k: round(sp.dontcare_frac, 4)
+            for k, sp in plans.sites.items()},
+    }
+
+
 def bench_arch(arch: str, *, batch: int, prompt_len: int, n_new: int,
-               full: bool, workers: int | None) -> dict:
+               full: bool, workers: int | None,
+               calib_steps: int) -> dict:
     cfg = get_config(arch)
     if not full:
         cfg = smoke_config(cfg)
@@ -100,52 +121,51 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, n_new: int,
     b, t = batch, prompt_len
     max_seq = t + n_new + 1
     bt = _make_batch(cfg, rng, b, t)
-
-    calib = rng.normal(size=100000) * 3
-    plans = build_serving_plans(cfg, calib, workers=workers)
-    rep = plans.report
-    lut_cfg = plans.patched_config(cfg)
-
-    # Equivalence harness first: gather and pallas decode must bit-match.
     prompt = np.asarray(bt["tokens"])
-    equivalence_ok = False
-    if cfg.family not in ("vlm", "encdec"):  # prefill needs extra inputs
-        verify_backend_equivalence(cfg, params, plans, prompt,
-                                   min(n_new, 4), max_seq=max_seq)
-        equivalence_ok = True
+
+    # calibration axis: one shared synthetic sample set vs per-site
+    # observed-pattern masks captured from real per-layer activations
+    calibrations = {"shared": rng.normal(size=100000) * 3}
+    if cfg.family != "encdec":  # encdec capture has no per-layer identity
+        calibrations["per_site"] = capture_calibration(
+            params, cfg, synthetic_batches(cfg, calib_steps, batch_size=b,
+                                           seq_len=t, seed=1),
+            w_in=cfg.lut_act_bits_in)
 
     out = {
         "family": cfg.family,
         "plain": _time_mode(cfg, params, bt, max_seq=max_seq, n_new=n_new,
                             lut_tables=None),
-        "lut_gather": _time_mode(
-            lut_cfg, params, bt, max_seq=max_seq, n_new=n_new,
-            lut_tables=plans.tables_for_model(backend="gather")),
-        "lut_pallas": _time_mode(
-            lut_cfg, params, bt, max_seq=max_seq, n_new=n_new,
-            lut_tables=plans.tables_for_model(backend="pallas")),
-        "equivalence_ok": equivalence_ok,
-        "plans": {
-            "sites": sorted(plans.sites),
-            "total_cost": rep.total_cost,
-            "total_plain_cost": rep.total_plain_cost,
-            "saved_frac": round(rep.saved_frac, 4),
-            "n_tables": len(rep.tables),
-            "n_unique": rep.n_unique,
-            "dedup_hits": rep.dedup_hits,
-            "dedup_rate": round(rep.dedup_rate, 4),
-            "compress_s": round(rep.seconds, 3),
-            "dontcare_frac": {
-                k: round(sp.lut.dontcare_frac, 4)
-                for k, sp in plans.sites.items()},
-        },
+        "calib": {},
     }
-    # the LUT paths must bit-match each other token-for-token
-    assert (out["lut_gather"]["tokens_req0"]
-            == out["lut_pallas"]["tokens_req0"]), (
-        "gather/pallas decode diverged: "
-        f"{out['lut_gather']['tokens_req0']} vs "
-        f"{out['lut_pallas']['tokens_req0']}")
+    for mode, calib in calibrations.items():
+        plans = build_serving_plans(cfg, calib, workers=workers)
+        lut_cfg = plans.patched_config(cfg)
+
+        # Equivalence harness first: gather/pallas decode must bit-match.
+        equivalence_ok = False
+        if cfg.family not in ("vlm", "encdec"):  # prefill extra inputs
+            verify_backend_equivalence(cfg, params, plans, prompt,
+                                       min(n_new, 4), max_seq=max_seq)
+            equivalence_ok = True
+
+        res = {
+            "lut_gather": _time_mode(
+                lut_cfg, params, bt, max_seq=max_seq, n_new=n_new,
+                lut_tables=plans.tables_for_model(backend="gather")),
+            "lut_pallas": _time_mode(
+                lut_cfg, params, bt, max_seq=max_seq, n_new=n_new,
+                lut_tables=plans.tables_for_model(backend="pallas")),
+            "equivalence_ok": equivalence_ok,
+            "plans": _plan_stats(plans),
+        }
+        # the LUT paths must bit-match each other token-for-token
+        assert (res["lut_gather"]["tokens_req0"]
+                == res["lut_pallas"]["tokens_req0"]), (
+            f"gather/pallas decode diverged [{mode}]: "
+            f"{res['lut_gather']['tokens_req0']} vs "
+            f"{res['lut_pallas']['tokens_req0']}")
+        out["calib"][mode] = res
     return out
 
 
@@ -161,6 +181,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full (non-smoke) model configs")
     ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--calib-steps", type=int, default=2,
+                    help="capture batches for the per_site calib mode")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args()
     if args.smoke:
@@ -172,11 +194,12 @@ def main() -> None:
             raise SystemExit(f"unknown arch {a!r}; have {sorted(ARCH_NAMES)}")
 
     results = {
-        "schema": "serve_bench/v1",
+        "schema": "serve_bench/v2",
         "scale": "full" if args.full else "smoke",
         "batch": args.batch,
         "prompt_len": args.prompt_len,
         "new_tokens": args.new_tokens,
+        "calib_steps": args.calib_steps,
         "backend": jax.default_backend(),
         "archs": {},
     }
@@ -184,15 +207,19 @@ def main() -> None:
         t0 = time.perf_counter()
         res = bench_arch(arch, batch=args.batch, prompt_len=args.prompt_len,
                          n_new=args.new_tokens, full=args.full,
-                         workers=args.workers)
+                         workers=args.workers, calib_steps=args.calib_steps)
         res["wall_s"] = round(time.perf_counter() - t0, 2)
         results["archs"][arch] = res
         fam = res["family"]
-        print(f"{arch} [{fam}]: plain {res['plain']['decode_tok_s']} tok/s | "
-              f"lut-gather {res['lut_gather']['decode_tok_s']} tok/s | "
-              f"lut-pallas {res['lut_pallas']['decode_tok_s']} tok/s | "
-              f"dedupe {res['plans']['dedup_rate']:.0%} | "
-              f"equivalence={'ok' if res['equivalence_ok'] else 'skipped'}")
+        for mode, r in res["calib"].items():
+            print(f"{arch} [{fam}] calib={mode}: "
+                  f"plain {res['plain']['decode_tok_s']} tok/s | "
+                  f"lut-gather {r['lut_gather']['decode_tok_s']} tok/s | "
+                  f"lut-pallas {r['lut_pallas']['decode_tok_s']} tok/s | "
+                  f"dedupe {r['plans']['dedup_rate']:.0%} | "
+                  f"plan cost {r['plans']['served_cost']} | "
+                  f"equivalence="
+                  f"{'ok' if r['equivalence_ok'] else 'skipped'}")
 
     families = {r["family"] for r in results["archs"].values()}
     print(f"{len(results['archs'])} archs over {len(families)} families "

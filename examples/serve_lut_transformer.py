@@ -1,27 +1,31 @@
 """Serve a small transformer with ReducedLUT-compressed activations.
 
-The paper's technique as a serving feature: the MLP nonlinearity is
-replaced by a quantize -> compressed-table -> dequantize evaluation whose
-table was compressed with don't cares mined from calibration batches.
-Batched requests run through prefill + decode; outputs are compared
-against the exact-activation model.
+The paper's technique as a serving feature: each layer's MLP nonlinearity
+is replaced by a quantize -> compressed-table -> dequantize evaluation
+whose table was compressed with don't cares mined from that *site's own*
+observed input patterns (repro.calib streaming capture — the per-site
+analogue of paper SS4.1's unobserved-training-pattern rule).  Batched
+requests run through prefill + decode; outputs are compared against the
+exact-activation model and the gather/pallas backends are asserted
+bit-identical.
 
 Run:  PYTHONPATH=src python examples/serve_lut_transformer.py
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.calib import capture_calibration, synthetic_batches
 from repro.configs import get_config, smoke_config
-from repro.core import rom_baseline_cost
-from repro.core.table import TableSpec
 from repro.nn import init_params
-from repro.nn.lut_act import build_lut_activation
 from repro.nn.transformer import decoder_forward
 from repro.nn.layers import logits_projection
-from repro.serve import decode_step, prefill
+from repro.serve import (
+    build_serving_plans,
+    decode_step,
+    prefill,
+    verify_backend_equivalence,
+)
 
 B, T, NEW = 4, 48, 8
 
@@ -32,34 +36,28 @@ def main() -> None:
     rng = np.random.default_rng(0)
     tokens = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, T)), jnp.int32)
 
-    # 1. calibration: collect pre-activation values from a few batches
-    print("1. calibrating activation range on sample traffic")
-    from repro.nn.mlp import mlp_block  # noqa: F401  (same path the model uses)
-    acts = []
+    # 1. per-site calibration: stream batches through the exact model and
+    #    record every layer's observed pre-activation bins
+    print("1. capturing per-site activation patterns on sample traffic")
+    batches = synthetic_batches(cfg, steps=4, batch_size=B, seq_len=T,
+                                seed=1)
+    calib = capture_calibration(params, cfg, batches)
+    print(f"   {calib.summary()}")
 
-    def probe(p, toks):
-        x, _, _ = decoder_forward(p, cfg, toks)
-        return x
+    # 2. compress every (layer, site) table with its own don't cares
+    print("2. building per-site ReducedLUT serving plans")
+    plans = build_serving_plans(cfg, calib)
+    rep = plans.report
+    print(f"   {plans.summary()}")
+    print(f"   dedupe: {rep.n_unique} unique tables / {len(rep.tables)} "
+          f"sites (rate {rep.dedup_rate:.0%} — per-site masks keep "
+          f"layers distinct)")
 
-    # use gate pre-activations ~ N(0, 1): sample hidden stream directly
-    h = probe(params, tokens)
-    acts.append(np.asarray(h.astype(jnp.float32)).reshape(-1))
-    calib = np.concatenate(acts)
-
-    # 2. build + compress the activation table with don't cares
-    print("2. building ReducedLUT-compressed SiLU table")
-    lut = build_lut_activation("silu", calib, w_in=10, w_out=10,
-                               x_lo=-8.0, x_hi=8.0, exiguity=250)
-    plain = rom_baseline_cost(TableSpec(
-        lut.plan.reconstruct(), lut.w_in, lut.w_out))
-    print(f"   don't-care bins: {lut.dontcare_frac:.1%}  "
-          f"P-LUTs: plain {plain} -> compressed {lut.plan.plut_cost()}")
-
-    lut_tables = lut.tables_for_model()
-    cfg_lut = dataclasses.replace(cfg, lut_activation=True)
+    lut_tables = plans.tables_for_model()
+    cfg_lut = plans.patched_config(cfg)
 
     # 3. exact vs LUT-activation forward
-    print("3. comparing logits (exact vs LUT activation)")
+    print("3. comparing logits (exact vs per-site LUT activations)")
     x_exact, _, _ = decoder_forward(params, cfg, tokens)
     x_lut, _, _ = decoder_forward(params, cfg_lut, tokens,
                                   lut_tables=lut_tables)
@@ -68,12 +66,21 @@ def main() -> None:
     agree = float(jnp.mean(jnp.argmax(lg_e, -1) == jnp.argmax(lg_l, -1)))
     print(f"   argmax agreement over {B}x{T} positions: {agree:.3f}")
 
-    # 4. batched serving: prefill + greedy decode
-    print(f"4. serving {B} requests: prefill {T} tokens + {NEW} decode steps")
+    # 4. the fused Pallas path must bit-match the gather reference
+    print("4. verifying gather/pallas backend bit-equivalence")
+    verify_backend_equivalence(cfg, params, plans,
+                               np.asarray(tokens)[:, :8], 3)
+    print("   token-for-token identical")
+
+    # 5. batched serving: prefill + greedy decode with the LUT tables
+    print(f"5. serving {B} requests: prefill {T} tokens + {NEW} decode "
+          f"steps")
     logits, cache = jax.jit(
-        lambda p, b: prefill(p, cfg, b, max_seq=T + NEW))(
+        lambda p, b: prefill(p, cfg_lut, b, max_seq=T + NEW,
+                             lut_tables=lut_tables))(
             params, {"tokens": tokens})
-    step = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+    step = jax.jit(lambda p, c, t, pos: decode_step(
+        p, cfg_lut, c, t, pos, lut_tables=lut_tables))
     out_tokens = []
     tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
     for i in range(NEW):

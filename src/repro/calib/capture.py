@@ -1,0 +1,201 @@
+"""Streaming per-site activation capture (paper SS4.1, serving-side).
+
+The paper injects don't cares for input patterns *unobserved in the
+training data*.  For the LM serving stack the analogous signal is the
+per-activation-site input distribution: every layer's nonlinearity sees a
+different distribution, so every (layer, site) pair earns its own
+observed-bin mask — the freedom the compressor exploits per table.
+
+This module is the front end of that pipeline:
+
+1. :class:`ActivationCapture` — a context manager that, while active,
+   makes every ``repro.nn.mlp.make_activation`` call site stream its
+   pre-activation inputs into a per-site histogram (one ``2**w_in``-bin
+   count vector per ``L{layer}/{site}`` key).  Accumulation is host-side
+   numpy; traced values reach the host through ``jax.debug.callback``, so
+   capture is jit-/scan-safe, and concrete (eager) values take a direct
+   path.
+2. Layer identity — while a capture is active the layer stacks unroll
+   (``repro.nn.mlp.run_layers``) so each call site knows its layer index;
+   families whose loops are not unrolled (encdec) fall back to one
+   site-level histogram shared by all layers.
+3. :func:`capture_model` — two-pass eval driver: stream calibration
+   batches through the exact (non-LUT) forward of any architecture family
+   and return the filled capture.  Masks/smoothing live in
+   :mod:`repro.calib.masks`; persistence in :mod:`repro.calib.store`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+# Active captures, innermost last.  JAX tracing is single-threaded per
+# process and capture is an eval-time tool, so a plain module-level stack
+# (rather than a contextvar) is sufficient and keeps the hot check cheap.
+_STACK: list["ActivationCapture"] = []
+
+
+def capture_active() -> bool:
+    """True while any :class:`ActivationCapture` context is entered."""
+    return bool(_STACK)
+
+
+def current() -> "ActivationCapture | None":
+    return _STACK[-1] if _STACK else None
+
+
+def site_key(site: str, layer: int | None = None) -> str:
+    """Canonical per-site key: ``"L{layer}/{site}"``, or the bare site kind
+    when no layer identity is available.  Matches the ``TableSpec`` names
+    :func:`repro.serve.plans.build_serving_plans` assigns."""
+    return site if layer is None else f"L{layer}/{site}"
+
+
+class ActivationCapture:
+    """Streaming observed-bin histogram accumulator.
+
+    Bins follow the LUT activation's input quantizer exactly (uniform
+    ``2**w_in`` grid over ``[x_lo, x_hi]``, round-to-nearest, clipped), so
+    a bin with zero observations is precisely an input code the served
+    table would never be asked for — a don't care.
+    """
+
+    def __init__(self, w_in: int = 10, x_lo: float = -8.0,
+                 x_hi: float = 8.0):
+        if x_hi <= x_lo:
+            raise ValueError(
+                f"ActivationCapture: empty input range "
+                f"[x_lo={x_lo}, x_hi={x_hi}]")
+        self.w_in = w_in
+        self.x_lo = float(x_lo)
+        self.x_hi = float(x_hi)
+        self.hists: dict[str, np.ndarray] = {}
+        self.n_batches = 0
+        self.n_samples = 0
+
+    # -- context management ------------------------------------------------
+    def __enter__(self) -> "ActivationCapture":
+        _STACK.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _STACK.remove(self)
+
+    # -- accumulation ------------------------------------------------------
+    def _accum(self, key: str, x: np.ndarray) -> None:
+        flat = np.asarray(x, dtype=np.float64).reshape(-1)
+        flat = flat[np.isfinite(flat)]
+        if flat.size == 0:
+            return
+        levels = (1 << self.w_in) - 1
+        xn = np.clip((flat - self.x_lo) / (self.x_hi - self.x_lo), 0.0, 1.0)
+        codes = np.rint(xn * levels).astype(np.int64)
+        hist = self.hists.get(key)
+        if hist is None:
+            hist = self.hists.setdefault(
+                key, np.zeros(1 << self.w_in, dtype=np.int64))
+        hist += np.bincount(codes, minlength=1 << self.w_in)
+        self.n_samples += flat.size
+
+    def observe(self, site: str, layer: int | None, x) -> None:
+        """Stream one site's pre-activation tensor into its histogram."""
+        key = site_key(site, layer)
+        # Register the key eagerly so the site inventory is complete even
+        # before deferred callbacks flush.
+        self.hists.setdefault(key, np.zeros(1 << self.w_in, dtype=np.int64))
+        if isinstance(x, jax.core.Tracer):
+            jax.debug.callback(lambda v, _k=key: self._accum(_k, v), x)
+        else:
+            self._accum(key, np.asarray(x))
+
+    def wrap(self, site: str, layer: int | None, act):
+        """Wrap an activation callable so evaluating it records its input."""
+        def captured(x):
+            self.observe(site, layer, x)
+            return act(x)
+        return captured
+
+    # -- inspection --------------------------------------------------------
+    def sites(self) -> list[str]:
+        return sorted(self.hists)
+
+    def summary(self) -> str:
+        per = ", ".join(
+            f"{k}: {int((h > 0).sum())}/{h.size} bins"
+            for k, h in sorted(self.hists.items()))
+        return (f"capture[{self.n_batches} batches, "
+                f"{self.n_samples} samples] {per}")
+
+
+def model_batch(cfg, rng, batch_size: int, seq_len: int) -> dict:
+    """One family-shaped random batch (tokens [+patches/frames]) — the
+    single source of the batch-shaping convention shared by calibration
+    capture, the serving launcher and the serving bench."""
+    batch = {"tokens": np.asarray(
+        rng.integers(1, cfg.vocab_size, (batch_size, seq_len)), np.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = np.asarray(
+            rng.normal(size=(batch_size, cfg.n_patches, cfg.d_model)),
+            np.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = np.asarray(
+            rng.normal(size=(batch_size, cfg.n_frames, cfg.d_model)),
+            np.float32)
+    return batch
+
+
+def synthetic_batches(cfg, steps: int, batch_size: int = 2,
+                      seq_len: int = 16, seed: int = 0) -> list[dict]:
+    """Random-token calibration batches (:func:`model_batch` per step)."""
+    rng = np.random.default_rng(seed)
+    return [model_batch(cfg, rng, batch_size, seq_len)
+            for _ in range(steps)]
+
+
+def capture_model(params, cfg, batches, *, w_in: int | None = None,
+                  x_lo: float = -8.0, x_hi: float = 8.0,
+                  capture: ActivationCapture | None = None,
+                  ) -> ActivationCapture:
+    """Stream calibration batches through the exact forward, capturing
+    every activation site's observed input bins.
+
+    Runs the plain (non-LUT) forward of ``cfg``'s family once per batch
+    with the capture context active; the layer stacks unroll so dense /
+    moe / vlm / ssm / hybrid sites are captured per layer
+    (``L{i}/{site}`` keys).  encdec keeps its scanned decoder, so its
+    ``mlp`` site accumulates one shared layer-agnostic histogram.
+    """
+    from repro.nn.transformer import (
+        decoder_forward,
+        encdec_forward,
+        encoder_forward,
+        hybrid_forward,
+        rwkv_forward,
+    )
+
+    cap = capture or ActivationCapture(
+        w_in=w_in or cfg.lut_act_bits_in, x_lo=x_lo, x_hi=x_hi)
+    with cap:
+        for batch in batches:
+            if not isinstance(batch, dict):
+                batch = {"tokens": batch}
+            toks = np.asarray(batch["tokens"], np.int32)
+            if cfg.family in ("dense", "moe", "vlm"):
+                out, _, _ = decoder_forward(params, cfg, toks,
+                                            patches=batch.get("patches"))
+            elif cfg.family == "ssm":
+                out, _ = rwkv_forward(params, cfg, toks)
+            elif cfg.family == "hybrid":
+                out, _ = hybrid_forward(params, cfg, toks)
+            elif cfg.family == "encdec":
+                enc = encoder_forward(params, cfg, batch["frames"])
+                out, _ = encdec_forward(params, cfg, toks, enc)
+            else:
+                raise ValueError(f"capture_model: unknown family "
+                                 f"{cfg.family!r}")
+            jax.block_until_ready(out)
+            cap.n_batches += 1
+    # Deferred debug callbacks must land before masks are derived.
+    jax.effects_barrier()
+    return cap

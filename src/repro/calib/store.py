@@ -1,0 +1,75 @@
+"""Calibration artifact persistence: CalibrationSet <-> one ``.npz`` file.
+
+Serve restarts (and CI smoke jobs) should not pay recapture: a captured
+:class:`~repro.calib.masks.CalibrationSet` saves to a single compressed
+``.npz`` holding every mask (bit-exact bool vectors), the histograms
+behind them (so masks can be re-derived with different knobs without
+recapturing), and a JSON header with the quantizer parameters.  The
+round trip is bit-exact (asserted in ``tests/test_calib.py``).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .masks import CalibrationSet
+
+_FORMAT = "repro-calib/v1"
+_MASK = "mask:"
+_HIST = "hist:"
+
+
+def save_calibration(path: str, calib: CalibrationSet) -> str:
+    """Write ``calib`` to ``path`` (``.npz`` appended if missing)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    header = {
+        "format": _FORMAT,
+        "w_in": calib.w_in,
+        "x_lo": calib.x_lo,
+        "x_hi": calib.x_hi,
+        "meta": calib.meta,
+    }
+    payload: dict[str, np.ndarray] = {
+        "__header__": np.frombuffer(
+            json.dumps(header).encode("utf-8"), dtype=np.uint8),
+    }
+    for key, mask in calib.masks.items():
+        payload[_MASK + key] = np.asarray(mask, dtype=bool)
+    if calib.hists is not None:
+        for key, hist in calib.hists.items():
+            payload[_HIST + key] = np.asarray(hist, dtype=np.int64)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez_compressed(f, **payload)
+    os.replace(tmp, path)
+    return path
+
+
+def load_calibration(path: str) -> CalibrationSet:
+    """Read a :func:`save_calibration` artifact back, bit-exactly."""
+    if not path.endswith(".npz") and not os.path.exists(path):
+        path = path + ".npz"
+    with np.load(path) as data:
+        if "__header__" not in data:
+            raise ValueError(
+                f"{path}: not a calibration artifact (missing header)")
+        header = json.loads(bytes(data["__header__"]).decode("utf-8"))
+        if header.get("format") != _FORMAT:
+            raise ValueError(
+                f"{path}: unknown calibration format "
+                f"{header.get('format')!r} (expected {_FORMAT!r})")
+        masks = {k[len(_MASK):]: np.asarray(data[k], dtype=bool)
+                 for k in data.files if k.startswith(_MASK)}
+        hists = {k[len(_HIST):]: np.asarray(data[k], dtype=np.int64)
+                 for k in data.files if k.startswith(_HIST)}
+    return CalibrationSet(
+        masks=masks,
+        w_in=header["w_in"],
+        x_lo=header["x_lo"],
+        x_hi=header["x_hi"],
+        hists=hists or None,
+        meta=header.get("meta", {}),
+    )

@@ -196,7 +196,7 @@ def _compress_one(spec: TableSpec, cfg: CompressConfig) -> tuple[Plan, TableRepo
             eliminated = 0
             if cfg.exiguity is not None:
                 for _ in range(max(1, cfg.merge_sweeps)):
-                    e = reduce_uniques(d, cfg.exiguity)
+                    e = reduce_uniques(d, cfg.exiguity, cfg.match_threads)
                     eliminated += e
                     if e == 0:
                         break

@@ -41,6 +41,7 @@ class CompressConfig:
     lb_candidates: tuple[int, ...] | None = None  # None => 0..w_out-1
     bias_care_only: bool = False                  # beyond-paper option
     merge_sweeps: int = 1                         # beyond-paper: >1 resweeps
+    match_threads: int = 0   # >1: threaded shift-match scoring (same result)
 
     def resolved_m(self, w_in: int) -> tuple[int, ...]:
         if self.m_candidates is not None:
@@ -92,7 +93,7 @@ def _decompose_hb(
     d = make_decomposition(hb_values, care, m, cfg.bias_care_only)
     if cfg.exiguity is not None:
         for _ in range(max(1, cfg.merge_sweeps)):
-            if reduce_uniques(d, cfg.exiguity) == 0:
+            if reduce_uniques(d, cfg.exiguity, cfg.match_threads) == 0:
                 break
     return pack_decomposition(
         d, w_in=w_in, w_hb=w_hb, w_lb=w_lb, lb_values=lb_values, name=name

@@ -10,27 +10,45 @@ entry that participated in a committed transformation.
 """
 from __future__ import annotations
 
+from concurrent.futures import ThreadPoolExecutor
+
 import numpy as np
 
 from .similarity import Decomposition
 
+# Below this many candidate rows a thread fan-out costs more than the
+# numpy scan it parallelizes.
+_MATCH_THREAD_MIN_ROWS = 64
 
-def _find_shift_match(
-    target: np.ndarray,
-    target_care: np.ndarray,
-    candidates: np.ndarray,
+# One long-lived executor per thread count (numpy releases the GIL inside
+# the comparison kernels, so plain threads scale on the shared arrays —
+# no pickling, unlike the engine's process pool).
+_MATCH_POOLS: dict[int, ThreadPoolExecutor] = {}
+
+
+def _get_match_pool(threads: int) -> ThreadPoolExecutor:
+    pool = _MATCH_POOLS.get(threads)
+    if pool is None:
+        pool = ThreadPoolExecutor(max_workers=threads,
+                                  thread_name_prefix="shift-match")
+        _MATCH_POOLS[threads] = pool
+    return pool
+
+
+def shutdown_match_pools() -> None:
+    """Tear down cached scoring thread pools (tests / shutdown)."""
+    for pool in _MATCH_POOLS.values():
+        pool.shutdown(wait=False, cancel_futures=True)
+    _MATCH_POOLS.clear()
+
+
+def _scan_rows(
+    t_vals: np.ndarray,       # (1, 1, n_care)
+    care: np.ndarray,
+    candidates: np.ndarray,   # (n, M) block
     w_st: int,
 ) -> tuple[int, int] | None:
-    """First ``(candidate_row, shift)`` whose right-shift matches ``target``
-    at all care positions.  ``candidates`` is ``(n, M)``; rows are tried in
-    the given order, shifts ascending.  Vectorized over rows and shifts.
-    """
-    if candidates.shape[0] == 0:
-        return None
-    care = target_care
-    if not care.any():
-        return (0, 0)  # fully free: anything generates it
-    t_vals = target[care][None, None, :]
+    """Serial core: first (row, shift) in a candidate block, row-major."""
     # (n, w_st+1, n_care)
     shifted = candidates[:, None, care] >> np.arange(w_st + 1)[None, :, None]
     ok = (shifted == t_vals).all(axis=2)
@@ -38,6 +56,47 @@ def _find_shift_match(
     if rows.size == 0:
         return None
     return int(rows[0]), int(shifts[0])
+
+
+def _find_shift_match(
+    target: np.ndarray,
+    target_care: np.ndarray,
+    candidates: np.ndarray,
+    w_st: int,
+    threads: int = 0,
+) -> tuple[int, int] | None:
+    """First ``(candidate_row, shift)`` whose right-shift matches ``target``
+    at all care positions.  ``candidates`` is ``(n, M)``; rows are tried in
+    the given order, shifts ascending.  Vectorized over rows and shifts.
+
+    ``threads > 1`` splits the candidate rows into contiguous blocks
+    scanned by a shared-memory thread pool; the earliest block with a hit
+    wins, so the result is identical to the serial scan (the serial order
+    is row-major, and block order preserves row order).
+    """
+    n = candidates.shape[0]
+    if n == 0:
+        return None
+    care = target_care
+    if not care.any():
+        return (0, 0)  # fully free: anything generates it
+    t_vals = target[care][None, None, :]
+    if threads and threads > 1 and n >= max(_MATCH_THREAD_MIN_ROWS,
+                                            2 * threads):
+        pool = _get_match_pool(threads)
+        bounds = np.linspace(0, n, threads + 1).astype(int)
+        futures = [
+            pool.submit(_scan_rows, t_vals, care,
+                        candidates[lo:hi], w_st)
+            for lo, hi in zip(bounds[:-1], bounds[1:]) if hi > lo
+        ]
+        offsets = [lo for lo, hi in zip(bounds[:-1], bounds[1:]) if hi > lo]
+        for off, fut in zip(offsets, futures):
+            hit = fut.result()
+            if hit is not None:
+                return hit[0] + off, hit[1]
+        return None
+    return _scan_rows(t_vals, care, candidates, w_st)
 
 
 class _Transaction:
@@ -76,12 +135,15 @@ class _Transaction:
             self.d.rsh[j] = t
 
 
-def reduce_uniques(d: Decomposition, exiguity: int) -> int:
+def reduce_uniques(d: Decomposition, exiguity: int,
+                   match_threads: int = 0) -> int:
     """Run one ReducedLUT merge sweep in place.
 
     Returns the number of unique sub-tables eliminated.  ``d.res`` rows of
     merged/re-homed sub-tables are rewritten to their reconstruction values
     so Eq. (1) consistency is maintained by construction.
+    ``match_threads > 1`` parallelizes the candidate scoring scans
+    (bit-identical results; ``CompressConfig.match_threads`` knob).
     """
     frozen = np.zeros_like(d.care)
     eliminated = 0
@@ -122,7 +184,8 @@ def reduce_uniques(d: Decomposition, exiguity: int) -> int:
         # dependents, never another unique's row.
         t_rows = d.res[targets]
 
-        hit = _find_shift_match(d.res[u], eff_care(u), t_rows, d.w_st)
+        hit = _find_shift_match(d.res[u], eff_care(u), t_rows, d.w_st,
+                                threads=match_threads)
         if hit is None:
             continue
         row_i, shift = hit
@@ -138,7 +201,8 @@ def reduce_uniques(d: Decomposition, exiguity: int) -> int:
         rehomed: list[int] = []
         for j in sorted(u_deps):
             hit_j = _find_shift_match(
-                d.res[j], eff_care(j), t_rows, d.w_st
+                d.res[j], eff_care(j), t_rows, d.w_st,
+                threads=match_threads,
             )
             if hit_j is None:
                 ok = False

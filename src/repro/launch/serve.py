@@ -7,26 +7,45 @@ ReducedLUT-compressed activations (the paper feature).
 
   PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
       --batch 4 --prompt-len 48 --new-tokens 16 [--kv-int8] [--lut-act] \
-      [--lut-backend gather|pallas]
+      [--lut-backend gather|pallas] [--calib-steps N] [--calib-path P]
 
 ``--lut-act`` serves engine-selected plans: every activation site of the
 network is compressed through the batched engine (duplicate tables shared
 — see the dedupe hit-rate it prints) and the decode loop evaluates the
-resulting plan arrays.
+resulting plan arrays.  By default all sites share one synthetic
+calibration set; ``--calib-steps N`` instead streams N batches through
+the exact model and derives *per-site* observed-pattern don't-care masks
+(repro.calib), so each layer serves its own table.  ``--calib-path``
+loads a saved calibration artifact when present and saves the captured
+one otherwise, so restarts skip recapture.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.calib import (
+    capture_calibration,
+    load_calibration,
+    model_batch,
+    save_calibration,
+    synthetic_batches,
+)
 from repro.configs import ARCH_NAMES, get_config, smoke_config
 from repro.launch.mesh import make_host_mesh
 from repro.nn import init_params
-from repro.serve import build_serving_plans, decode_step, init_cache, prefill
+from repro.serve import (
+    build_serving_plans,
+    decode_step,
+    init_cache,
+    prefill,
+    prefill_replay,
+)
 
 
 def main() -> None:
@@ -39,6 +58,16 @@ def main() -> None:
     ap.add_argument("--lut-act", action="store_true")
     ap.add_argument("--lut-backend", choices=("gather", "pallas"),
                     default="gather")
+    ap.add_argument("--calib-steps", type=int, default=0,
+                    help="capture N batches for per-site don't-care masks "
+                         "(0 = shared synthetic calibration)")
+    ap.add_argument("--calib-path", default=None,
+                    help="calibration artifact (.npz): loaded if present, "
+                         "else saved after capture")
+    ap.add_argument("--calib-min-count", type=int, default=1,
+                    help="min observations for a bin to stay care")
+    ap.add_argument("--calib-smoothing", type=int, default=0,
+                    help="laplace-style neighbor-smoothing radius (bins)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -48,18 +77,36 @@ def main() -> None:
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     b, t = args.batch, args.prompt_len
-    batch = {"tokens": jnp.asarray(
-        rng.integers(1, cfg.vocab_size, (b, t)), jnp.int32)}
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.asarray(
-            rng.normal(size=(b, cfg.n_patches, cfg.d_model)), jnp.float32)
-    if cfg.family == "encdec":
-        batch["frames"] = jnp.asarray(
-            rng.normal(size=(b, cfg.n_frames, cfg.d_model)), jnp.float32)
+    batch = {k: jnp.asarray(v)
+             for k, v in model_batch(cfg, rng, b, t).items()}
 
     lut_tables = None
     if args.lut_act:
-        calib = rng.normal(size=100000) * 3
+        if args.calib_steps > 0 or args.calib_path:
+            calib = None
+            # save_calibration appends .npz when missing — honor both
+            # spellings so warm restarts actually find the artifact
+            if args.calib_path and (os.path.exists(args.calib_path)
+                                    or os.path.exists(args.calib_path
+                                                      + ".npz")):
+                calib = load_calibration(args.calib_path)
+                print(f"loaded calibration: {calib.summary()}")
+            if calib is None:
+                steps = max(1, args.calib_steps)
+                batches = synthetic_batches(cfg, steps, batch_size=b,
+                                            seq_len=t, seed=1)
+                t0 = time.time()
+                calib = capture_calibration(
+                    params, cfg, batches,
+                    min_count=args.calib_min_count,
+                    smoothing=args.calib_smoothing)
+                print(f"captured {steps} calibration batches in "
+                      f"{time.time() - t0:.2f}s: {calib.summary()}")
+                if args.calib_path:
+                    print("saved calibration ->",
+                          save_calibration(args.calib_path, calib))
+        else:
+            calib = rng.normal(size=100000) * 3
         plans = build_serving_plans(cfg, calib, backend=args.lut_backend)
         cfg = plans.patched_config(cfg)
         lut_tables = plans.tables_for_model()
@@ -73,17 +120,13 @@ def main() -> None:
     print(f"prefill {b}x{t}: {time.time() - t0:.2f}s")
 
     if args.kv_int8 and cfg.family in ("dense", "moe", "vlm"):
-        # re-home the prefill cache into int8 (write path quantizes)
+        # re-home the prefill cache into int8 (write path quantizes) via
+        # one compiled replay scan instead of t python-level step calls
         cache_q = init_cache(cfg, b, max_seq, kv_dtype="int8")
         print("int8 KV cache enabled (decode writes quantized entries)")
-        # replay prompt through decode to fill the quantized cache
-        step0 = jax.jit(lambda p, c, tk, pos: decode_step(
-            p, cfg, c, tk, pos, lut_tables=lut_tables))
-        for i in range(t):
-            logits, cache_q = step0(params, cache_q,
-                                    batch["tokens"][:, i:i + 1],
-                                    jnp.asarray(i))
-        cache = cache_q
+        logits, cache = jax.jit(lambda p, c, tk: prefill_replay(
+            p, cfg, c, tk, 0, lut_tables=lut_tables))(
+            params, cache_q, batch["tokens"])
 
     step = jax.jit(lambda p, c, tk, pos: decode_step(
         p, cfg, c, tk, pos, lut_tables=lut_tables))

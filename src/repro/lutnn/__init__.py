@@ -9,7 +9,12 @@ bit-exact table-network inference — the full paper toolflow (Fig. 2).
 """
 from .model import LUTNNConfig, lutnn_forward, lutnn_init
 from .train import train_lutnn
-from .extract import extract_tables, mark_observed
+from .extract import (
+    extract_tables,
+    mark_observed,
+    mark_observed_calibration,
+    observed_calibration_set,
+)
 from .inference import pack_codes, quantize_input, table_forward, table_accuracy
 
 __all__ = [
@@ -19,6 +24,8 @@ __all__ = [
     "train_lutnn",
     "extract_tables",
     "mark_observed",
+    "mark_observed_calibration",
+    "observed_calibration_set",
     "table_forward",
     "table_accuracy",
     "pack_codes",

@@ -5,6 +5,12 @@ evaluates the trained functional form — "the content of each L-LUT is
 derived from an interpolation of the training data performed by the
 functional form used in training".  Don't cares are the addresses never
 visited when running the training set through the table network.
+
+LUT-NN observed masks share the serving stack's calibration subsystem
+(:mod:`repro.calib`): :func:`observed_calibration_set` packs them into a
+:class:`~repro.calib.CalibrationSet` (``L{layer}/n{i}`` keys) so the same
+``save_calibration``/``load_calibration`` artifacts carry both activation
+and neuron masks, and :func:`network_table_specs` accepts either form.
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.calib import CalibrationSet, site_key
 from repro.core import TableSpec
 
 from .inference import quantize_input, table_forward, unpack_address
@@ -53,20 +60,62 @@ def mark_observed(
     return observers
 
 
+def observed_calibration_set(
+    observed: list[np.ndarray], cfg: LUTNNConfig
+) -> CalibrationSet:
+    """Pack per-layer observed masks into the shared calibration-artifact
+    form: one ``L{layer}/n{i}`` mask per neuron.  ``w_in`` is left unset —
+    LUT-NN layers have heterogeneous input widths, and the masks carry
+    their own lengths."""
+    masks = {
+        site_key(f"n{i}", layer=l): obs[i]
+        for l, obs in enumerate(observed)
+        for i in range(obs.shape[0])
+    }
+    return CalibrationSet(masks=masks, w_in=None,
+                          meta={"source": "lutnn", "name": cfg.name,
+                                "layer_sizes": list(cfg.layer_sizes)})
+
+
+def mark_observed_calibration(
+    tables: list[np.ndarray],
+    conn: list[np.ndarray],
+    cfg: LUTNNConfig,
+    x_train: np.ndarray,
+) -> CalibrationSet:
+    """:func:`mark_observed` + :func:`observed_calibration_set` in one
+    step — the LUT-NN analogue of ``repro.calib.capture_calibration``."""
+    return observed_calibration_set(
+        mark_observed(tables, conn, cfg, x_train), cfg)
+
+
 def network_table_specs(
     tables: list[np.ndarray],
-    observed: list[np.ndarray] | None,
+    observed: list[np.ndarray] | CalibrationSet | None,
     cfg: LUTNNConfig,
 ) -> list[TableSpec]:
     """Flatten the network into per-neuron :class:`TableSpec`s.
 
-    ``observed=None`` produces all-care specs (CompressedLUT baseline).
+    ``observed`` may be the raw per-layer mask list from
+    :func:`mark_observed` or a (possibly reloaded)
+    :class:`~repro.calib.CalibrationSet`; ``None`` produces all-care specs
+    (CompressedLUT baseline).
     """
+    calib = observed if isinstance(observed, CalibrationSet) else None
     specs = []
     for l, table in enumerate(tables):
         w_in = cfg.layer_w_in(l)
         for i in range(table.shape[0]):
-            care = None if observed is None else observed[l][i]
+            if observed is None:
+                care = None
+            elif calib is not None:
+                care = calib.mask_for(f"n{i}", layer=l)
+                if care is None:
+                    raise ValueError(
+                        f"network_table_specs: calibration has no mask "
+                        f"for neuron L{l}/n{i}")
+            else:
+                care = observed[l][i]
             specs.append(TableSpec(
                 values=table[i], w_in=w_in, w_out=cfg.beta,
                 care=care, name=f"{cfg.name}_l{l}_n{i}",

@@ -100,6 +100,7 @@ def activation_table(
     act: str,
     calibration: np.ndarray | None = None,
     *,
+    care: np.ndarray | None = None,
     w_in: int = 10,
     w_out: int = 10,
     x_lo: float = -8.0,
@@ -108,20 +109,37 @@ def activation_table(
 ) -> tuple[TableSpec, dict]:
     """Tabulate + quantize an activation into a compressor-ready spec.
 
-    Returns ``(TableSpec, quant)`` where ``quant`` carries the output
-    dequantization range (``y_lo``/``y_hi``, computed over *care* bins
-    only — don't-care bins are never served, so letting them widen the
-    range would just coarsen the output grid) and ``dontcare_frac``.
+    The care mask comes either from raw ``calibration`` samples (binned by
+    :func:`calibrate_bins`) or directly as a precomputed ``care`` bool
+    vector (the per-site streaming-calibration path,
+    :mod:`repro.calib.masks`).  Returns ``(TableSpec, quant)`` where
+    ``quant`` carries the output dequantization range (``y_lo``/``y_hi``,
+    computed over *care* bins only — don't-care bins are never served, so
+    letting them widen the range would just coarsen the output grid) and
+    ``dontcare_frac``.
     """
     if x_hi <= x_lo:
         raise ValueError(
             f"activation_table: empty input range "
             f"[x_lo={x_lo}, x_hi={x_hi}]")
+    if care is not None and calibration is not None:
+        raise ValueError(
+            "activation_table: pass either raw calibration samples or a "
+            "precomputed care mask, not both")
     fn = ACT_FNS[act]
     xs = np.linspace(x_lo, x_hi, 1 << w_in)
     ys = fn(xs)
-    care = None
-    if calibration is not None:
+    if care is not None:
+        care = np.asarray(care, dtype=bool)
+        if care.shape != (1 << w_in,):
+            raise ValueError(
+                f"activation_table: care mask shape {care.shape} != "
+                f"({1 << w_in},) for w_in={w_in}")
+        if int(care.sum()) < 2:
+            raise ValueError(
+                "activation_table: care mask keeps fewer than two bins — "
+                "the table would be unconstrained away from one entry")
+    elif calibration is not None:
         care = calibrate_bins(np.asarray(calibration), w_in, x_lo, x_hi)
     ys_care = ys if care is None else ys[care]
     y_lo, y_hi = float(ys_care.min()), float(ys_care.max())

@@ -12,8 +12,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.calib import capture as calib_capture
+
 from .layers import activation_fn, is_gated
-from .sharding import shard
+from .sharding import layer_scan, shard
 
 
 def lut_act_jnp(x, arrays, *, l, w_lb, w_hb, w_in, w_out,
@@ -38,19 +40,70 @@ def lut_act_jnp(x, arrays, *, l, w_lb, w_hb, w_in, w_out,
     return y.astype(x.dtype)
 
 
-def site_tables(lut_tables: dict | None, site: str) -> dict | None:
+def tables_per_layer(lut_tables: dict | None) -> bool:
+    """True when any site entry carries per-layer tables (``"layers"``
+    list) — per-site calibration produces one distinct plan per layer, so
+    the layer stack must unroll to close over each layer's arrays."""
+    if not lut_tables or "sites" not in lut_tables:
+        return False
+    return any(isinstance(e, dict) and "layers" in e
+               for e in lut_tables["sites"].values())
+
+
+def needs_layer_ids(lut_tables: dict | None) -> bool:
+    """True when the layer loop must python-unroll so every call site has
+    a concrete layer index: per-layer serving tables, or an active
+    activation-capture context (per-site histogram keys)."""
+    return tables_per_layer(lut_tables) or calib_capture.capture_active()
+
+
+def run_layers(body, carry, xs, *, lut_tables=None, remat=False):
+    """Run a layer stack: ``body(carry, inp, layer) -> (carry, y)``.
+
+    Scans (``layer_scan``, compact HLO, ``layer=None``) by default;
+    python-unrolls with concrete layer indices when per-layer LUT tables
+    or an activation capture need them (see :func:`needs_layer_ids`).
+    The unrolled output pytree is stacked to match the scan's exactly.
+    """
+    if needs_layer_ids(lut_tables):
+        fn = jax.checkpoint(body, static_argnums=(2,)) if remat else body
+        length = jax.tree.leaves(xs)[0].shape[0]
+        ys = []
+        for i in range(length):
+            carry, y = fn(carry, jax.tree.map(lambda a: a[i], xs), i)
+            ys.append(y)
+        stacked = jax.tree.map(lambda *vs: jnp.stack(vs), *ys)
+        return carry, stacked
+    fn = lambda c, inp: body(c, inp, None)
+    if remat:
+        fn = jax.checkpoint(fn)
+    return layer_scan(fn, carry, xs)
+
+
+def site_tables(lut_tables: dict | None, site: str,
+                layer: int | None = None) -> dict | None:
     """Resolve one activation site's ``{"meta", "arrays"}`` entry.
 
-    Two shapes are accepted: the legacy single-table dict (applies to the
-    ``"mlp"`` site only — the pre-plans behavior) and the serving-plans
-    multi-site dict ``{"sites": {site: {...}}, "backend": ...}`` produced
-    by :mod:`repro.serve.plans`.
+    Three shapes are accepted: the legacy single-table dict (applies to
+    the ``"mlp"`` site only — the pre-plans behavior), the serving-plans
+    multi-site dict ``{"sites": {site: {...}}, "backend": ...}``, and the
+    per-site-calibrated form where a site entry is ``{"layers": [...]}``
+    (one entry per layer, resolved by ``layer``).
     """
     if lut_tables is None:
         return None
     if "sites" in lut_tables:
-        return lut_tables["sites"].get(site)
-    return lut_tables if site == "mlp" else None
+        entry = lut_tables["sites"].get(site)
+    else:
+        entry = lut_tables if site == "mlp" else None
+    if entry is not None and "layers" in entry:
+        if layer is None:
+            raise ValueError(
+                f"per-layer LUT tables for site {site!r} need a concrete "
+                f"layer index — run the forward through run_layers (this "
+                f"family's loop may not support per-layer tables)")
+        return entry["layers"][layer]
+    return entry
 
 
 def apply_lut_act(x, tab: dict, backend: str = "gather"):
@@ -80,24 +133,34 @@ def apply_lut_act(x, tab: dict, backend: str = "gather"):
 
 
 def make_activation(cfg, lut_tables: dict | None, site: str = "mlp",
-                    fallback: str | None = None):
+                    fallback: str | None = None, layer: int | None = None):
     """Returns act(x) for the configured nonlinearity.
 
     With ``cfg.lut_activation`` and compiled plan arrays available for
-    ``site``, the activation evaluates the ReducedLUT-compressed table;
-    otherwise the exact ``fallback`` (default ``cfg.activation``) runs.
+    ``site`` (per-layer arrays resolved via ``layer``), the activation
+    evaluates the ReducedLUT-compressed table; otherwise the exact
+    ``fallback`` (default ``cfg.activation``) runs.  While an activation
+    capture is active the returned callable additionally streams its
+    input into the capture's ``(layer, site)`` histogram.
     """
+    act = None
     if cfg.lut_activation and lut_tables is not None:
-        tab = site_tables(lut_tables, site)
+        tab = site_tables(lut_tables, site, layer)
         if tab is not None:
             backend = lut_tables.get("backend", "gather")
-            return lambda x: apply_lut_act(x, tab, backend)
-    return activation_fn(fallback or cfg.activation)
+            act = lambda x: apply_lut_act(x, tab, backend)
+    if act is None:
+        act = activation_fn(fallback or cfg.activation)
+    cap = calib_capture.current()
+    if cap is not None:
+        act = cap.wrap(site, layer, act)
+    return act
 
 
-def mlp_block(params: dict, x: jax.Array, cfg, lut_tables=None) -> jax.Array:
+def mlp_block(params: dict, x: jax.Array, cfg, lut_tables=None,
+              layer: int | None = None) -> jax.Array:
     """(B, T, d) -> (B, T, d). swiglu uses fused [gate|up] in w_in."""
-    act = make_activation(cfg, lut_tables)
+    act = make_activation(cfg, lut_tables, layer=layer)
     if is_gated(cfg.activation):
         gate_up = jnp.einsum("btd,df->btf", x, params["w_in"])
         gate_up = shard(gate_up, "dp", None, "tp")

@@ -88,12 +88,14 @@ def moe_ffn_local(
 
 
 def moe_block(params: dict, x: jax.Array, cfg, shared_mlp=None,
-              lut_tables=None):
+              lut_tables=None, layer: int | None = None):
     """(B, T, d) -> ((B, T, d), aux_loss). Uses shard_map EP under a mesh
     with a model axis; plain local compute otherwise.  With serving plans
     carrying an ``"expert"`` site, the per-expert nonlinearity evaluates
-    the ReducedLUT-compressed table (arrays are closed over and replicate
-    across the expert-parallel shard_map — they are KB-sized)."""
+    the ReducedLUT-compressed table for this ``layer`` (arrays are closed
+    over and replicate across the expert-parallel shard_map — they are
+    KB-sized).  make_activation also hooks the expert site into any
+    active calibration capture."""
     from .mlp import make_activation
 
     b, t, d = x.shape
@@ -101,10 +103,8 @@ def moe_block(params: dict, x: jax.Array, cfg, shared_mlp=None,
     mesh = current_mesh()
     s_local_tokens = b * t
     act_name = "silu"
-    act_fn = None
-    if getattr(cfg, "lut_activation", False) and lut_tables is not None:
-        act_fn = make_activation(cfg, lut_tables, site="expert",
-                                 fallback=act_name)
+    act_fn = make_activation(cfg, lut_tables, site="expert",
+                             fallback=act_name, layer=layer)
 
     tp = (mesh is not None and TP_AXIS in mesh.axis_names
           and m.n_experts % mesh.shape[TP_AXIS] == 0)

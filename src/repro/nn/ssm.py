@@ -177,12 +177,14 @@ def rwkv_time_mix(params, x, cfg, x_last=None, wkv_state=None,
     return shard(out, "dp", None, None), (x[:, -1:], wkv_state)
 
 
-def rwkv_channel_mix(params, x, cfg, x_last=None, lut_tables=None):
+def rwkv_channel_mix(params, x, cfg, x_last=None, lut_tables=None,
+                     layer=None):
     """RWKV6 FFN: squared-ReLU with token-shift mixing.
 
     With serving plans carrying an ``"ffn"`` site, the squared-ReLU
-    evaluates the ReducedLUT-compressed table (cfg.activation is "relu2"
-    for the rwkv family, so the exact fallback is the same function).
+    evaluates the ReducedLUT-compressed table for this ``layer``
+    (cfg.activation is "relu2" for the rwkv family, so the exact fallback
+    is the same function).
     """
     from .mlp import make_activation
 
@@ -194,7 +196,8 @@ def rwkv_channel_mix(params, x, cfg, x_last=None, lut_tables=None):
     xr = x + (x_prev - x) * params["mu_ffn_r"]
     kk = jnp.einsum("btd,df->btf", xk, params["w_ffn_k"])
     kk = shard(kk, "dp", None, "tp")
-    act = make_activation(cfg, lut_tables, site="ffn", fallback="relu2")
+    act = make_activation(cfg, lut_tables, site="ffn", fallback="relu2",
+                          layer=layer)
     vv = jnp.einsum("btf,fd->btd", act(kk), params["w_ffn_v"])
     rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, params["w_ffn_r"]))
     return shard(rr * vv, "dp", None, None), x[:, -1:]

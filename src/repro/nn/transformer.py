@@ -33,7 +33,7 @@ from .layers import (
     softmax_cross_entropy,
     truncated_normal_init,
 )
-from .mlp import make_activation, mlp_block
+from .mlp import make_activation, mlp_block, run_layers
 from .moe import moe_block
 from .rglru import recurrent_block, recurrent_block_step
 from .rope import apply_rope
@@ -332,7 +332,7 @@ def _decoder_embed(params, cfg, tokens, patches=None):
 
 
 def _decoder_block(p, x, cfg, lut_tables, pos_offset=0, collect_kv=False,
-                   chunk_q=512):
+                   chunk_q=512, layer=None):
     h, kv = _attn_apply(p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
                         pos_offset=pos_offset, chunk_q=chunk_q)
     x = x + h
@@ -342,13 +342,13 @@ def _decoder_block(p, x, cfg, lut_tables, pos_offset=0, collect_kv=False,
         if cfg.moe.n_shared:
             shared = lambda z: mlp_block(
                 {"w_in": p["sh_w_in"], "w_out": p["sh_w_out"]}, z, cfg,
-                lut_tables)
+                lut_tables, layer=layer)
         h, aux = moe_block(
             {"router": p["router"], "w_in": p["moe_w_in"],
              "w_out": p["moe_w_out"]}, hin, cfg, shared_mlp=shared,
-            lut_tables=lut_tables)
+            lut_tables=lut_tables, layer=layer)
     else:
-        h = mlp_block(p, hin, cfg, lut_tables)
+        h = mlp_block(p, hin, cfg, lut_tables, layer=layer)
         aux = jnp.zeros((), jnp.float32)
     x = x + h
     return x, aux, kv
@@ -360,15 +360,15 @@ def decoder_forward(params, cfg: ArchConfig, tokens, patches=None,
     """Returns (hidden (B,T,d), aux, kv_stack | None)."""
     x = _decoder_embed(params, cfg, tokens, patches)
 
-    def body(carry, p):
+    def body(carry, p, layer):
         x = carry
-        y, aux, kv = _decoder_block(p, x, cfg, lut_tables, chunk_q=chunk_q)
+        y, aux, kv = _decoder_block(p, x, cfg, lut_tables, chunk_q=chunk_q,
+                                    layer=layer)
         out = (aux, kv) if collect_kv else (aux, None)
         return y, out
 
-    if remat:
-        body = jax.checkpoint(body)
-    x, (auxes, kvs) = layer_scan(body, x, params["blocks"])
+    x, (auxes, kvs) = run_layers(body, x, params["blocks"],
+                                 lut_tables=lut_tables, remat=remat)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return x, jnp.sum(auxes), kvs
 
@@ -400,7 +400,7 @@ def rwkv_forward(params, cfg, tokens, states=None, remat=False,
     x = embed_lookup(params["embed"], tokens)
     decode = states is not None
 
-    def body(carry, inp):
+    def body(carry, inp, layer):
         x = carry
         if decode:
             p, st = inp
@@ -410,7 +410,7 @@ def rwkv_forward(params, cfg, tokens, states=None, remat=False,
             x = x + h
             h, fx = rwkv_channel_mix(
                 p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
-                x_last=st["ffn_x"], lut_tables=lut_tables)
+                x_last=st["ffn_x"], lut_tables=lut_tables, layer=layer)
             x = x + h
             return x, {"att_x": ax, "ffn_x": fx, "wkv": wkv}
         p = inp
@@ -419,16 +419,15 @@ def rwkv_forward(params, cfg, tokens, states=None, remat=False,
         x = x + h
         h, fx = rwkv_channel_mix(
             p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
-            lut_tables=lut_tables)
+            lut_tables=lut_tables, layer=layer)
         x = x + h
         ys = ({"att_x": ax, "ffn_x": fx, "wkv": wkv} if collect_states
               else jnp.zeros((), jnp.float32))
         return x, ys
 
-    if remat:
-        body = jax.checkpoint(body)
     xs = (params["blocks"], states) if decode else params["blocks"]
-    x, out_states = layer_scan(body, x, xs)
+    x, out_states = run_layers(body, x, xs, lut_tables=lut_tables,
+                               remat=remat)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return x, (out_states if (decode or collect_states) else None)
 
@@ -485,7 +484,7 @@ def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
     decode = mode == "decode"
     collect = mode in ("prefill", "decode")
 
-    def group_body(carry, inp):
+    def group_body(carry, inp, group):
         x = carry
         if decode:
             p, st = inp
@@ -493,6 +492,9 @@ def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
             p, st = inp, {}
         new_st = {}
         for i, kind in enumerate(pattern):
+            # Global mlp-site index: groups are laid out contiguously, one
+            # mlp per pattern element — matches serve.plans' L{i} numbering.
+            layer = None if group is None else group * len(pattern) + i
             xin = rms_norm(x, p[f"t{i}_ln"], cfg.norm_eps)
             h, s = _hybrid_temporal(kind, p[f"t{i}_{kind}"], xin, cfg, pos,
                                     state=st.get(f"t{i}") if decode else None,
@@ -501,18 +503,22 @@ def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
             x = x + h
             h = mlp_block(p[f"m{i}"], rms_norm(x, p[f"m{i}_ln"],
                                                cfg.norm_eps), cfg,
-                          lut_tables)
+                          lut_tables, layer=layer)
             x = x + h
         return x, new_st if collect else jnp.zeros((), jnp.float32)
 
-    if remat:
-        group_body = jax.checkpoint(group_body)
     xs = ((params["groups"], states["groups"]) if decode
           else params["groups"])
-    x, g_states = layer_scan(group_body, x, xs)
+    x, g_states = run_layers(group_body, x, xs, lut_tables=lut_tables,
+                             remat=remat)
 
     tail_states = {}
     if "tail" in params:
+        from .mlp import needs_layer_ids
+
+        n_groups = jax.tree.leaves(params["groups"])[0].shape[0]
+        tail_base = n_groups * len(pattern)
+        tail_layer_ids = needs_layer_ids(lut_tables)
         tp_ = params["tail"]
         i = 0
         while f"t{i}_rec" in tp_:
@@ -528,7 +534,8 @@ def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
             x = x + h
             mp = jax.tree.map(lambda a: a[0], tp_[f"m{i}"])
             h = mlp_block(mp, rms_norm(x, tp_[f"m{i}_ln"][0],
-                                       cfg.norm_eps), cfg, lut_tables)
+                                       cfg.norm_eps), cfg, lut_tables,
+                          layer=tail_base + i if tail_layer_ids else None)
             x = x + h
             i += 1
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)

@@ -1,7 +1,7 @@
 """Serving runtime: prefill, decode, KV-cache management, batching,
 compressed-activation serving plans."""
 from .batching import ContinuousBatcher, Request
-from .decode import decode_step, prefill
+from .decode import decode_step, prefill, prefill_replay
 from .kvcache import cache_shardings, cache_specs, init_cache
 from .plans import (
     ServingPlans,
@@ -11,7 +11,7 @@ from .plans import (
     verify_backend_equivalence,
 )
 
-__all__ = ["prefill", "decode_step", "cache_specs", "init_cache",
-           "cache_shardings", "ContinuousBatcher", "Request",
+__all__ = ["prefill", "decode_step", "prefill_replay", "cache_specs",
+           "init_cache", "cache_shardings", "ContinuousBatcher", "Request",
            "ServingPlans", "SitePlan", "activation_sites",
            "build_serving_plans", "verify_backend_equivalence"]

@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 
-from .decode import decode_step
+from .decode import decode_step, prefill_replay
 from .kvcache import init_cache
 
 
@@ -47,19 +47,28 @@ class ContinuousBatcher:
 
     def __init__(self, cfg: ArchConfig, params, batch_size: int,
                  max_seq: int, eos_token: int = 0,
-                 kv_dtype: str = "bfloat16", lut_tables: dict | None = None):
+                 kv_dtype: str = "bfloat16", lut_tables: dict | None = None,
+                 prefill: str = "step"):
+        if prefill not in ("step", "replay"):
+            raise ValueError(
+                f"prefill must be 'step' or 'replay', got {prefill!r}")
         self.cfg = cfg
         self.params = params
         self.b = batch_size
         self.max_seq = max_seq
         self.eos = eos_token
         self.lut_tables = lut_tables
+        self.prefill = prefill
         self.cache = init_cache(cfg, batch_size, max_seq, kv_dtype)
         self.slots = [_Slot() for _ in range(batch_size)]
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
         self.steps = 0
         self.active_slot_steps = 0
+        self.replayed_tokens = 0
+        # one wrapper; jit shape-specializes per prompt length internally
+        self._replay = jax.jit(lambda p, c, toks: prefill_replay(
+            p, cfg, c, toks, 0, lut_tables=lut_tables))
         # per-slot positions differ => decode_step takes a (B,) pos vector?
         # the shared step uses a scalar pos; we instead track per-slot pos
         # and run the step with per-slot token + per-slot position by
@@ -74,12 +83,66 @@ class ContinuousBatcher:
         self.queue.append(req)
 
     def _admit(self) -> None:
-        for slot in self.slots:
+        for i, slot in enumerate(self.slots):
             if slot.req is None and self.queue:
                 req = self.queue.popleft()
                 slot.req = req
                 slot.pos = 0
                 slot.pending = list(req.prompt)
+                if self.prefill == "replay" and len(slot.pending) > 1:
+                    self._replay_slot(i, slot)
+
+    def _replay_slot(self, i: int, slot: _Slot) -> None:
+        """Batcher-level prefill replay: ingest an admitted slot's whole
+        prompt through one compiled decode scan instead of one scheduler
+        tick per token.
+
+        Because the cache writes go through the decode write path, this
+        fills int8 KV caches with exactly the quantized entries (values
+        *and* scales) steady-state decode would produce, and evaluates the
+        same LUT-compressed activations — the replay-vs-step outputs are
+        asserted token-identical in tests/test_batching.py.  Prompts that
+        alone overflow the cache mirror the step path: truncated to
+        ``max_seq`` ingested tokens and evicted without an output token.
+        """
+        req = slot.req
+        truncated = len(slot.pending) > self.max_seq
+        toks = slot.pending[:self.max_seq]
+        n = len(toks)
+        tokens = np.zeros((self.b, n), np.int32)
+        tokens[i] = toks
+        # The shared scan writes positions [0, n) for EVERY row; rows of
+        # other slots must keep their entries — snapshot and restore.
+        others = [j for j in range(self.b) if j != i]
+        snap = {name: self.cache[name][:, others, :n]
+                for name in self.cache if name in
+                ("k", "v", "k_scale", "v_scale")}
+        logits, self.cache = self._replay(
+            self.params, self.cache, jnp.asarray(tokens))
+        if others:
+            oth = jnp.asarray(others)
+            for name, before in snap.items():
+                self.cache[name] = self.cache[name].at[:, oth, :n].set(
+                    before)
+        slot.pos = n
+        slot.pending = []
+        self.replayed_tokens += n
+        if truncated:
+            # step-path semantics: the prompt never finished ingesting, so
+            # no output token is produced; the slot is evicted at the
+            # cache boundary.
+            req.done = True
+            self.finished.append(req)
+            slot.req = None
+            slot.pending = None
+            return
+        req.out.append(int(jnp.argmax(logits[i, -1])))
+        if (slot.pos >= self.max_seq or len(req.out) >= req.max_new
+                or req.out[-1] == self.eos):
+            req.done = True
+            self.finished.append(req)
+            slot.req = None
+            slot.pending = None
 
     @property
     def n_active(self) -> int:

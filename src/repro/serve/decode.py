@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.nn.layers import logits_projection, rms_norm
-from repro.nn.mlp import mlp_block
+from repro.nn.mlp import mlp_block, run_layers
 from repro.nn.moe import moe_block
 from repro.nn.transformer import (
     _attn_apply,
@@ -55,7 +55,7 @@ def decoder_decode_step(params, cfg, cache, tokens, pos,
     x = _decoder_embed(params, cfg, tokens)
     int8 = "k_scale" in cache
 
-    def body(x, inp):
+    def body(x, inp, layer):
         if int8:
             p, kc, vc, ksc, vsc = inp
             h, (kc, ksc), (vc, vsc) = _decode_attn(
@@ -72,24 +72,26 @@ def decoder_decode_step(params, cfg, cache, tokens, pos,
             if cfg.moe.n_shared:
                 shared = lambda z: mlp_block(
                     {"w_in": p["sh_w_in"], "w_out": p["sh_w_out"]}, z, cfg,
-                    lut_tables)
+                    lut_tables, layer=layer)
             h, _ = moe_block(
                 {"router": p["router"], "w_in": p["moe_w_in"],
                  "w_out": p["moe_w_out"]}, hin, cfg, shared_mlp=shared,
-                lut_tables=lut_tables)
+                lut_tables=lut_tables, layer=layer)
         else:
-            h = mlp_block(p, hin, cfg, lut_tables)
+            h = mlp_block(p, hin, cfg, lut_tables, layer=layer)
         out = (kc, vc, ksc, vsc) if int8 else (kc, vc)
         return x + h, out
 
     if int8:
         xs = (params["blocks"], cache["k"], cache["v"], cache["k_scale"],
               cache["v_scale"])
-        x, (ks, vs, kss, vss) = jax.lax.scan(body, x, xs)
+        x, (ks, vs, kss, vss) = run_layers(body, x, xs,
+                                           lut_tables=lut_tables)
         new_cache = {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss}
     else:
-        x, (ks, vs) = jax.lax.scan(
-            body, x, (params["blocks"], cache["k"], cache["v"]))
+        x, (ks, vs) = run_layers(
+            body, x, (params["blocks"], cache["k"], cache["v"]),
+            lut_tables=lut_tables)
         new_cache = {"k": ks, "v": vs}
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_projection(x, params["lm_head"])
@@ -206,3 +208,29 @@ def decode_step(params, cfg: ArchConfig, cache, tokens, pos,
                 lut_tables=None):
     return DECODE_FNS[cfg.family](params, cfg, cache, tokens, pos,
                                   lut_tables=lut_tables)
+
+
+def prefill_replay(params, cfg: ArchConfig, cache, tokens, start_pos=0,
+                   lut_tables=None):
+    """Replay a (B, T) prompt through the single-token decode step with a
+    ``lax.scan`` over positions: (last-token logits, filled cache).
+
+    This is the batcher-level prefill for caches the full-sequence prefill
+    cannot produce — the decode *write path* quantizes, so replaying into
+    an int8 KV cache yields exactly the entries steady-state decode would
+    have written (scales included), and the same LUT-compressed
+    activations (``lut_tables``) run during ingestion as during decode.
+    One compiled scan replaces T python-level step calls.
+    """
+    t = tokens.shape[1]
+
+    def body(c, inp):
+        tok, pos = inp
+        logits, c = decode_step(params, cfg, c, tok, pos,
+                                lut_tables=lut_tables)
+        return c, logits
+
+    xs = (jnp.swapaxes(tokens, 0, 1)[:, :, None],
+          start_pos + jnp.arange(t))
+    cache, logits = jax.lax.scan(body, cache, xs)
+    return logits[-1], cache

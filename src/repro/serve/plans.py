@@ -8,18 +8,32 @@ selected plans into serve/lut_act end-to-end"):
    (per-layer MLP nonlinearity, MoE expert activation, RWKV channel-mix
    squared-ReLU) is tabulated + calibration-quantized into a
    :class:`~repro.core.TableSpec` (one per layer per site kind, the same
-   granularity a per-layer-calibrated deployment would use).
+   granularity a per-layer-calibrated deployment would use).  Calibration
+   comes in two strengths:
+
+   * a **shared** raw sample array — every site gets the same care mask,
+     so the engine's dedupe collapses the per-layer tables into one plan
+     per site kind (the pre-calibration behavior);
+   * a per-site :class:`~repro.calib.CalibrationSet` (captured observed-
+     pattern masks, :mod:`repro.calib`) — every ``(layer, site)`` gets its
+     *own* care mask and output quantization, which is the paper's
+     don't-care freedom exercised per table.
+
 2. **Dedupe + compression** — the specs go through
    :func:`~repro.core.engine.compress_network_report`, which shares
    duplicate ``(values, care)`` tables so each unique table is compressed
-   once; the hit-rate is reported in the :class:`CompressReport`.
-3. **Materialization** — the winning plan per site kind is packed into
-   device-ready :class:`~repro.kernels.PlanArrays` and exported as the
-   ``lut_tables`` dict that :func:`repro.serve.decode_step`,
+   once; per-site masks make tables genuinely distinct, so the hit-rate
+   (``CompressReport.dedup_rate``) drops below the all-shared collapse.
+3. **Materialization** — winning plans are packed into device-ready
+   :class:`~repro.kernels.PlanArrays` and exported as the ``lut_tables``
+   dict that :func:`repro.serve.decode_step`,
    :class:`repro.serve.ContinuousBatcher` and :mod:`repro.launch.serve`
-   consume, with a choice of runtime backend: ``"gather"`` (GSPMD-
-   shardable ``jnp.take`` form) or ``"pallas"`` (fused quantize/
-   reconstruct/dequantize kernel).  The two backends bit-match
+   consume.  Per-site plans emit one entry per layer (``{"layers":
+   [...]}``), which makes the nn layer stacks unroll
+   (:func:`repro.nn.mlp.run_layers`) so each layer closes over its own
+   arrays.  Both runtime backends — ``"gather"`` (GSPMD-shardable
+   ``jnp.take``) and ``"pallas"`` (fused quantize/reconstruct/dequantize
+   kernel) — bit-match under either calibration mode
    (:func:`verify_backend_equivalence`, asserted in tests and the bench).
 """
 from __future__ import annotations
@@ -30,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.calib import CalibrationSet
 from repro.configs.base import ArchConfig
 from repro.core import CompressConfig, CompressReport, compress_network_report
 from repro.core.table import TableSpec
@@ -44,6 +59,11 @@ from repro.nn.lut_act import (
 # nn.lut_act.build_lut_activation).
 DEFAULT_COMPRESS = dict(exiguity=250, m_candidates=(8, 16, 32, 64),
                         lb_candidates=(0, 1, 2, 3))
+
+# Families whose layer stacks support the unrolled per-layer table path
+# (repro.nn.mlp.run_layers).  encdec keeps a scanned decoder, so per-site
+# calibration degrades gracefully to one shared mask per site kind there.
+PER_LAYER_FAMILIES = ("dense", "moe", "vlm", "ssm", "hybrid")
 
 
 def base_activation(name: str) -> str:
@@ -77,17 +97,43 @@ def activation_sites(cfg: ArchConfig) -> list[tuple[str, str]]:
 
 @dataclasses.dataclass
 class SitePlan:
-    """One site kind's served table (shared by every layer's site)."""
+    """One site kind's served table(s).
+
+    ``luts`` holds one entry (shared across every layer's site — the
+    shared-calibration collapse) or one per layer (``per_layer=True``,
+    per-site calibration).
+    """
 
     site: str
     act: str
-    lut: LUTActivation
-    n_sites: int          # how many per-layer sites share this table
+    luts: list[LUTActivation]
+    n_sites: int          # how many per-layer sites this kind covers
+    per_layer: bool = False
+
+    @property
+    def lut(self) -> LUTActivation:
+        """The shared table (or layer 0's, for per-layer plans)."""
+        return self.luts[0]
+
+    @property
+    def cost(self) -> int:
+        """Total P-LUT cost of every distinct table served for this kind."""
+        return sum(l.plan.plut_cost() for l in self.luts)
+
+    @property
+    def dontcare_frac(self) -> float:
+        """Mean don't-care fraction over this kind's served tables."""
+        return float(np.mean([l.dontcare_frac for l in self.luts]))
 
     def entry(self) -> dict:
-        """The ``{"meta", "arrays"}`` dict the nn layer consumes."""
-        return {"meta": self.lut.meta(),
-                "arrays": PlanArrays.from_plan(self.lut.plan).arrays}
+        """The site entry the nn layer consumes: ``{"meta", "arrays"}``
+        (shared) or ``{"layers": [...]}`` (per layer)."""
+        def one(lut: LUTActivation) -> dict:
+            return {"meta": lut.meta(),
+                    "arrays": PlanArrays.from_plan(lut.plan).arrays}
+        if self.per_layer:
+            return {"layers": [one(l) for l in self.luts]}
+        return one(self.lut)
 
 
 @dataclasses.dataclass
@@ -99,6 +145,7 @@ class ServingPlans:
     report: CompressReport
     sites: dict[str, SitePlan]
     backend: str = "gather"
+    calib: str = "shared"    # "shared" | "per_site"
 
     def tables_for_model(self, backend: str | None = None) -> dict:
         """The ``lut_tables`` dict threaded through decode/prefill/batcher."""
@@ -111,48 +158,34 @@ class ServingPlans:
         return dataclasses.replace(cfg, lut_activation=True)
 
     @property
+    def per_layer(self) -> bool:
+        return any(sp.per_layer for sp in self.sites.values())
+
+    @property
     def total_cost(self) -> int:
-        return sum(sp.lut.plan.plut_cost() for sp in self.sites.values())
+        """Summed P-LUT cost of every table the runtime actually holds."""
+        return sum(sp.cost for sp in self.sites.values())
 
     def summary(self) -> str:
-        parts = [
-            f"{sp.site}({sp.act}): {sp.lut.plan.plut_cost()} P-LUTs, "
-            f"{sp.lut.dontcare_frac:.0%} don't-care, "
-            f"shared by {sp.n_sites} sites"
-            for sp in self.sites.values()
-        ]
-        return (f"{self.arch} [{self.family}] serving plans — "
-                + "; ".join(parts)
+        parts = []
+        for sp in self.sites.values():
+            n_tabs = len(sp.luts)
+            tabs = f"{n_tabs} per-layer tables" if sp.per_layer else (
+                f"shared by {sp.n_sites} sites")
+            parts.append(
+                f"{sp.site}({sp.act}): {sp.cost} P-LUTs, "
+                f"{sp.dontcare_frac:.0%} don't-care, {tabs}")
+        return (f"{self.arch} [{self.family}] serving plans "
+                f"[calib={self.calib}] — " + "; ".join(parts)
                 + f" | engine: {self.report.summary()}")
 
 
-def build_serving_plans(
-    cfg: ArchConfig,
-    calibration: np.ndarray,
-    *,
-    w_in: int | None = None,
-    w_out: int | None = None,
-    x_lo: float = -8.0,
-    x_hi: float = 8.0,
-    compress_cfg: CompressConfig | None = None,
-    workers: int | None = None,
-    backend: str = "gather",
-    verbose: bool = False,
-) -> ServingPlans:
-    """Compress every activation site of ``cfg`` into serving tables.
-
-    One :class:`TableSpec` is built per (layer, site kind); with a shared
-    calibration set the per-layer tables are identical and the engine's
-    dedupe compresses each unique table once (``report.dedup_rate`` is
-    (L-1)/L per site kind — the ROADMAP duplicate-sharing item).
-    """
-    w_in = w_in or cfg.lut_act_bits_in
-    w_out = w_out or cfg.lut_act_bits_out
-    kinds = activation_sites(cfg)
-    # Tabulate + calibrate once per distinct activation function — the
-    # per-layer specs are renamed views of the same table (shared
-    # calibration), so there is no reason to re-histogram the calibration
-    # array per layer just to feed tables the engine dedupe collapses.
+def _shared_specs(cfg, kinds, calibration, w_in, w_out, x_lo, x_hi):
+    """Legacy shared-calibration path: tabulate + calibrate once per
+    distinct activation function — the per-layer specs are renamed views
+    of the same table, so there is no reason to re-histogram the
+    calibration array per layer just to feed tables the engine dedupe
+    collapses."""
     by_act: dict[str, tuple[TableSpec, dict]] = {}
     for _, act in kinds:
         if act not in by_act:
@@ -166,19 +199,98 @@ def build_serving_plans(
             spec, quant = by_act[act]
             specs.append(dataclasses.replace(spec, name=f"L{layer}/{site}"))
             metas.append((site, act, quant))
+    return specs, metas
+
+
+def _per_site_specs(cfg, kinds, calib: CalibrationSet, w_in, w_out,
+                    x_lo, x_hi):
+    """Per-site calibration path: one care mask (and output quantization)
+    per ``(layer, site)`` from the captured CalibrationSet; falls back to
+    the site-kind mask where no per-layer key exists (encdec, or a
+    layer-agnostic capture)."""
+    specs: list[TableSpec] = []
+    metas: list[tuple[str, str, dict]] = []
+    layered = cfg.family in PER_LAYER_FAMILIES
+    for layer in range(cfg.n_layers):
+        for site, act in kinds:
+            care = calib.mask_for(site, layer if layered else None)
+            if care is None:
+                raise ValueError(
+                    f"build_serving_plans: calibration has no mask for "
+                    f"site {site!r} (layer {layer}); captured sites: "
+                    f"{calib.sites()}")
+            spec, quant = activation_table(
+                act, care=care, w_in=w_in, w_out=w_out, x_lo=x_lo,
+                x_hi=x_hi, name=f"L{layer}/{site}")
+            specs.append(spec)
+            metas.append((site, act, quant))
+    return specs, metas
+
+
+def build_serving_plans(
+    cfg: ArchConfig,
+    calibration: np.ndarray | CalibrationSet,
+    *,
+    w_in: int | None = None,
+    w_out: int | None = None,
+    x_lo: float = -8.0,
+    x_hi: float = 8.0,
+    compress_cfg: CompressConfig | None = None,
+    workers: int | None = None,
+    backend: str = "gather",
+    verbose: bool = False,
+) -> ServingPlans:
+    """Compress every activation site of ``cfg`` into serving tables.
+
+    One :class:`TableSpec` is built per (layer, site kind).  With a shared
+    calibration sample array the per-layer tables are identical and the
+    engine's dedupe compresses each unique table once
+    (``report.dedup_rate`` is (L-1)/L per site kind).  With a per-site
+    :class:`~repro.calib.CalibrationSet` every site carries its own
+    observed-pattern care mask, dedupe only merges genuinely identical
+    ``(values, care)`` pairs, and the runtime serves one table per layer
+    (unrolled layer stacks close over their own arrays).
+    """
+    per_site = isinstance(calibration, CalibrationSet)
+    if per_site:
+        # Masks are bound to the quantizer they were captured under.
+        if calibration.w_in is None:
+            raise ValueError(
+                "build_serving_plans: CalibrationSet has no w_in — "
+                "activation serving needs masks captured on the LUT input "
+                "grid (repro.calib.capture_model)")
+        w_in = calibration.w_in
+        x_lo, x_hi = calibration.x_lo, calibration.x_hi
+    else:
+        w_in = w_in or cfg.lut_act_bits_in
+    w_out = w_out or cfg.lut_act_bits_out
+    kinds = activation_sites(cfg)
+    if per_site:
+        specs, metas = _per_site_specs(cfg, kinds, calibration, w_in,
+                                       w_out, x_lo, x_hi)
+    else:
+        specs, metas = _shared_specs(cfg, kinds, calibration, w_in, w_out,
+                                     x_lo, x_hi)
     ccfg = compress_cfg or CompressConfig(**DEFAULT_COMPRESS)
     report = compress_network_report(specs, ccfg, workers=workers,
                                      verbose=verbose)
+    layered = per_site and cfg.family in PER_LAYER_FAMILIES
     sites: dict[str, SitePlan] = {}
     for (site, act, quant), spec, plan in zip(metas, specs, report.plans):
+        lut = None
+        if layered or site not in sites:
+            lut = lut_activation_from_plan(plan, spec, quant, x_lo=x_lo,
+                                           x_hi=x_hi, exiguity=ccfg.exiguity)
         if site in sites:
             sites[site].n_sites += 1
+            if lut is not None:
+                sites[site].luts.append(lut)
             continue
-        lut = lut_activation_from_plan(plan, spec, quant, x_lo=x_lo,
-                                       x_hi=x_hi, exiguity=ccfg.exiguity)
-        sites[site] = SitePlan(site=site, act=act, lut=lut, n_sites=1)
+        sites[site] = SitePlan(site=site, act=act, luts=[lut], n_sites=1,
+                               per_layer=layered)
     return ServingPlans(arch=cfg.name, family=cfg.family, report=report,
-                        sites=sites, backend=backend)
+                        sites=sites, backend=backend,
+                        calib="per_site" if per_site else "shared")
 
 
 def verify_backend_equivalence(
@@ -193,10 +305,10 @@ def verify_backend_equivalence(
     Pallas backend and assert they bit-match token-for-token.
 
     Both backends run identical integer reconstruction math and the same
-    float dequantization expression, so the served logits — and therefore
-    every sampled token — must agree exactly.  Returns the (B, n_new)
-    token lists on success; raises ``AssertionError`` on the first
-    diverging token.
+    float dequantization expression — per layer, when the plans are
+    per-site — so the served logits, and therefore every sampled token,
+    must agree exactly.  Returns the (B, n_new) token lists on success;
+    raises ``AssertionError`` on the first diverging token.
     """
     from .decode import decode_step, prefill
 

@@ -1,0 +1,335 @@
+"""Per-site streaming calibration subsystem: capture -> masks -> store ->
+per-site serving plans -> per-layer runtime, plus the threaded
+shift-match scoring path and the batcher prefill replay."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.calib import (
+    ActivationCapture,
+    CalibrationSet,
+    calibration_from_capture,
+    capture_calibration,
+    capture_model,
+    care_mask_from_hist,
+    load_calibration,
+    save_calibration,
+    synthetic_batches,
+)
+from repro.configs import get_config, smoke_config
+from repro.core import CompressConfig, TableSpec, compress_network_report
+from repro.core.reduced import _find_shift_match
+from repro.nn import init_params
+from repro.serve import (
+    ContinuousBatcher,
+    Request,
+    build_serving_plans,
+    verify_backend_equivalence,
+)
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def dense_calib(dense_model):
+    cfg, params = dense_model
+    batches = synthetic_batches(cfg, 2, batch_size=2, seq_len=8, seed=1)
+    return capture_calibration(params, cfg, batches, w_in=8)
+
+
+# =========================================================================
+# capture
+# =========================================================================
+def test_capture_per_layer_site_keys(dense_model, dense_calib):
+    cfg, _ = dense_model
+    assert dense_calib.sites() == [f"L{i}/mlp" for i in range(cfg.n_layers)]
+    assert dense_calib.per_layer
+    for key in dense_calib.sites():
+        mask = dense_calib.masks[key]
+        assert mask.shape == (256,)
+        assert 2 <= int(mask.sum()) < 256  # observed, but not everything
+    # the whole point: distinct layers observe distinct input patterns
+    m0, m1 = (dense_calib.masks[f"L{i}/mlp"] for i in range(2))
+    assert not np.array_equal(m0, m1)
+
+
+def test_capture_streams_across_batches(dense_model):
+    """Histograms accumulate: more batches can only add observed bins."""
+    cfg, params = dense_model
+    b1 = synthetic_batches(cfg, 1, batch_size=2, seq_len=8, seed=1)
+    b3 = synthetic_batches(cfg, 3, batch_size=2, seq_len=8, seed=1)
+    c1 = capture_calibration(params, cfg, b1, w_in=8)
+    c3 = capture_calibration(params, cfg, b3, w_in=8)
+    for key in c1.sites():
+        assert not np.any(c1.masks[key] & ~c3.masks[key])
+        assert c3.hists[key].sum() == 3 * c1.hists[key].sum()
+
+
+def test_capture_works_under_jit():
+    """Traced values reach the histograms through debug callbacks."""
+    from repro.nn.mlp import make_activation
+
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    cap = ActivationCapture(w_in=8)
+    x = jnp.linspace(-2.0, 2.0, 64)
+    with cap:
+        fn = jax.jit(make_activation(cfg, None, site="mlp", layer=0))
+        fn(x).block_until_ready()
+    jax.effects_barrier()
+    eager = ActivationCapture(w_in=8)
+    eager._accum("L0/mlp", np.asarray(x))
+    np.testing.assert_array_equal(cap.hists["L0/mlp"],
+                                  eager.hists["L0/mlp"])
+
+
+def test_capture_moe_expert_site():
+    cfg = smoke_config(get_config("deepseek-moe-16b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batches = synthetic_batches(cfg, 1, batch_size=2, seq_len=8, seed=1)
+    calib = capture_calibration(params, cfg, batches, w_in=8)
+    assert any(k.endswith("/expert") for k in calib.sites())
+    assert any(k.endswith("/mlp") for k in calib.sites())  # shared expert
+
+
+# =========================================================================
+# masks
+# =========================================================================
+def test_care_mask_knobs():
+    hist = np.zeros(16, np.int64)
+    hist[[3, 4, 10]] = [5, 1, 100]
+    np.testing.assert_array_equal(
+        np.nonzero(care_mask_from_hist(hist))[0], [3, 4, 10])
+    # min_count drops the thin bin
+    np.testing.assert_array_equal(
+        np.nonzero(care_mask_from_hist(hist, min_count=2))[0], [3, 10])
+    # smoothing re-admits it (neighbor credit) and widens edges
+    sm = care_mask_from_hist(hist, min_count=2, smoothing=1)
+    assert sm[4] and sm[2] and sm[9] and sm[11]
+    # coverage trims the low-mass tail regardless of count
+    cov = care_mask_from_hist(hist, coverage=0.99)
+    assert cov[10] and cov[3] and not cov[4]
+
+
+def test_calibration_from_capture_rejects_degenerate():
+    cap = ActivationCapture(w_in=8)
+    cap._accum("L0/mlp", np.full(100, 1.5))  # constant: one observed bin
+    with pytest.raises(ValueError, match="care bins"):
+        calibration_from_capture(cap)
+    with pytest.raises(ValueError, match="no activation sites"):
+        calibration_from_capture(ActivationCapture(w_in=8))
+
+
+# =========================================================================
+# store
+# =========================================================================
+def test_calibration_roundtrip_bitexact(tmp_path, dense_calib):
+    path = save_calibration(str(tmp_path / "calib"), dense_calib)
+    loaded = load_calibration(path)
+    assert loaded.w_in == dense_calib.w_in
+    assert loaded.x_lo == dense_calib.x_lo
+    assert loaded.x_hi == dense_calib.x_hi
+    assert loaded.meta == dense_calib.meta
+    assert set(loaded.masks) == set(dense_calib.masks)
+    for key in dense_calib.masks:
+        np.testing.assert_array_equal(loaded.masks[key],
+                                      dense_calib.masks[key])
+        np.testing.assert_array_equal(loaded.hists[key],
+                                      dense_calib.hists[key])
+
+
+def test_store_rejects_foreign_npz(tmp_path):
+    path = str(tmp_path / "not_calib.npz")
+    np.savez(path, foo=np.zeros(4))
+    with pytest.raises(ValueError, match="header"):
+        load_calibration(path)
+
+
+# =========================================================================
+# per-site serving plans
+# =========================================================================
+def test_per_site_plans_break_dedupe_collapse(dense_model):
+    """Distinct per-site masks -> distinct tables -> dedupe no longer
+    collapses every layer into one plan (the acceptance criterion)."""
+    cfg, params = dense_model
+    # deterministic, explicitly distinct masks per layer
+    masks = {}
+    for i in range(cfg.n_layers):
+        m = np.zeros(256, bool)
+        m[10 * (i + 1):200] = True
+        masks[f"L{i}/mlp"] = m
+    calib = CalibrationSet(masks=masks, w_in=8)
+    plans = build_serving_plans(cfg, calib, w_out=8)
+    rep = plans.report
+    assert plans.calib == "per_site" and plans.per_layer
+    assert rep.n_unique == cfg.n_layers
+    assert rep.dedup_hits == 0
+    assert rep.dedup_rate < 1.0
+
+    # shared calibration still collapses (and is cheaper to hold)
+    shared = build_serving_plans(cfg, RNG.normal(size=30000) * 3,
+                                 w_in=8, w_out=8)
+    assert shared.report.dedup_rate > rep.dedup_rate
+    assert shared.report.n_unique == 1
+    assert plans.total_cost >= shared.total_cost
+
+    # runtime form: one entry per layer
+    tabs = plans.tables_for_model()
+    entry = tabs["sites"]["mlp"]
+    assert len(entry["layers"]) == cfg.n_layers
+
+
+def test_captured_per_site_backend_equivalence(dense_model, dense_calib):
+    """The fused Pallas path stays token-for-token bit-identical to the
+    gather reference under captured per-site masks."""
+    cfg, params = dense_model
+    plans = build_serving_plans(cfg, dense_calib, w_out=8)
+    assert plans.report.dedup_rate < 1.0
+    prompt = np.asarray(RNG.integers(1, cfg.vocab_size, (2, 5)), np.int32)
+    toks = verify_backend_equivalence(cfg, params, plans, prompt, 3)
+    assert len(toks) == 2 and all(len(t) == 3 for t in toks)
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "recurrentgemma-9b"])
+def test_per_site_equivalence_other_families(arch):
+    cfg = smoke_config(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batches = synthetic_batches(cfg, 1, batch_size=2, seq_len=8, seed=1)
+    calib = capture_calibration(params, cfg, batches, w_in=8)
+    plans = build_serving_plans(cfg, calib, w_out=8)
+    assert plans.report.dedup_rate < 1.0
+    prompt = np.asarray(RNG.integers(1, cfg.vocab_size, (2, 4)), np.int32)
+    verify_backend_equivalence(cfg, params, plans, prompt, 2)
+
+
+def test_plans_reject_missing_site():
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    calib = CalibrationSet(masks={"L0/ffn": np.ones(256, bool)}, w_in=8)
+    with pytest.raises(ValueError, match="no mask for"):
+        build_serving_plans(cfg, calib, w_out=8)
+
+
+def test_plans_reject_widthless_calibration():
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    calib = CalibrationSet(masks={"mlp": np.ones(256, bool)}, w_in=None)
+    with pytest.raises(ValueError, match="w_in"):
+        build_serving_plans(cfg, calib, w_out=8)
+
+
+# =========================================================================
+# lutnn sharing
+# =========================================================================
+def test_lutnn_masks_share_calibration_artifacts(tmp_path):
+    from repro.lutnn import (
+        LUTNNConfig,
+        extract_tables,
+        lutnn_init,
+        mark_observed,
+        observed_calibration_set,
+    )
+    from repro.lutnn.extract import network_table_specs
+    from repro.lutnn.model import make_connectivity
+
+    cfg = LUTNNConfig(name="t", n_inputs=4, layer_sizes=(6, 4), beta=2,
+                      fanin=2, beta0=2, fanin0=2, seed=0)
+    params = lutnn_init(cfg)
+    conn = make_connectivity(cfg)
+    tables = extract_tables(params, cfg)
+    x = RNG.random((32, cfg.n_inputs)).astype(np.float32)
+    observed = mark_observed(tables, conn, cfg, x)
+    calib = observed_calibration_set(observed, cfg)
+    path = save_calibration(str(tmp_path / "lutnn"), calib)
+    loaded = load_calibration(path)
+    specs_raw = network_table_specs(tables, observed, cfg)
+    specs_cal = network_table_specs(tables, loaded, cfg)
+    for a, b in zip(specs_raw, specs_cal):
+        np.testing.assert_array_equal(a.care_mask(), b.care_mask())
+        np.testing.assert_array_equal(a.values, b.values)
+
+
+# =========================================================================
+# batcher prefill replay
+# =========================================================================
+def _run_batcher(cfg, params, prompts, max_new, **kw):
+    b = ContinuousBatcher(cfg, params, batch_size=2, max_seq=16,
+                          eos_token=-1, **kw)
+    for i, p in enumerate(prompts):
+        b.submit(Request(rid=i, prompt=p, max_new=max_new))
+    return sorted(b.run(), key=lambda r: r.rid)
+
+
+@pytest.mark.parametrize("kv_dtype", ["bfloat16", "int8"])
+def test_batcher_replay_matches_step(dense_model, kv_dtype):
+    """Prefill replay (one compiled scan per prompt) serves token-for-token
+    what per-tick ingestion serves — including through the int8 KV write
+    path, which full-sequence prefill cannot fill."""
+    cfg, params = dense_model
+    rng = np.random.default_rng(7)
+    prompts = [list(rng.integers(1, cfg.vocab_size, n)) for n in (4, 6, 3)]
+    step = _run_batcher(cfg, params, prompts, 3, kv_dtype=kv_dtype)
+    replay = _run_batcher(cfg, params, prompts, 3, kv_dtype=kv_dtype,
+                          prefill="replay")
+    for a, b in zip(step, replay):
+        assert a.out == b.out, (a.rid, a.out, b.out)
+    assert sum(len(p) for p in prompts[:2]) <= 16
+
+
+def test_batcher_replay_with_lut_tables(dense_model, dense_calib):
+    """Replay evaluates the same per-site LUT activations as decode."""
+    cfg, params = dense_model
+    plans = build_serving_plans(cfg, dense_calib, w_out=8)
+    cfg_lut = plans.patched_config(cfg)
+    tables = plans.tables_for_model()
+    rng = np.random.default_rng(8)
+    prompts = [list(rng.integers(1, cfg.vocab_size, n)) for n in (4, 5)]
+    step = _run_batcher(cfg_lut, params, prompts, 3, lut_tables=tables)
+    replay = _run_batcher(cfg_lut, params, prompts, 3, lut_tables=tables,
+                          prefill="replay")
+    for a, b in zip(step, replay):
+        assert a.out == b.out
+
+
+def test_batcher_replay_truncates_overlong_prompt(dense_model):
+    cfg, params = dense_model
+    rng = np.random.default_rng(9)
+    long_prompt = list(rng.integers(1, cfg.vocab_size, 20))  # > max_seq
+    done = _run_batcher(cfg, params, [long_prompt], 4, prefill="replay")
+    assert done[0].done and done[0].out == []
+    assert len(done) == 1
+
+
+# =========================================================================
+# threaded shift-match scoring
+# =========================================================================
+def test_find_shift_match_threads_equivalent():
+    rng = np.random.default_rng(3)
+    for trial in range(30):
+        n, m, w_st = int(rng.integers(1, 200)), 16, int(rng.integers(1, 6))
+        cands = rng.integers(0, 1 << w_st, (n, m)).astype(np.int64)
+        target = cands[int(rng.integers(0, n))] >> int(rng.integers(0, w_st))
+        if rng.random() < 0.5:
+            target = rng.integers(0, 1 << w_st, m).astype(np.int64)
+        care = rng.random(m) < 0.8
+        serial = _find_shift_match(target, care, cands, w_st)
+        threaded = _find_shift_match(target, care, cands, w_st, threads=4)
+        assert serial == threaded, (trial, serial, threaded)
+
+
+def test_match_threads_network_bit_identical():
+    specs = [TableSpec.random(8, 6, 0.4, seed=i, smooth=True,
+                              name=f"t{i}") for i in range(3)]
+    rep_serial = compress_network_report(
+        specs, CompressConfig(exiguity=250), dedupe=False)
+    rep_threaded = compress_network_report(
+        specs, CompressConfig(exiguity=250, match_threads=4), dedupe=False)
+    for a, b in zip(rep_serial.plans, rep_threaded.plans):
+        assert a.plut_cost() == b.plut_cost()
+        np.testing.assert_array_equal(a.reconstruct(), b.reconstruct())
