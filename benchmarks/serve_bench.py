@@ -1,18 +1,23 @@
 """Serving benchmark: plain vs LUT-compressed activations on the decode path.
 
 Measures, per architecture family (dense / moe / ssm by default):
-  - prefill latency (compile and steady-state),
+  - prefill latency (compile and steady-state) and decode compile time,
   - decode tokens/sec for plain activations and, per calibration mode
     (``calib=shared|per_site``), the gather-backend LUT path and the
     fused-Pallas LUT path,
+  - per-site plans additionally split by **execution form**
+    (``plan_exec=unrolled|stacked``): the python-unrolled per-layer
+    reference vs the stacked ``(L, …)`` form served inside ``lax.scan``,
+    with the total table bytes each form uploads (stacked padding
+    overhead vs L separate array sets),
   - the engine plan stats behind the served tables (P-LUT cost, saved
-    fraction, dedupe hit-rate — ``per_site`` captures real per-layer
-    activations through repro.calib, so dedupe stops collapsing the
-    layers and the shared-vs-per-site total plan cost is comparable),
+    fraction, dedupe hit-rate),
 and runs the backend equivalence harness (gather vs pallas decode must
 bit-match token-for-token) per calibration mode before timing anything.
+A depth-sweep row (one dense arch at ``--depth`` layers) makes the
+O(L)-compile-time win of the stacked form visible in the committed file.
 
-Writes the trajectory file ``BENCH_serve.json`` (schema: serve_bench/v2).
+Writes the trajectory file ``BENCH_serve.json`` (schema: serve_bench/v3).
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
   PYTHONPATH=src python benchmarks/serve_bench.py \
@@ -21,6 +26,7 @@ Writes the trajectory file ``BENCH_serve.json`` (schema: serve_bench/v2).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -36,6 +42,7 @@ from repro.serve import (
     build_serving_plans,
     decode_step,
     prefill,
+    tables_nbytes,
     verify_backend_equivalence,
 )
 
@@ -53,6 +60,8 @@ def _make_batch(cfg, rng, b, t):
 def _time_mode(cfg, params, batch, *, max_seq, n_new, lut_tables):
     """One serving mode: returns prefill/decode timings + greedy tokens."""
     b, t = batch["tokens"].shape
+    if cfg.family == "vlm":
+        t += cfg.n_patches
     pf = jax.jit(lambda p, x: prefill(p, cfg, x, max_seq=max_seq,
                                       lut_tables=lut_tables))
     t0 = time.perf_counter()
@@ -67,9 +76,11 @@ def _time_mode(cfg, params, batch, *, max_seq, n_new, lut_tables):
     step = jax.jit(lambda p, c, tk, pos: decode_step(
         p, cfg, c, tk, pos, lut_tables=lut_tables))
     tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-    # warm the decode compile outside the timed loop
+    # the first step call compiles; time it as decode_compile_s
+    t0 = time.perf_counter()
     lg_w, cache = step(params, cache, tok, jnp.asarray(t))
     jax.block_until_ready(lg_w)
+    decode_compile_s = time.perf_counter() - t0
     logits = lg_w
     tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
     outs = []
@@ -83,6 +94,7 @@ def _time_mode(cfg, params, batch, *, max_seq, n_new, lut_tables):
     return {
         "prefill_compile_s": round(prefill_compile_s, 4),
         "prefill_s": round(prefill_s, 4),
+        "decode_compile_s": round(decode_compile_s, 4),
         "decode_s": round(dt, 4),
         "decode_tok_s": round(n_new * b / dt, 2),
         "tokens_req0": [o[0] for o in outs],
@@ -110,6 +122,49 @@ def _plan_stats(plans) -> dict:
     }
 
 
+def _time_calib_mode(cfg, params, bt, plans, *, max_seq, n_new) -> dict:
+    """Time one calibration mode across backends and (for per-layer
+    plans) both execution forms.
+
+    Within one execution form the gather and Pallas backends share the
+    whole surrounding graph, so their tokens must bit-match (hard
+    assert).  *Across* execution forms the model math itself lowers
+    through different XLA programs (scan body vs straight-line unroll),
+    whose fused bf16 rounding can differ in the last ulp independent of
+    the tables — exact cross-exec identity is asserted on float32 models
+    in tests/test_stacked.py; here the bench records whether the bf16
+    greedy tokens happened to agree (``exec_tokens_match``).
+    """
+    lut_cfg = plans.patched_config(cfg)
+    execs = ("unrolled", "stacked") if plans.per_layer else ("shared",)
+    res = {"exec": {}, "plans": _plan_stats(plans)}
+    exec_grids = {}
+    for exec_ in execs:
+        pe = None if exec_ == "shared" else exec_
+        tabs = {
+            "lut_gather": plans.tables_for_model(backend="gather",
+                                                 plan_exec=pe),
+            "lut_pallas": plans.tables_for_model(backend="pallas",
+                                                 plan_exec=pe),
+        }
+        entry = {"table_bytes": tables_nbytes(tabs["lut_gather"])}
+        for name, tables in tabs.items():
+            r = _time_mode(lut_cfg, params, bt, max_seq=max_seq,
+                           n_new=n_new, lut_tables=tables)
+            entry[name] = r
+        assert (entry["lut_gather"]["tokens_req0"]
+                == entry["lut_pallas"]["tokens_req0"]), (
+            f"gather/pallas decode diverged [{exec_}]: "
+            f"{entry['lut_gather']['tokens_req0']} vs "
+            f"{entry['lut_pallas']['tokens_req0']}")
+        exec_grids[exec_] = entry["lut_gather"]["tokens_req0"]
+        res["exec"][exec_] = entry
+    if len(exec_grids) > 1:
+        res["exec_tokens_match"] = len(set(
+            tuple(g) for g in exec_grids.values())) == 1
+    return res
+
+
 def bench_arch(arch: str, *, batch: int, prompt_len: int, n_new: int,
                full: bool, workers: int | None,
                calib_steps: int) -> dict:
@@ -119,18 +174,20 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, n_new: int,
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     b, t = batch, prompt_len
-    max_seq = t + n_new + 1
+    t_cache = t + (cfg.n_patches if cfg.family == "vlm" else 0)
+    max_seq = t_cache + n_new + 1
     bt = _make_batch(cfg, rng, b, t)
-    prompt = np.asarray(bt["tokens"])
 
     # calibration axis: one shared synthetic sample set vs per-site
     # observed-pattern masks captured from real per-layer activations
-    calibrations = {"shared": rng.normal(size=100000) * 3}
-    if cfg.family != "encdec":  # encdec capture has no per-layer identity
-        calibrations["per_site"] = capture_calibration(
+    # (every family captures per layer now — encdec included)
+    calibrations = {
+        "shared": rng.normal(size=100000) * 3,
+        "per_site": capture_calibration(
             params, cfg, synthetic_batches(cfg, calib_steps, batch_size=b,
                                            seq_len=t, seed=1),
-            w_in=cfg.lut_act_bits_in)
+            w_in=cfg.lut_act_bits_in),
+    }
 
     out = {
         "family": cfg.family,
@@ -140,33 +197,52 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, n_new: int,
     }
     for mode, calib in calibrations.items():
         plans = build_serving_plans(cfg, calib, workers=workers)
-        lut_cfg = plans.patched_config(cfg)
-
-        # Equivalence harness first: gather/pallas decode must bit-match.
-        equivalence_ok = False
-        if cfg.family not in ("vlm", "encdec"):  # prefill extra inputs
-            verify_backend_equivalence(cfg, params, plans, prompt,
-                                       min(n_new, 4), max_seq=max_seq)
-            equivalence_ok = True
-
-        res = {
-            "lut_gather": _time_mode(
-                lut_cfg, params, bt, max_seq=max_seq, n_new=n_new,
-                lut_tables=plans.tables_for_model(backend="gather")),
-            "lut_pallas": _time_mode(
-                lut_cfg, params, bt, max_seq=max_seq, n_new=n_new,
-                lut_tables=plans.tables_for_model(backend="pallas")),
-            "equivalence_ok": equivalence_ok,
-            "plans": _plan_stats(plans),
-        }
-        # the LUT paths must bit-match each other token-for-token
-        assert (res["lut_gather"]["tokens_req0"]
-                == res["lut_pallas"]["tokens_req0"]), (
-            f"gather/pallas decode diverged [{mode}]: "
-            f"{res['lut_gather']['tokens_req0']} vs "
-            f"{res['lut_pallas']['tokens_req0']}")
+        # Equivalence harness first: gather/pallas decode must bit-match
+        # in every served execution form (the full batch dict covers vlm
+        # patches / encdec frames).
+        for pe in (("stacked", "unrolled") if plans.per_layer
+                   else (None,)):
+            verify_backend_equivalence(
+                cfg, params, plans,
+                {k: np.asarray(v) for k, v in bt.items()},
+                min(n_new, 4), max_seq=max_seq, plan_exec=pe)
+        res = _time_calib_mode(cfg, params, bt, plans, max_seq=max_seq,
+                               n_new=n_new)
+        res["equivalence_ok"] = True
         out["calib"][mode] = res
     return out
+
+
+def bench_depth_sweep(arch: str, *, depth: int, batch: int, prompt_len: int,
+                      n_new: int, workers: int | None,
+                      calib_steps: int) -> dict:
+    """The compile-time case for stacking: one arch scaled to ``depth``
+    layers, per-site calibrated, gather backend — unrolled vs stacked
+    prefill/decode compile seconds."""
+    cfg = dataclasses.replace(smoke_config(get_config(arch)),
+                              n_layers=depth)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    bt = _make_batch(cfg, rng, batch, prompt_len)
+    t_cache = prompt_len + (cfg.n_patches if cfg.family == "vlm" else 0)
+    max_seq = t_cache + n_new + 1
+    calib = capture_calibration(
+        params, cfg, synthetic_batches(cfg, calib_steps, batch_size=batch,
+                                       seq_len=prompt_len, seed=1),
+        w_in=8)
+    plans = build_serving_plans(cfg, calib, w_out=8, workers=workers)
+    lut_cfg = plans.patched_config(cfg)
+    row = {"arch": arch, "family": cfg.family, "n_layers": depth,
+           "calib": "per_site", "backend": "gather"}
+    for exec_ in ("unrolled", "stacked"):
+        tables = plans.tables_for_model(backend="gather", plan_exec=exec_)
+        r = _time_mode(lut_cfg, params, bt, max_seq=max_seq, n_new=n_new,
+                       lut_tables=tables)
+        row[exec_] = {k: r[k] for k in
+                      ("prefill_compile_s", "decode_compile_s",
+                       "prefill_s", "decode_tok_s")}
+        row[exec_]["table_bytes"] = tables_nbytes(tables)
+    return row
 
 
 def main() -> None:
@@ -183,6 +259,8 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=None)
     ap.add_argument("--calib-steps", type=int, default=2,
                     help="capture batches for the per_site calib mode")
+    ap.add_argument("--depth", type=int, default=8,
+                    help="n_layers for the depth-sweep compile-time row")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args()
     if args.smoke:
@@ -194,7 +272,7 @@ def main() -> None:
             raise SystemExit(f"unknown arch {a!r}; have {sorted(ARCH_NAMES)}")
 
     results = {
-        "schema": "serve_bench/v2",
+        "schema": "serve_bench/v3",
         "scale": "full" if args.full else "smoke",
         "batch": args.batch,
         "prompt_len": args.prompt_len,
@@ -212,14 +290,27 @@ def main() -> None:
         results["archs"][arch] = res
         fam = res["family"]
         for mode, r in res["calib"].items():
-            print(f"{arch} [{fam}] calib={mode}: "
-                  f"plain {res['plain']['decode_tok_s']} tok/s | "
-                  f"lut-gather {r['lut_gather']['decode_tok_s']} tok/s | "
-                  f"lut-pallas {r['lut_pallas']['decode_tok_s']} tok/s | "
-                  f"dedupe {r['plans']['dedup_rate']:.0%} | "
-                  f"plan cost {r['plans']['served_cost']} | "
-                  f"equivalence="
-                  f"{'ok' if r['equivalence_ok'] else 'skipped'}")
+            for exec_, e in r["exec"].items():
+                print(f"{arch} [{fam}] calib={mode} exec={exec_}: "
+                      f"plain {res['plain']['decode_tok_s']} tok/s | "
+                      f"lut-gather {e['lut_gather']['decode_tok_s']} tok/s "
+                      f"(compile {e['lut_gather']['decode_compile_s']}s) | "
+                      f"lut-pallas {e['lut_pallas']['decode_tok_s']} tok/s "
+                      f"| {e['table_bytes']} table bytes | "
+                      f"dedupe {r['plans']['dedup_rate']:.0%} | "
+                      f"plan cost {r['plans']['served_cost']}")
+
+    sweep = bench_depth_sweep(
+        archs[0], depth=args.depth, batch=args.batch,
+        prompt_len=args.prompt_len, n_new=args.new_tokens,
+        workers=args.workers, calib_steps=args.calib_steps)
+    results["depth_sweep"] = sweep
+    print(f"depth-sweep [{sweep['arch']} x{sweep['n_layers']}]: "
+          f"prefill compile {sweep['unrolled']['prefill_compile_s']}s "
+          f"(unrolled) -> {sweep['stacked']['prefill_compile_s']}s "
+          f"(stacked); decode compile "
+          f"{sweep['unrolled']['decode_compile_s']}s -> "
+          f"{sweep['stacked']['decode_compile_s']}s")
 
     families = {r["family"] for r in results["archs"].values()}
     print(f"{len(results['archs'])} archs over {len(families)} families "

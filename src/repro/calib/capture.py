@@ -17,8 +17,10 @@ This module is the front end of that pipeline:
    path.
 2. Layer identity — while a capture is active the layer stacks unroll
    (``repro.nn.mlp.run_layers``) so each call site knows its layer index;
-   families whose loops are not unrolled (encdec) fall back to one
-   site-level histogram shared by all layers.
+   every family's decoder stack routes through ``run_layers`` (encdec
+   included), so all six families capture per-layer keys.  Loops outside
+   ``run_layers`` (the encdec *encoder*) fall back to a site-level
+   histogram, which per-layer keys shadow at mask resolution.
 3. :func:`capture_model` — two-pass eval driver: stream calibration
    batches through the exact (non-LUT) forward of any architecture family
    and return the filled capture.  Masks/smoothing live in
@@ -161,10 +163,11 @@ def capture_model(params, cfg, batches, *, w_in: int | None = None,
     every activation site's observed input bins.
 
     Runs the plain (non-LUT) forward of ``cfg``'s family once per batch
-    with the capture context active; the layer stacks unroll so dense /
-    moe / vlm / ssm / hybrid sites are captured per layer
-    (``L{i}/{site}`` keys).  encdec keeps its scanned decoder, so its
-    ``mlp`` site accumulates one shared layer-agnostic histogram.
+    with the capture context active; the layer stacks unroll so every
+    family's sites are captured per layer (``L{i}/{site}`` keys) —
+    encdec's decoder included.  The encdec *encoder* mlp accumulates a
+    layer-agnostic ``mlp`` histogram alongside, which the per-layer keys
+    shadow when masks are resolved.
     """
     from repro.nn.transformer import (
         decoder_forward,

@@ -4,7 +4,14 @@ Each kernel has a pure-jnp oracle in :mod:`ref` and a jit'd public wrapper
 in :mod:`ops`; kernels are validated in interpret mode on CPU and written
 against TPU VMEM BlockSpec tiling (see individual kernel docstrings).
 """
-from .ops import PlanArrays, default_interpret, lut_act, lut_reconstruct, lutnn_layer
+from .ops import (
+    PlanArrays,
+    default_interpret,
+    lut_act,
+    lut_act_stacked,
+    lut_reconstruct,
+    lutnn_layer,
+)
 
 __all__ = [
     "PlanArrays",
@@ -12,4 +19,5 @@ __all__ = [
     "lut_reconstruct",
     "lutnn_layer",
     "lut_act",
+    "lut_act_stacked",
 ]

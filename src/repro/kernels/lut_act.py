@@ -1,10 +1,24 @@
-"""Pallas TPU kernel: fused LUT-approximated activation.
+"""Pallas TPU kernels: fused LUT-approximated activation.
 
 The transformer-integration hot path (DESIGN.md SS2): quantize a float
 tensor onto the table's input grid, reconstruct the (ReducedLUT-compressed)
 table output via Eq. (1), dequantize — one VMEM round-trip instead of
 quantize/gather/dequant as three HBM-bound ops.  The compressed component
 tables stay resident in VMEM across the whole grid.
+
+Two variants:
+
+* :func:`lut_act_pallas` — one plan's tables closed over as whole-array
+  inputs (the shared-table / unrolled-per-layer form; ``l``/``w_lb``/
+  ``w_hb`` are Python statics baked into the kernel).
+* :func:`lut_act_stacked_pallas` — the layer-indexed form for per-layer
+  tables served inside ``lax.scan``: every component table comes in as a
+  padded ``(L, n)`` stack and the in-scan layer id arrives as a
+  scalar-prefetch operand, so the BlockSpec index maps pull **only layer
+  i's slab** into VMEM per grid step (instead of re-staging L layers'
+  tables every block), and the per-layer scalar metas (``l``, ``w_lb``,
+  ``w_hb``, output dequant range) are read from ``(L, k)`` side tables.
+  Bit-identical to running :func:`lut_act_pallas` with layer i's arrays.
 """
 from __future__ import annotations
 
@@ -13,6 +27,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .runtime import resolve_interpret
 
 
 def _kernel(x_ref, ust_ref, idx_ref, rsh_ref, bias_ref, lb_ref, out_ref, *,
@@ -56,8 +73,9 @@ def lut_act_pallas(
     y_lo: float,
     y_hi: float,
     block_rows: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     rows, lanes = x.shape
     if rows % block_rows != 0:
         raise ValueError(
@@ -79,3 +97,88 @@ def lut_act_pallas(
         out_shape=jax.ShapeDtypeStruct((rows, lanes), x.dtype),
         interpret=interpret,
     )(x, t_ust, t_idx, t_rsh, t_bias, t_lb)
+
+
+def _stacked_kernel(lid_ref, x_ref, ust_ref, idx_ref, rsh_ref, bias_ref,
+                    lb_ref, mi_ref, mf_ref, out_ref, *,
+                    any_lb, w_in, w_out, x_lo, x_hi):
+    """Layer-indexed body: the table refs hold ONE layer's slab (selected
+    by the scalar-prefetch layer id through the BlockSpec index maps) and
+    the per-layer scalars are traced values read from the meta rows —
+    same integer reconstruction math as :func:`_kernel`."""
+    del lid_ref  # consumed by the index maps
+    l = mi_ref[0, 0]
+    w_lb = mi_ref[0, 1]
+    w_hb = mi_ref[0, 2]
+    y_lo = mf_ref[0, 0]
+    y_span = mf_ref[0, 1]
+
+    x = x_ref[...]
+    levels_in = (1 << w_in) - 1
+    levels_out = (1 << w_out) - 1
+    xn = jnp.clip((x.astype(jnp.float32) - x_lo) / (x_hi - x_lo), 0.0, 1.0)
+    code = jnp.round(xn * levels_in).astype(jnp.int32)
+
+    m = jnp.left_shift(jnp.int32(1), l)
+    c_hb = jnp.right_shift(code, l)
+    c_lb = code & (m - 1)
+    idx = jnp.take(idx_ref[0], c_hb, axis=0)
+    val = jnp.take(ust_ref[0], idx * m + c_lb, axis=0)
+    val = jnp.right_shift(val, jnp.take(rsh_ref[0], c_hb, axis=0))
+    val = val + jnp.take(bias_ref[0], c_hb, axis=0)
+    val = val & (jnp.left_shift(jnp.int32(1), jnp.maximum(w_hb, 1)) - 1)
+    if any_lb:
+        lb_val = jnp.take(lb_ref[0], code, axis=0)
+        val = jnp.where(w_lb > 0,
+                        jnp.left_shift(val, w_lb) | lb_val, val)
+
+    y = val.astype(jnp.float32) / levels_out * y_span + y_lo
+    out_ref[...] = y.astype(out_ref.dtype)
+
+
+def lut_act_stacked_pallas(
+    x: jax.Array,         # (rows, lanes) float
+    layer: jax.Array,     # (1,) int32 — in-scan layer id
+    t_ust: jax.Array,     # (L, n_ust) int32, padded to the per-site max
+    t_idx: jax.Array,     # (L, n_sub) int32
+    t_rsh: jax.Array,     # (L, n_sub) int32
+    t_bias: jax.Array,    # (L, n_sub) int32
+    t_lb: jax.Array,      # (L, n_lb) int32 (dummy rows where w_lb == 0)
+    meta_i: jax.Array,    # (L, 3) int32   [l, w_lb, w_hb]
+    meta_f: jax.Array,    # (L, 2) float32 [y_lo, y_hi - y_lo]
+    *,
+    any_lb: bool,
+    w_in: int,
+    w_out: int,
+    x_lo: float,
+    x_hi: float,
+    block_rows: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    interpret = resolve_interpret(interpret)
+    rows, lanes = x.shape
+    if rows % block_rows != 0:
+        raise ValueError(
+            f"lut_act_stacked_pallas: rows={rows} not a multiple of "
+            f"block_rows={block_rows}; trailing rows would be dropped by "
+            f"the grid — pad the input (ops.lut_act_stacked does this)")
+    row = lambda a: pl.BlockSpec((1, a.shape[1]), lambda i, lid: (lid[0], 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, lanes), lambda i, lid: (i, 0)),
+            row(t_ust), row(t_idx), row(t_rsh), row(t_bias), row(t_lb),
+            row(meta_i), row(meta_f),
+        ],
+        out_specs=pl.BlockSpec((block_rows, lanes), lambda i, lid: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _stacked_kernel, any_lb=any_lb, w_in=w_in, w_out=w_out,
+            x_lo=x_lo, x_hi=x_hi,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), x.dtype),
+        interpret=interpret,
+    )(layer, x, t_ust, t_idx, t_rsh, t_bias, t_lb, meta_i, meta_f)

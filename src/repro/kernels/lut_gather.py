@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 
 def _kernel(x_ref, ust_ref, idx_ref, rsh_ref, bias_ref, lb_ref, out_ref,
             *, l, w_lb, w_hb):
@@ -50,8 +52,9 @@ def lut_reconstruct_pallas(
     w_lb: int,
     w_hb: int,
     block_rows: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     rows, lanes = x.shape
     if rows % block_rows != 0:
         raise ValueError(
@@ -79,8 +82,9 @@ def _plain_kernel(x_ref, table_ref, out_ref):
 
 def plain_lookup_pallas(
     x: jax.Array, table: jax.Array, *, block_rows: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     rows, lanes = x.shape
     if rows % block_rows != 0:
         raise ValueError(

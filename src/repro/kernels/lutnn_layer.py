@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 
 def _kernel(codes_ref, conn_ref, tables_ref, out_ref, *, bits, fanin):
     codes = codes_ref[...]        # (BB, P)
@@ -43,8 +45,9 @@ def lutnn_layer_pallas(
     bits: int,
     block_b: int = 128,
     block_n: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     b, p = codes.shape
     n, f = conn.shape
     t = tables.shape[1]

@@ -16,15 +16,12 @@ import numpy as np
 from repro.core.plan import DecomposedPlan, Plan, PlainPlan
 
 from . import ref
-from .lut_act import lut_act_pallas
+from .lut_act import lut_act_pallas, lut_act_stacked_pallas
 from .lut_gather import lut_reconstruct_pallas, plain_lookup_pallas
 from .lutnn_layer import lutnn_layer_pallas
+from .runtime import default_interpret, resolve_interpret
 
 LANES = 128
-
-
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad_to(a: np.ndarray, mult: int) -> np.ndarray:
@@ -76,6 +73,26 @@ def _shape_2d(n: int, block_rows: int) -> tuple[int, int]:
     return rows, LANES
 
 
+def _pick_block_rows(n: int, block_rows: int = 8) -> int:
+    """Adaptive grid blocking: small decode batches (n < block_rows lanes
+    of elements) run as one exact-fit grid step instead of padding up to
+    the full 8-row block."""
+    rows = -(-n // LANES)
+    return block_rows if rows >= block_rows else max(1, rows)
+
+
+def _to_2d(x: jax.Array, block_rows: int) -> tuple[jax.Array, int]:
+    """Flatten ``x`` to a ``(rows, LANES)`` tile grid with ``rows`` a
+    multiple of ``block_rows``.  When ``x`` already tiles exactly the
+    reshape is free — no zero-fill + copy round-trip."""
+    n = int(np.prod(x.shape))
+    rows, lanes = _shape_2d(n, block_rows)
+    if rows * lanes == n:
+        return x.reshape(rows, lanes), n
+    flat = jnp.zeros(rows * lanes, x.dtype).at[:n].set(x.reshape(-1))
+    return flat.reshape(rows, lanes), n
+
+
 @functools.partial(jax.jit, static_argnames=("pa_static", "interpret"))
 def _reconstruct_jit(x2d, arrays, pa_static, interpret):
     kind, l, w_lb, w_hb = pa_static
@@ -92,17 +109,11 @@ def lut_reconstruct(
     x: jax.Array, pa: PlanArrays, interpret: bool | None = None
 ) -> jax.Array:
     """Evaluate the compressed table at int addresses ``x`` (any shape)."""
-    if interpret is None:
-        interpret = default_interpret()
+    interpret = resolve_interpret(interpret)
     shape = x.shape
-    n = int(np.prod(shape))
-    rows, lanes = _shape_2d(n, 8)
-    flat = jnp.zeros(rows * lanes, jnp.int32).at[:n].set(
-        x.reshape(-1).astype(jnp.int32)
-    )
+    x2d, n = _to_2d(x.reshape(-1).astype(jnp.int32), 8)
     out = _reconstruct_jit(
-        flat.reshape(rows, lanes), pa.arrays,
-        (pa.kind, pa.l, pa.w_lb, pa.w_hb), interpret,
+        x2d, pa.arrays, (pa.kind, pa.l, pa.w_lb, pa.w_hb), interpret,
     )
     return out.reshape(-1)[:n].reshape(shape)
 
@@ -146,20 +157,46 @@ def lut_act(
     interpret: bool | None = None,
 ) -> jax.Array:
     """Fused LUT-approximated activation over a float tensor of any shape."""
-    if interpret is None:
-        interpret = default_interpret()
+    interpret = resolve_interpret(interpret)
     assert pa.kind == "decomposed", "lut_act expects a decomposed plan"
     shape = x.shape
-    n = int(np.prod(shape))
-    rows, lanes = _shape_2d(n, 8)
-    flat = jnp.zeros(rows * lanes, x.dtype).at[:n].set(x.reshape(-1))
+    block_rows = _pick_block_rows(int(np.prod(shape)))
+    x2d, n = _to_2d(x, block_rows)
     out = lut_act_pallas(
-        flat.reshape(rows, lanes),
+        x2d,
         pa.arrays["t_ust"], pa.arrays["t_idx"], pa.arrays["t_rsh"],
         pa.arrays["t_bias"], pa.arrays["t_lb"],
         l=pa.l, w_lb=pa.w_lb, w_hb=pa.w_hb, w_in=pa.w_in, w_out=pa.w_out,
         x_lo=x_lo, x_hi=x_hi, y_lo=y_lo, y_hi=y_hi,
-        interpret=interpret,
+        block_rows=block_rows, interpret=interpret,
+    )
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def lut_act_stacked(
+    x: jax.Array,
+    stacked: dict,        # a StackedPlanArrays.entry(): meta/arrays/meta_*
+    layer: jax.Array | int,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Layer-indexed fused LUT activation for per-layer tables served
+    inside ``lax.scan``: ``layer`` may be a traced in-scan layer id; it is
+    fed to the kernel as a scalar-prefetch operand so only that layer's
+    table slab is staged into VMEM per grid step."""
+    interpret = resolve_interpret(interpret)
+    meta = stacked["meta"]
+    a = stacked["arrays"]
+    shape = x.shape
+    block_rows = _pick_block_rows(int(np.prod(shape)))
+    x2d, n = _to_2d(x, block_rows)
+    out = lut_act_stacked_pallas(
+        x2d, jnp.asarray(layer, jnp.int32).reshape(1),
+        a["t_ust"], a["t_idx"], a["t_rsh"], a["t_bias"], a["t_lb"],
+        stacked["meta_i"], stacked["meta_f"],
+        any_lb=meta["any_lb"], w_in=meta["w_in"], w_out=meta["w_out"],
+        x_lo=meta["x_lo"], x_hi=meta["x_hi"],
+        block_rows=block_rows, interpret=interpret,
     )
     return out.reshape(-1)[:n].reshape(shape)
 

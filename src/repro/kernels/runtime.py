@@ -1,0 +1,21 @@
+"""Backend detection shared by the kernel modules and their ops wrappers.
+
+Every Pallas kernel in this package takes ``interpret: bool | None`` and
+resolves ``None`` through :func:`default_interpret`: interpret mode (the
+pure-jnp emulation) only off-TPU, the compiled Mosaic kernel on real TPU
+hardware.  Kernels and wrappers share this one resolution point so a
+real-TPU run never silently pays interpret overhead because a call site
+forgot to thread the flag.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> auto-detect; an explicit bool is honored as given."""
+    return default_interpret() if interpret is None else interpret

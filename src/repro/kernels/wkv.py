@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .runtime import resolve_interpret
+
 
 def _kernel(q_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_out_ref, s_ref,
             *, chunk, n, n_chunks):
@@ -71,9 +73,10 @@ def wkv_pallas(
     u: jax.Array,       # (BH, 1, N)
     *,
     chunk: int = 16,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (y (BH, T, N), final state (BH, N, N))."""
+    interpret = resolve_interpret(interpret)
     bh, t, n = q.shape
     assert t % chunk == 0, (t, chunk)
     n_chunks = t // chunk

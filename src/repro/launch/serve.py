@@ -7,7 +7,8 @@ ReducedLUT-compressed activations (the paper feature).
 
   PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
       --batch 4 --prompt-len 48 --new-tokens 16 [--kv-int8] [--lut-act] \
-      [--lut-backend gather|pallas] [--calib-steps N] [--calib-path P]
+      [--lut-backend gather|pallas] [--plan-exec stacked|unrolled] \
+      [--calib-steps N] [--calib-path P]
 
 ``--lut-act`` serves engine-selected plans: every activation site of the
 network is compressed through the batched engine (duplicate tables shared
@@ -15,9 +16,12 @@ network is compressed through the batched engine (duplicate tables shared
 resulting plan arrays.  By default all sites share one synthetic
 calibration set; ``--calib-steps N`` instead streams N batches through
 the exact model and derives *per-site* observed-pattern don't-care masks
-(repro.calib), so each layer serves its own table.  ``--calib-path``
-loads a saved calibration artifact when present and saves the captured
-one otherwise, so restarts skip recapture.
+(repro.calib), so each layer serves its own table — by default as one
+stacked ``(L, …)`` array family the layer scan indexes in place
+(``--plan-exec stacked``; ``unrolled`` keeps the python-unrolled
+reference with its O(L) compile time).  ``--calib-path`` loads a saved
+calibration artifact when present and saves the captured one otherwise,
+so restarts skip recapture.
 """
 from __future__ import annotations
 
@@ -58,6 +62,11 @@ def main() -> None:
     ap.add_argument("--lut-act", action="store_true")
     ap.add_argument("--lut-backend", choices=("gather", "pallas"),
                     default="gather")
+    ap.add_argument("--plan-exec", choices=("stacked", "unrolled"),
+                    default="stacked",
+                    help="per-layer table execution: stacked (L, ...) "
+                         "arrays inside lax.scan (default) or the "
+                         "python-unrolled reference")
     ap.add_argument("--calib-steps", type=int, default=0,
                     help="capture N batches for per-site don't-care masks "
                          "(0 = shared synthetic calibration)")
@@ -107,10 +116,16 @@ def main() -> None:
                           save_calibration(args.calib_path, calib))
         else:
             calib = rng.normal(size=100000) * 3
-        plans = build_serving_plans(cfg, calib, backend=args.lut_backend)
+        plans = build_serving_plans(cfg, calib, backend=args.lut_backend,
+                                    plan_exec=args.plan_exec)
         cfg = plans.patched_config(cfg)
         lut_tables = plans.tables_for_model()
         print(plans.summary())
+        if plans.per_layer:
+            from repro.serve import tables_nbytes
+
+            print(f"plan exec: {args.plan_exec} "
+                  f"({tables_nbytes(lut_tables)} table bytes)")
 
     max_seq = t + args.new_tokens
     t0 = time.time()

@@ -40,30 +40,86 @@ def lut_act_jnp(x, arrays, *, l, w_lb, w_hb, w_in, w_out,
     return y.astype(x.dtype)
 
 
+def lut_act_jnp_stacked(x, stacked: dict, layer):
+    """GSPMD-friendly layer-indexed LUT activation over a stacked
+    ``(L, …)`` table family (:mod:`repro.serve.stacked`).
+
+    ``layer`` may be the traced in-scan layer id: the per-layer component
+    arrays and scalar metas are selected with ``jnp.take`` along axis 0,
+    and the reconstruction runs with traced shift amounts/masks.  The
+    integer math — and the float32 dequant expression, whose per-layer
+    span is pre-rounded host-side — is bit-identical to
+    :func:`lut_act_jnp` on that layer's unstacked arrays.
+    """
+    meta = stacked["meta"]
+    layer = jnp.asarray(layer, jnp.int32)
+    take_l = lambda a: jnp.take(a, layer, axis=0)
+    mi = take_l(stacked["meta_i"])
+    mf = take_l(stacked["meta_f"])
+    l, w_lb, w_hb = mi[0], mi[1], mi[2]
+    y_lo, y_span = mf[0], mf[1]
+    arrays = {k: take_l(a) for k, a in stacked["arrays"].items()}
+
+    levels_in = (1 << meta["w_in"]) - 1
+    levels_out = (1 << meta["w_out"]) - 1
+    xn = jnp.clip((x.astype(jnp.float32) - meta["x_lo"])
+                  / (meta["x_hi"] - meta["x_lo"]), 0.0, 1.0)
+    code = jnp.round(xn * levels_in).astype(jnp.int32)
+    m = jnp.left_shift(jnp.int32(1), l)
+    c_hb = jnp.right_shift(code, l)
+    c_lb = code & (m - 1)
+    idx = jnp.take(arrays["t_idx"], c_hb, axis=0)
+    val = jnp.take(arrays["t_ust"], idx * m + c_lb, axis=0)
+    val = jnp.right_shift(val, jnp.take(arrays["t_rsh"], c_hb, axis=0))
+    val = val + jnp.take(arrays["t_bias"], c_hb, axis=0)
+    val = val & (jnp.left_shift(jnp.int32(1), jnp.maximum(w_hb, 1)) - 1)
+    if meta["any_lb"]:
+        lb_val = jnp.take(arrays["t_lb"], code, axis=0)
+        val = jnp.where(w_lb > 0, jnp.left_shift(val, w_lb) | lb_val, val)
+    y = val.astype(jnp.float32) / levels_out * y_span + y_lo
+    return y.astype(x.dtype)
+
+
 def tables_per_layer(lut_tables: dict | None) -> bool:
-    """True when any site entry carries per-layer tables (``"layers"``
-    list) — per-site calibration produces one distinct plan per layer, so
-    the layer stack must unroll to close over each layer's arrays."""
+    """True when any site entry carries *unrolled* per-layer tables (the
+    legacy ``"layers"`` list) — each layer closes over its own arrays, so
+    the layer stack must python-unroll with concrete indices."""
     if not lut_tables or "sites" not in lut_tables:
         return False
     return any(isinstance(e, dict) and "layers" in e
                for e in lut_tables["sites"].values())
 
 
+def tables_stacked(lut_tables: dict | None) -> bool:
+    """True when any site entry carries stacked per-layer tables (the
+    ``"stacked"`` ``(L, …)`` form, :mod:`repro.serve.stacked`) — the layer
+    stack keeps ``lax.scan`` and resolves each layer's table slab with the
+    traced in-scan layer id."""
+    if not lut_tables or "sites" not in lut_tables:
+        return False
+    return any(isinstance(e, dict) and "stacked" in e
+               for e in lut_tables["sites"].values())
+
+
 def needs_layer_ids(lut_tables: dict | None) -> bool:
     """True when the layer loop must python-unroll so every call site has
-    a concrete layer index: per-layer serving tables, or an active
-    activation-capture context (per-site histogram keys)."""
+    a *concrete* layer index: legacy unrolled per-layer tables, or an
+    active activation-capture context (per-site histogram keys are
+    strings).  Stacked per-layer tables do NOT unroll — they consume a
+    traced layer id inside the scan."""
     return tables_per_layer(lut_tables) or calib_capture.capture_active()
 
 
 def run_layers(body, carry, xs, *, lut_tables=None, remat=False):
     """Run a layer stack: ``body(carry, inp, layer) -> (carry, y)``.
 
-    Scans (``layer_scan``, compact HLO, ``layer=None``) by default;
-    python-unrolls with concrete layer indices when per-layer LUT tables
-    or an activation capture need them (see :func:`needs_layer_ids`).
-    The unrolled output pytree is stacked to match the scan's exactly.
+    Scans (``layer_scan``, compact O(1)-in-depth HLO) by default, with
+    ``layer=None``.  Stacked per-layer tables also scan — the body then
+    receives the *traced* in-scan layer id, which the stacked table forms
+    resolve with ``jnp.take`` / scalar prefetch.  Only the legacy unrolled
+    table form and activation capture still python-unroll with concrete
+    indices (see :func:`needs_layer_ids`); the unrolled output pytree is
+    stacked to match the scan's exactly.
     """
     if needs_layer_ids(lut_tables):
         fn = jax.checkpoint(body, static_argnums=(2,)) if remat else body
@@ -74,6 +130,13 @@ def run_layers(body, carry, xs, *, lut_tables=None, remat=False):
             ys.append(y)
         stacked = jax.tree.map(lambda *vs: jnp.stack(vs), *ys)
         return carry, stacked
+    if tables_stacked(lut_tables):
+        length = jax.tree.leaves(xs)[0].shape[0]
+        fn = lambda c, inp: body(c, inp[0], inp[1])
+        if remat:
+            fn = jax.checkpoint(fn)
+        return layer_scan(fn, carry,
+                          (xs, jnp.arange(length, dtype=jnp.int32)))
     fn = lambda c, inp: body(c, inp, None)
     if remat:
         fn = jax.checkpoint(fn)
@@ -81,14 +144,17 @@ def run_layers(body, carry, xs, *, lut_tables=None, remat=False):
 
 
 def site_tables(lut_tables: dict | None, site: str,
-                layer: int | None = None) -> dict | None:
-    """Resolve one activation site's ``{"meta", "arrays"}`` entry.
+                layer=None) -> dict | None:
+    """Resolve one activation site's table entry.
 
-    Three shapes are accepted: the legacy single-table dict (applies to
+    Four shapes are accepted: the legacy single-table dict (applies to
     the ``"mlp"`` site only — the pre-plans behavior), the serving-plans
-    multi-site dict ``{"sites": {site: {...}}, "backend": ...}``, and the
-    per-site-calibrated form where a site entry is ``{"layers": [...]}``
-    (one entry per layer, resolved by ``layer``).
+    multi-site dict ``{"sites": {site: {...}}, "backend": ...}``, the
+    unrolled per-layer form ``{"layers": [...]}`` (one entry per layer,
+    resolved by a *concrete* ``layer`` index), and the stacked per-layer
+    form ``{"stacked": {...}}`` (``(L, …)`` padded stacks,
+    :mod:`repro.serve.stacked`), whose ``layer`` may be a **traced**
+    in-scan id — resolution is deferred to the evaluators.
     """
     if lut_tables is None:
         return None
@@ -96,14 +162,16 @@ def site_tables(lut_tables: dict | None, site: str,
         entry = lut_tables["sites"].get(site)
     else:
         entry = lut_tables if site == "mlp" else None
-    if entry is not None and "layers" in entry:
-        if layer is None:
-            raise ValueError(
-                f"per-layer LUT tables for site {site!r} need a concrete "
-                f"layer index — run the forward through run_layers (this "
-                f"family's loop may not support per-layer tables)")
-        return entry["layers"][layer]
-    return entry
+    if entry is None or ("layers" not in entry and "stacked" not in entry):
+        return entry
+    if layer is None:
+        raise ValueError(
+            f"per-layer LUT tables for site {site!r} need a layer index — "
+            f"run the forward through run_layers (this family's loop may "
+            f"not support per-layer tables)")
+    if "stacked" in entry:
+        return {"stacked": entry["stacked"], "layer": layer}
+    return entry["layers"][layer]
 
 
 def apply_lut_act(x, tab: dict, backend: str = "gather"):
@@ -113,8 +181,16 @@ def apply_lut_act(x, tab: dict, backend: str = "gather"):
     inside distributed steps; ``backend="pallas"`` routes through the fused
     quantize/reconstruct/dequantize kernel (single-device serving fast
     path).  Both compute the identical quantize -> Eq. (1) -> dequantize
-    math and bit-match each other (tests/test_serve_plans.py).
+    math and bit-match each other (tests/test_serve_plans.py), in the
+    per-plan form and the layer-indexed stacked form alike
+    (tests/test_stacked.py).
     """
+    if "stacked" in tab:
+        if backend == "pallas":
+            from repro.kernels.ops import lut_act_stacked
+
+            return lut_act_stacked(x, tab["stacked"], tab["layer"])
+        return lut_act_jnp_stacked(x, tab["stacked"], tab["layer"])
     meta, arrays = tab["meta"], tab["arrays"]
     if backend == "pallas":
         from repro.kernels import PlanArrays

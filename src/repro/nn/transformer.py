@@ -514,11 +514,8 @@ def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
 
     tail_states = {}
     if "tail" in params:
-        from .mlp import needs_layer_ids
-
         n_groups = jax.tree.leaves(params["groups"])[0].shape[0]
         tail_base = n_groups * len(pattern)
-        tail_layer_ids = needs_layer_ids(lut_tables)
         tp_ = params["tail"]
         i = 0
         while f"t{i}_rec" in tp_:
@@ -533,9 +530,12 @@ def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
             tail_states[f"t{i}"] = s
             x = x + h
             mp = jax.tree.map(lambda a: a[0], tp_[f"m{i}"])
+            # Tail layers run python-level, so their (concrete) global
+            # mlp-site index is always available — stacked and unrolled
+            # per-layer tables both resolve it.
             h = mlp_block(mp, rms_norm(x, tp_[f"m{i}_ln"][0],
                                        cfg.norm_eps), cfg, lut_tables,
-                          layer=tail_base + i if tail_layer_ids else None)
+                          layer=tail_base + i)
             x = x + h
             i += 1
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -580,10 +580,10 @@ def encoder_forward(params, cfg, frames, remat=False):
 
 
 def encdec_forward(params, cfg, tokens, enc_out, collect_kv=False,
-                   remat=False):
+                   remat=False, lut_tables=None):
     x = embed_lookup(params["embed"], tokens)
 
-    def body(x, p):
+    def body(x, p, layer):
         h, kv = _attn_apply(p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
                             causal=True, rope=True)
         x = x + h
@@ -599,13 +599,13 @@ def encdec_forward(params, cfg, tokens, enc_out, collect_kv=False,
         h = mha(q, ek, ev, causal=False)
         h = jnp.einsum("btq,qd->btd", h.reshape(b, t, cfg.q_dim), p["xwo"])
         x = x + h
-        h = mlp_block(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        h = mlp_block(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
+                      lut_tables, layer=layer)
         out = (jnp.zeros((), jnp.float32), kv if collect_kv else None)
         return x + h, out
 
-    if remat:
-        body = jax.checkpoint(body)
-    x, (_, kvs) = layer_scan(body, x, params["dec_blocks"])
+    x, (_, kvs) = run_layers(body, x, params["dec_blocks"],
+                             lut_tables=lut_tables, remat=remat)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return x, kvs
 

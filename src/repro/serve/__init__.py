@@ -10,8 +10,10 @@ from .plans import (
     build_serving_plans,
     verify_backend_equivalence,
 )
+from .stacked import StackedPlanArrays, tables_nbytes
 
 __all__ = ["prefill", "decode_step", "prefill_replay", "cache_specs",
            "init_cache", "cache_shardings", "ContinuousBatcher", "Request",
-           "ServingPlans", "SitePlan", "activation_sites",
-           "build_serving_plans", "verify_backend_equivalence"]
+           "ServingPlans", "SitePlan", "StackedPlanArrays",
+           "activation_sites", "build_serving_plans", "tables_nbytes",
+           "verify_backend_equivalence"]

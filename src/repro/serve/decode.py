@@ -103,8 +103,9 @@ def decoder_decode_step(params, cfg, cache, tokens, pos,
 # =========================================================================
 def encdec_prefill(params, cfg, batch, max_seq: int | None = None,
                    lut_tables=None):
-    # encdec prefill runs the exact activations (the encoder pass is
-    # one-shot per request); the LUT tables apply to the decode loop.
+    # The encoder pass is one-shot per request and keeps the exact
+    # activations; the decoder prefill and the decode loop serve the
+    # per-layer LUT tables (stacked form scans, legacy form unrolls).
     enc = encoder_forward(params, cfg, batch["frames"])
     # per-layer cross K/V from the encoder output
     def xkv(p):
@@ -117,7 +118,7 @@ def encdec_prefill(params, cfg, batch, max_seq: int | None = None,
 
     xks, xvs = jax.vmap(xkv)(params["dec_blocks"])
     x, kvs = encdec_forward(params, cfg, batch["tokens"], enc,
-                            collect_kv=True)
+                            collect_kv=True, lut_tables=lut_tables)
     logits = logits_projection(x[:, -1:], params["lm_head"])
     k, v = kvs
     cache = {"k": k, "v": v, "xk": xks.astype(k.dtype),
@@ -130,7 +131,7 @@ def encdec_decode_step(params, cfg, cache, tokens, pos, lut_tables=None):
 
     x = embed_lookup(params["embed"], tokens)
 
-    def body(x, inp):
+    def body(x, inp, layer):
         p, kc, vc, xk, xv = inp
         h, kc, vc = _decode_attn(
             p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg, kc, vc, pos)
@@ -143,13 +144,14 @@ def encdec_decode_step(params, cfg, cache, tokens, pos, lut_tables=None):
         h = jnp.einsum("btq,qd->btd", h.reshape(b, 1, cfg.q_dim), p["xwo"])
         x = x + h
         h = mlp_block(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
-                      lut_tables)
+                      lut_tables, layer=layer)
         return x + h, (kc, vc)
 
-    x, (ks, vs) = jax.lax.scan(
+    x, (ks, vs) = run_layers(
         body, x,
         (params["dec_blocks"], cache["k"], cache["v"], cache["xk"],
-         cache["xv"]))
+         cache["xv"]),
+        lut_tables=lut_tables)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_projection(x, params["lm_head"])
     return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}

@@ -28,12 +28,22 @@ selected plans into serve/lut_act end-to-end"):
    :class:`~repro.kernels.PlanArrays` and exported as the ``lut_tables``
    dict that :func:`repro.serve.decode_step`,
    :class:`repro.serve.ContinuousBatcher` and :mod:`repro.launch.serve`
-   consume.  Per-site plans emit one entry per layer (``{"layers":
-   [...]}``), which makes the nn layer stacks unroll
-   (:func:`repro.nn.mlp.run_layers`) so each layer closes over its own
-   arrays.  Both runtime backends — ``"gather"`` (GSPMD-shardable
-   ``jnp.take``) and ``"pallas"`` (fused quantize/reconstruct/dequantize
-   kernel) — bit-match under either calibration mode
+   consume.  Per-site plans come in two execution forms
+   (``plan_exec``):
+
+   * ``"stacked"`` (default) — one padded ``(L, …)``
+     :class:`~repro.serve.stacked.StackedPlanArrays` family per site
+     kind; the layer stacks keep ``lax.scan`` (compact O(1)-in-depth
+     HLO) and each scan step resolves its own table slab with the traced
+     layer id;
+   * ``"unrolled"`` — one entry per layer (``{"layers": [...]}``), which
+     makes the nn layer stacks python-unroll
+     (:func:`repro.nn.mlp.run_layers`) so each layer closes over its own
+     arrays — O(L) compile time, kept as the reference/debug form.
+
+   Both runtime backends — ``"gather"`` (GSPMD-shardable ``jnp.take``)
+   and ``"pallas"`` (fused quantize/reconstruct/dequantize kernel) —
+   bit-match under either calibration mode and either execution form
    (:func:`verify_backend_equivalence`, asserted in tests and the bench).
 """
 from __future__ import annotations
@@ -60,10 +70,11 @@ from repro.nn.lut_act import (
 DEFAULT_COMPRESS = dict(exiguity=250, m_candidates=(8, 16, 32, 64),
                         lb_candidates=(0, 1, 2, 3))
 
-# Families whose layer stacks support the unrolled per-layer table path
-# (repro.nn.mlp.run_layers).  encdec keeps a scanned decoder, so per-site
-# calibration degrades gracefully to one shared mask per site kind there.
-PER_LAYER_FAMILIES = ("dense", "moe", "vlm", "ssm", "hybrid")
+# Families whose layer stacks support per-layer tables
+# (repro.nn.mlp.run_layers): all six — the stacked (L, …) form serves
+# per-layer tables inside lax.scan, so even encdec's scanned decoder
+# (the old fallback-to-site-level case) gets its own table per layer.
+PER_LAYER_FAMILIES = ("dense", "moe", "vlm", "ssm", "hybrid", "encdec")
 
 
 def base_activation(name: str) -> str:
@@ -125,15 +136,27 @@ class SitePlan:
         """Mean don't-care fraction over this kind's served tables."""
         return float(np.mean([l.dontcare_frac for l in self.luts]))
 
-    def entry(self) -> dict:
+    def entry(self, form: str = "stacked") -> dict:
         """The site entry the nn layer consumes: ``{"meta", "arrays"}``
-        (shared) or ``{"layers": [...]}`` (per layer)."""
+        (shared), ``{"layers": [...]}`` (per layer, unrolled execution)
+        or ``{"stacked": {...}}`` (per layer, padded ``(L, …)`` stacks
+        scanned with the in-loop layer id)."""
         def one(lut: LUTActivation) -> dict:
             return {"meta": lut.meta(),
                     "arrays": PlanArrays.from_plan(lut.plan).arrays}
-        if self.per_layer:
-            return {"layers": [one(l) for l in self.luts]}
-        return one(self.lut)
+        if not self.per_layer:
+            return one(self.lut)
+        entries = [one(l) for l in self.luts]
+        if form == "stacked":
+            from .stacked import StackedPlanArrays
+
+            return {"stacked": StackedPlanArrays.from_entries(entries)
+                    .entry()}
+        if form != "layers":
+            raise ValueError(
+                f"SitePlan.entry: unknown form {form!r} "
+                f"(expected 'stacked' or 'layers')")
+        return {"layers": entries}
 
 
 @dataclasses.dataclass
@@ -145,14 +168,38 @@ class ServingPlans:
     report: CompressReport
     sites: dict[str, SitePlan]
     backend: str = "gather"
-    calib: str = "shared"    # "shared" | "per_site"
+    calib: str = "shared"        # "shared" | "per_site"
+    plan_exec: str = "stacked"   # "stacked" | "unrolled" (per-layer plans)
 
-    def tables_for_model(self, backend: str | None = None) -> dict:
-        """The ``lut_tables`` dict threaded through decode/prefill/batcher."""
+    _FORMS = {"stacked": "stacked", "unrolled": "layers"}
+
+    def tables_for_model(self, backend: str | None = None,
+                         plan_exec: str | None = None) -> dict:
+        """The ``lut_tables`` dict threaded through decode/prefill/batcher.
+
+        ``plan_exec`` picks the per-layer execution form: ``"stacked"``
+        (default — ``(L, …)`` padded stacks, layer stacks keep
+        ``lax.scan``) or ``"unrolled"`` (one entry per layer, stacks
+        python-unroll).  Shared plans are unaffected.
+        """
+        exec_ = plan_exec or self.plan_exec
+        if exec_ not in self._FORMS:
+            raise ValueError(
+                f"tables_for_model: unknown plan_exec {exec_!r} "
+                f"(expected 'stacked' or 'unrolled')")
+        form = self._FORMS[exec_]
         return {
             "backend": backend or self.backend,
-            "sites": {k: sp.entry() for k, sp in self.sites.items()},
+            "sites": {k: sp.entry(form=form)
+                      for k, sp in self.sites.items()},
         }
+
+    def table_bytes(self, plan_exec: str | None = None) -> int:
+        """Device bytes of the serving tables in one execution form —
+        prices the stacked padding overhead against the unrolled layout."""
+        from .stacked import tables_nbytes
+
+        return tables_nbytes(self.tables_for_model(plan_exec=plan_exec))
 
     def patched_config(self, cfg: ArchConfig) -> ArchConfig:
         return dataclasses.replace(cfg, lut_activation=True)
@@ -206,8 +253,8 @@ def _per_site_specs(cfg, kinds, calib: CalibrationSet, w_in, w_out,
                     x_lo, x_hi):
     """Per-site calibration path: one care mask (and output quantization)
     per ``(layer, site)`` from the captured CalibrationSet; falls back to
-    the site-kind mask where no per-layer key exists (encdec, or a
-    layer-agnostic capture)."""
+    the site-kind mask where no per-layer key exists (a layer-agnostic
+    capture, e.g. an old artifact)."""
     specs: list[TableSpec] = []
     metas: list[tuple[str, str, dict]] = []
     layered = cfg.family in PER_LAYER_FAMILIES
@@ -238,6 +285,7 @@ def build_serving_plans(
     compress_cfg: CompressConfig | None = None,
     workers: int | None = None,
     backend: str = "gather",
+    plan_exec: str = "stacked",
     verbose: bool = False,
 ) -> ServingPlans:
     """Compress every activation site of ``cfg`` into serving tables.
@@ -248,8 +296,10 @@ def build_serving_plans(
     (``report.dedup_rate`` is (L-1)/L per site kind).  With a per-site
     :class:`~repro.calib.CalibrationSet` every site carries its own
     observed-pattern care mask, dedupe only merges genuinely identical
-    ``(values, care)`` pairs, and the runtime serves one table per layer
-    (unrolled layer stacks close over their own arrays).
+    ``(values, care)`` pairs, and the runtime serves one table per layer —
+    by default as stacked ``(L, …)`` arrays the layer scans index in
+    place (``plan_exec="stacked"``); ``plan_exec="unrolled"`` keeps the
+    python-unrolled reference form.
     """
     per_site = isinstance(calibration, CalibrationSet)
     if per_site:
@@ -289,7 +339,7 @@ def build_serving_plans(
         sites[site] = SitePlan(site=site, act=act, luts=[lut], n_sites=1,
                                per_layer=layered)
     return ServingPlans(arch=cfg.name, family=cfg.family, report=report,
-                        sites=sites, backend=backend,
+                        sites=sites, backend=backend, plan_exec=plan_exec,
                         calib="per_site" if per_site else "shared")
 
 
@@ -297,31 +347,41 @@ def verify_backend_equivalence(
     cfg: ArchConfig,
     params,
     plans: ServingPlans,
-    prompt: np.ndarray,      # (B, T) int32
+    prompt: np.ndarray | dict,   # (B, T) int32 tokens, or a full batch dict
     n_new: int,
     max_seq: int | None = None,
+    plan_exec: str | None = None,
 ) -> list[list[int]]:
     """Decode ``n_new`` greedy tokens with the gather backend and the fused
     Pallas backend and assert they bit-match token-for-token.
 
     Both backends run identical integer reconstruction math and the same
     float dequantization expression — per layer, when the plans are
-    per-site — so the served logits, and therefore every sampled token,
-    must agree exactly.  Returns the (B, n_new) token lists on success;
-    raises ``AssertionError`` on the first diverging token.
+    per-site, in whichever execution form ``plans.plan_exec`` (or the
+    ``plan_exec`` override) selects — so the served logits, and therefore
+    every sampled token, must agree exactly.  ``prompt`` may be a full batch dict for families whose
+    prefill needs extra inputs (vlm patches, encdec frames).  Returns the
+    (B, n_new) token lists on success; raises ``AssertionError`` on the
+    first diverging token.
     """
     from .decode import decode_step, prefill
 
     cfg = plans.patched_config(cfg)
-    b, t = prompt.shape
+    if isinstance(prompt, dict):
+        batch = {k: jnp.asarray(v) for k, v in prompt.items()}
+    else:
+        batch = {"tokens": jnp.asarray(prompt, jnp.int32)}
+    b, t = batch["tokens"].shape
+    if cfg.family == "vlm" and "patches" in batch:
+        t = t + batch["patches"].shape[1]   # patch prefix occupies the cache
     max_seq = max_seq or (t + n_new)
     outs: dict[str, list[list[int]]] = {}
     for backend in ("gather", "pallas"):
-        tables = plans.tables_for_model(backend=backend)
+        tables = plans.tables_for_model(backend=backend,
+                                        plan_exec=plan_exec)
         lg, cache = jax.jit(
             lambda p, x: prefill(p, cfg, x, max_seq=max_seq,
-                                 lut_tables=tables))(
-            params, {"tokens": jnp.asarray(prompt, jnp.int32)})
+                                 lut_tables=tables))(params, batch)
         step = jax.jit(lambda p, c, tk, pos: decode_step(
             p, cfg, c, tk, pos, lut_tables=tables))
         tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]

@@ -1,0 +1,150 @@
+"""Stacked plan execution: per-layer compressed tables as one (L, …) family.
+
+Per-site calibration (PR 3) gives every ``(layer, site)`` its own
+ReducedLUT plan — but plans differ in shape (the engine picks a different
+``m``/``w_lb`` split per table), so the first integration python-unrolled
+every layer stack to let each layer close over its own arrays.  That
+unroll costs O(L) compile time, exactly the wrong direction for deep
+models (ROADMAP: "per-layer tables inside ``lax.scan`` via padded stacked
+arrays would drop the unroll").
+
+:class:`StackedPlanArrays` is the scanned-serving data structure:
+
+* each component array (``t_ust``/``t_idx``/``t_rsh``/``t_bias``/``t_lb``)
+  is zero-padded to the per-site maximum length across layers and stacked
+  to one ``(L, n_max)`` int32 device array — padding is dead weight the
+  runtime never addresses (a layer's reconstruction only indexes its own
+  true region), and the true per-layer lengths are kept for accounting
+  and lossless unstacking;
+* the per-layer scalar metas become ``(L, 3)`` int32 (``l``, ``w_lb``,
+  ``w_hb``) and ``(L, 2)`` float32 (``y_lo``, ``y_hi - y_lo``) side
+  tables, read with the in-scan layer id.  The dequant span is
+  precomputed host-side in float64 and rounded once to float32 — the same
+  rounding the unrolled path's ``y_hi - y_lo`` constant gets — so the
+  stacked evaluators stay bit-identical to the per-layer ones.
+
+The quantizer statics (``w_in``/``w_out``/``x_lo``/``x_hi``) must agree
+across layers (one capture grid per site kind produces exactly that), and
+``any_lb`` records statically whether *any* layer carries a low-bit
+table, so all-``w_lb=0`` stacks skip the recombination branch entirely.
+
+The runtime consumers are :func:`repro.nn.mlp.lut_act_jnp_stacked`
+(gather backend, ``jnp.take`` along axis 0 inside ``layer_scan``) and
+:func:`repro.kernels.ops.lut_act_stacked` (layer-id scalar-prefetch
+Pallas kernel); both receive the plain-dict :meth:`entry` form so the nn
+layer never imports this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+COMPONENTS = ("t_ust", "t_idx", "t_rsh", "t_bias", "t_lb")
+
+# Meta keys that must be constant across a site's layers: they describe
+# the input quantizer (shared by construction — one capture grid per site
+# kind) and the output bit-width the engine searched under.
+SHARED_META = ("w_in", "w_out", "x_lo", "x_hi")
+
+
+@dataclasses.dataclass
+class StackedPlanArrays:
+    """Padded ``(L, …)`` stacks of one site's per-layer plan arrays."""
+
+    n_layers: int
+    w_in: int
+    w_out: int
+    x_lo: float
+    x_hi: float
+    any_lb: bool
+    arrays: dict                 # component -> (L, n_max) jnp.int32
+    meta_i: jax.Array            # (L, 3) int32   [l, w_lb, w_hb]
+    meta_f: jax.Array            # (L, 2) float32 [y_lo, y_hi - y_lo]
+    lens: dict                   # component -> per-layer true lengths
+    metas: tuple                 # original per-layer scalar metas
+
+    @staticmethod
+    def from_entries(entries: list[dict]) -> "StackedPlanArrays":
+        """Stack per-layer ``{"meta", "arrays"}`` entries (the unrolled
+        serving form) into one padded ``(L, …)`` family."""
+        if not entries:
+            raise ValueError("StackedPlanArrays: no per-layer entries")
+        metas = tuple(dict(e["meta"]) for e in entries)
+        for key in SHARED_META:
+            vals = {m[key] for m in metas}
+            if len(vals) != 1:
+                raise ValueError(
+                    f"StackedPlanArrays: per-layer plans disagree on "
+                    f"{key!r} ({sorted(vals)}) — a site's layers must share "
+                    f"one input/output quantizer to stack")
+        lens = {c: tuple(int(e["arrays"][c].shape[0]) for e in entries)
+                for c in COMPONENTS}
+        arrays = {}
+        for c in COMPONENTS:
+            n_max = max(lens[c])
+            rows = [np.pad(np.asarray(e["arrays"][c], dtype=np.int32),
+                           (0, n_max - n))
+                    for e, n in zip(entries, lens[c])]
+            arrays[c] = jnp.asarray(np.stack(rows))
+        meta_i = jnp.asarray(np.array(
+            [[m["l"], m["w_lb"], m["w_hb"]] for m in metas], np.int32))
+        # span rounded f64 -> f32 once, matching the unrolled path's
+        # (y_hi - y_lo) python-float constant bit-for-bit
+        meta_f = jnp.asarray(np.array(
+            [[m["y_lo"], m["y_hi"] - m["y_lo"]] for m in metas],
+            np.float32))
+        m0 = metas[0]
+        return StackedPlanArrays(
+            n_layers=len(entries), w_in=m0["w_in"], w_out=m0["w_out"],
+            x_lo=m0["x_lo"], x_hi=m0["x_hi"],
+            any_lb=any(m["w_lb"] > 0 for m in metas),
+            arrays=arrays, meta_i=meta_i, meta_f=meta_f, lens=lens,
+            metas=metas)
+
+    # -- serving forms -----------------------------------------------------
+    def entry(self) -> dict:
+        """The plain-dict form the runtime consumes (see module doc)."""
+        return {
+            "meta": {"w_in": self.w_in, "w_out": self.w_out,
+                     "x_lo": self.x_lo, "x_hi": self.x_hi,
+                     "any_lb": self.any_lb, "n_layers": self.n_layers},
+            "arrays": self.arrays,
+            "meta_i": self.meta_i,
+            "meta_f": self.meta_f,
+        }
+
+    def layer_entry(self, layer: int) -> dict:
+        """Unstack one layer back to its unrolled ``{"meta", "arrays"}``
+        entry (exact inverse of :meth:`from_entries` — the ragged-padding
+        round-trip asserted in tests)."""
+        return {
+            "meta": dict(self.metas[layer]),
+            "arrays": {c: self.arrays[c][layer, :self.lens[c][layer]]
+                       for c in COMPONENTS},
+        }
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        """Device bytes this stack uploads (padding included)."""
+        n = sum(int(a.size) * a.dtype.itemsize for a in self.arrays.values())
+        return n + int(self.meta_i.size) * 4 + int(self.meta_f.size) * 4
+
+    @property
+    def padding_frac(self) -> float:
+        """Fraction of stacked table bytes that are ragged-pad dead weight."""
+        true = sum(sum(self.lens[c]) for c in COMPONENTS)
+        total = sum(int(a.size) for a in self.arrays.values())
+        return float(1.0 - true / total) if total else 0.0
+
+
+def tables_nbytes(lut_tables: dict) -> int:
+    """Total device bytes of every array in a ``lut_tables`` dict — the
+    upload cost of a serving-table form (used by serve_bench to price the
+    stacked padding overhead against the unrolled layout)."""
+    leaves = jax.tree.leaves(lut_tables)
+    return sum(int(a.size) * a.dtype.itemsize
+               for a in leaves if hasattr(a, "dtype"))

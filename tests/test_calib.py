@@ -181,9 +181,11 @@ def test_per_site_plans_break_dedupe_collapse(dense_model):
     assert shared.report.n_unique == 1
     assert plans.total_cost >= shared.total_cost
 
-    # runtime form: one entry per layer
-    tabs = plans.tables_for_model()
-    entry = tabs["sites"]["mlp"]
+    # runtime forms: stacked (default, scanned) carries all L layers in
+    # one (L, ...) family; unrolled keeps one entry per layer
+    entry = plans.tables_for_model()["sites"]["mlp"]
+    assert entry["stacked"]["meta"]["n_layers"] == cfg.n_layers
+    entry = plans.tables_for_model(plan_exec="unrolled")["sites"]["mlp"]
     assert len(entry["layers"]) == cfg.n_layers
 
 

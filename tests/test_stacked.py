@@ -1,0 +1,270 @@
+"""Stacked plan execution: padded (L, ...) table stacks served inside
+``lax.scan`` — stacked-vs-unrolled token bit-identity across all six
+families under per-site calibration, the ragged-padding round-trip
+property, scan-compactness (no python-unroll in the lowered HLO), and the
+ops-layer padding/blocking fast paths.
+
+Runs under real hypothesis when installed, or the deterministic stub in
+conftest.py.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.calib import capture_calibration, model_batch, synthetic_batches
+from repro.configs import get_config, smoke_config
+from repro.nn import init_params
+from repro.nn.lut_act import build_lut_activation
+from repro.nn.mlp import (
+    lut_act_jnp,
+    lut_act_jnp_stacked,
+    needs_layer_ids,
+    tables_stacked,
+)
+from repro.serve import (
+    StackedPlanArrays,
+    build_serving_plans,
+    decode_step,
+    prefill,
+    tables_nbytes,
+)
+
+RNG = np.random.default_rng(0)
+
+# one arch per family (smoke-scale)
+FAMILY_ARCHS = [
+    "qwen3-0.6b",          # dense
+    "deepseek-moe-16b",    # moe
+    "phi-3-vision-4.2b",   # vlm
+    "rwkv6-3b",            # ssm
+    "recurrentgemma-9b",   # hybrid
+    "whisper-small",       # encdec (per-layer via the scanned decoder)
+]
+
+
+def _per_site_plans(arch, n_layers=None):
+    # float32: XLA fuses a lax.scan body and straight-line unrolled code
+    # differently, which elides bf16 materialization rounding at
+    # different points — a pre-existing scan-vs-unroll property of the
+    # *surrounding* model math (it shows up with lut_tables=None too).
+    # In f32 both lowerings are bit-exact, so any cross-exec divergence
+    # here is a real stacked-tables bug, not fusion noise.
+    cfg = dataclasses.replace(smoke_config(get_config(arch)),
+                              dtype="float32")
+    if n_layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batches = synthetic_batches(cfg, 1, batch_size=2, seq_len=8, seed=1)
+    calib = capture_calibration(params, cfg, batches, w_in=8)
+    plans = build_serving_plans(cfg, calib, w_out=8)
+    return cfg, params, plans
+
+
+def _decode_tokens(cfg, params, tables, batch, n_new):
+    """Greedy prefill + decode; returns the (n_new, B) token grid."""
+    t = batch["tokens"].shape[1]
+    if cfg.family == "vlm":
+        t += cfg.n_patches
+    max_seq = t + n_new
+    lg, cache = jax.jit(lambda p, x: prefill(
+        p, cfg, x, max_seq=max_seq, lut_tables=tables))(params, batch)
+    step = jax.jit(lambda p, c, tk, pos: decode_step(
+        p, cfg, c, tk, pos, lut_tables=tables))
+    tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+    out = []
+    for i in range(n_new):
+        out.append(np.asarray(tok)[:, 0].tolist())
+        lg, cache = step(params, cache, tok, jnp.asarray(t + i))
+        tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+    return out
+
+
+# =========================================================================
+# stacked-vs-unrolled token bit-identity, all six families
+# =========================================================================
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_stacked_matches_unrolled_all_families(arch):
+    """Per-site calibrated serving under lax.scan (stacked) is
+    token-for-token bit-identical to the python-unrolled per-layer path
+    and to the fused Pallas kernel on the stacked form."""
+    cfg, params, plans = _per_site_plans(arch)
+    assert plans.per_layer  # every family, encdec included
+    cfg_lut = plans.patched_config(cfg)
+    rng = np.random.default_rng(3)
+    batch = {k: jnp.asarray(v)
+             for k, v in model_batch(cfg, rng, 2, 5).items()}
+
+    unrolled = plans.tables_for_model(backend="gather",
+                                      plan_exec="unrolled")
+    stacked = plans.tables_for_model(backend="gather", plan_exec="stacked")
+    assert needs_layer_ids(unrolled) and not needs_layer_ids(stacked)
+    assert tables_stacked(stacked) and not tables_stacked(unrolled)
+
+    toks_unrolled = _decode_tokens(cfg_lut, params, unrolled, batch, 3)
+    toks_stacked = _decode_tokens(cfg_lut, params, stacked, batch, 3)
+    assert toks_stacked == toks_unrolled
+    toks_pallas = _decode_tokens(
+        cfg_lut, params,
+        plans.tables_for_model(backend="pallas", plan_exec="stacked"),
+        batch, 3)
+    assert toks_pallas == toks_unrolled
+
+
+def test_encdec_captures_per_layer_masks():
+    """The scanned encdec decoder now owns per-layer observed-pattern
+    masks (the old ROADMAP fallback case): distinct keys per decoder
+    layer, and the serving plans materialize one table per layer."""
+    cfg, params, plans = _per_site_plans("whisper-small")
+    assert cfg.family == "encdec"
+    sp = plans.sites["mlp"]
+    assert sp.per_layer and len(sp.luts) == cfg.n_layers
+    entry = plans.tables_for_model()["sites"]["mlp"]
+    assert entry["stacked"]["meta"]["n_layers"] == cfg.n_layers
+
+
+def test_stacked_decode_hlo_is_depth_compact():
+    """The whole point of stacking: the lowered decode HLO stops growing
+    O(L).  At 2x the depth the stacked program grows by only the carried
+    (L, ...) shapes, while the unrolled program roughly doubles."""
+    sizes = {}
+    for n_layers in (2, 4):
+        cfg, params, plans = _per_site_plans("qwen3-0.6b",
+                                             n_layers=n_layers)
+        cfg_lut = plans.patched_config(cfg)
+        rng = np.random.default_rng(0)
+        batch = {k: jnp.asarray(v)
+                 for k, v in model_batch(cfg, rng, 1, 4).items()}
+        lg, cache = jax.jit(lambda p, x: prefill(
+            p, cfg_lut, x, max_seq=6, lut_tables=None))(params, batch)
+        tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+        for exec_ in ("unrolled", "stacked"):
+            tables = plans.tables_for_model(backend="gather",
+                                            plan_exec=exec_)
+            hlo = jax.jit(lambda p, c, tk, pos: decode_step(
+                p, cfg_lut, c, tk, pos, lut_tables=tables)).lower(
+                params, cache, tok, jnp.asarray(4)).as_text()
+            sizes[(exec_, n_layers)] = len(hlo.splitlines())
+    assert sizes[("stacked", 4)] < sizes[("unrolled", 4)]
+    # doubling depth: unrolled ~2x, stacked stays within a small margin
+    assert sizes[("stacked", 4)] < 1.35 * sizes[("stacked", 2)]
+    assert sizes[("unrolled", 4)] > 1.6 * sizes[("unrolled", 2)]
+
+
+# =========================================================================
+# ragged-padding round-trip property
+# =========================================================================
+def _ragged_luts(seed, n_layers=3):
+    """Per-layer LUTActivations engineered to land on different plan
+    shapes (different care masks -> different m / w_lb splits)."""
+    rng = np.random.default_rng(seed)
+    luts = []
+    for i in range(n_layers):
+        lo, hi = sorted(rng.uniform(-6.0, 6.0, size=2))
+        calib = rng.uniform(lo, max(hi, lo + 0.5), size=4000)
+        luts.append(build_lut_activation(
+            "silu", calib, w_in=8, w_out=8,
+            m_candidates=(8, 16, 32), lb_candidates=(0, 1, 2)))
+    return luts
+
+
+def _entries(luts):
+    from repro.kernels import PlanArrays
+
+    return [{"meta": l.meta(), "arrays": PlanArrays.from_plan(l.plan).arrays}
+            for l in luts]
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_ragged_padding_roundtrip_lossless(seed):
+    """Layers with different m / w_lb plan shapes round-trip through
+    StackedPlanArrays losslessly: unstacking returns each layer's exact
+    arrays and metas, and the stacked evaluator bit-matches the per-layer
+    evaluator on every layer."""
+    luts = _ragged_luts(seed)
+    entries = _entries(luts)
+    st_arr = StackedPlanArrays.from_entries(entries)
+    rng = np.random.default_rng(seed + 1)
+    x = jnp.asarray(rng.uniform(-9.0, 9.0, size=257), jnp.float32)
+    entry = st_arr.entry()
+    for i, orig in enumerate(entries):
+        back = st_arr.layer_entry(i)
+        assert back["meta"] == orig["meta"]
+        for name, a in orig["arrays"].items():
+            np.testing.assert_array_equal(np.asarray(back["arrays"][name]),
+                                          np.asarray(a))
+        got = lut_act_jnp_stacked(x, entry, i)
+        want = lut_act_jnp(x, orig["arrays"], **orig["meta"])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_stacked_pallas_matches_gather_per_layer():
+    """The layer-indexed scalar-prefetch kernel bit-matches the stacked
+    gather evaluator layer by layer (ragged shapes included)."""
+    from repro.kernels.ops import lut_act_stacked
+
+    entries = _entries(_ragged_luts(7))
+    entry = StackedPlanArrays.from_entries(entries).entry()
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.uniform(-9.0, 9.0, size=(3, 130)), jnp.float32)
+    for i in range(len(entries)):
+        got = lut_act_stacked(x, entry, i, interpret=True)
+        # jit the reference too (entry/layer closed over, so the metas
+        # stay static): both sides then lower through XLA with the same
+        # fusion choices, as they do on the serving path
+        want = jax.jit(
+            lambda v, _i=i: lut_act_jnp_stacked(v, entry, _i))(x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_stacked_rejects_mixed_quantizers():
+    luts = _ragged_luts(3, n_layers=2)
+    entries = _entries(luts)
+    entries[1]["meta"]["w_in"] = 9
+    with pytest.raises(ValueError, match="disagree"):
+        StackedPlanArrays.from_entries(entries)
+
+
+def test_stacked_accounting():
+    st_arr = StackedPlanArrays.from_entries(_entries(_ragged_luts(5)))
+    assert st_arr.nbytes > 0
+    assert 0.0 <= st_arr.padding_frac < 1.0
+    # tables_nbytes prices a full lut_tables dict (used by serve_bench)
+    tabs = {"backend": "gather", "sites": {"mlp": {"stacked":
+                                                   st_arr.entry()}}}
+    assert tables_nbytes(tabs) == st_arr.nbytes
+
+
+# =========================================================================
+# ops-layer fast paths (satellites)
+# =========================================================================
+def test_lut_act_exact_tiling_and_small_batch_blocking():
+    """The ops wrapper skips the zero-fill copy on exact (rows, 128)
+    tilings and shrinks block_rows for small decode batches — both must
+    stay bit-identical to the padded path."""
+    lut = build_lut_activation("silu", RNG.normal(size=20000) * 2,
+                               w_in=8, w_out=8)
+    pa = lut.plan_arrays()
+    from repro.kernels.ops import _pick_block_rows, lut_act
+
+    kw = dict(x_lo=lut.x_lo, x_hi=lut.x_hi, y_lo=lut.y_lo, y_hi=lut.y_hi,
+              interpret=True)
+    # jitted reference: both sides lower through XLA with the same
+    # fusion choices (as on the serving path, where decode is jitted)
+    ref_fn = jax.jit(lambda x: lut_act_jnp(
+        jnp.asarray(x), pa.arrays, l=pa.l, w_lb=pa.w_lb, w_hb=pa.w_hb,
+        w_in=pa.w_in, w_out=pa.w_out, x_lo=lut.x_lo, x_hi=lut.x_hi,
+        y_lo=lut.y_lo, y_hi=lut.y_hi))
+    # exact tiling (2*8*128), small decode batch (2*128), ragged tail
+    for n in (2048, 256, 130, 1300):
+        x = RNG.uniform(-9, 9, size=n).astype(np.float32)
+        got = np.asarray(lut_act(jnp.asarray(x), pa, **kw))
+        np.testing.assert_array_equal(got, np.asarray(ref_fn(x)))
+    assert _pick_block_rows(2048) == 8
+    assert _pick_block_rows(256) == 2   # one exact-fit grid step
+    assert _pick_block_rows(1) == 1
