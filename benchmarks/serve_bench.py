@@ -12,12 +12,16 @@ Measures, per architecture family (dense / moe / ssm by default):
     overhead vs L separate array sets),
   - the engine plan stats behind the served tables (P-LUT cost, saved
     fraction, dedupe hit-rate),
+  - a **plan-source axis** (``plan_src=default|tuned``): the untuned
+    per-site default plans vs an autotuned selection (:mod:`repro.tune`,
+    quick grid, paper accuracy budget) — the committed footprint win of
+    tuned plans (P-LUT cost, table bytes) next to their decode numbers,
 and runs the backend equivalence harness (gather vs pallas decode must
 bit-match token-for-token) per calibration mode before timing anything.
 A depth-sweep row (one dense arch at ``--depth`` layers) makes the
 O(L)-compile-time win of the stacked form visible in the committed file.
 
-Writes the trajectory file ``BENCH_serve.json`` (schema: serve_bench/v3).
+Writes the trajectory file ``BENCH_serve.json`` (schema: serve_bench/v4).
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
   PYTHONPATH=src python benchmarks/serve_bench.py \
@@ -35,7 +39,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.calib import capture_calibration, synthetic_batches
+from repro.calib import (
+    calibration_from_capture,
+    capture_calibration,
+    capture_model,
+    synthetic_batches,
+)
 from repro.configs import ARCH_NAMES, get_config, smoke_config
 from repro.nn import init_params
 from repro.serve import (
@@ -180,13 +189,17 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, n_new: int,
 
     # calibration axis: one shared synthetic sample set vs per-site
     # observed-pattern masks captured from real per-layer activations
-    # (every family captures per layer now — encdec included)
+    # (every family captures per layer now — encdec included).  NOTE:
+    # this capture runs on the bench's random-init params; the tuned
+    # plan_src axis deliberately does NOT reuse it — it recaptures from
+    # its own short-trained params (see bench_plan_src)
+    cap = capture_model(
+        params, cfg, synthetic_batches(cfg, calib_steps, batch_size=b,
+                                       seq_len=t, seed=1),
+        w_in=cfg.lut_act_bits_in)
     calibrations = {
         "shared": rng.normal(size=100000) * 3,
-        "per_site": capture_calibration(
-            params, cfg, synthetic_batches(cfg, calib_steps, batch_size=b,
-                                           seq_len=t, seed=1),
-            w_in=cfg.lut_act_bits_in),
+        "per_site": calibration_from_capture(cap),
     }
 
     out = {
@@ -210,7 +223,72 @@ def bench_arch(arch: str, *, batch: int, prompt_len: int, n_new: int,
                                n_new=n_new)
         res["equivalence_ok"] = True
         out["calib"][mode] = res
+
+    # plan-source axis: untuned default plans vs an autotuned selection
+    out["plan_src"] = bench_plan_src(cfg, bt, max_seq=max_seq,
+                                     n_new=n_new, workers=workers,
+                                     calib_steps=calib_steps)
     return out
+
+
+def bench_plan_src(cfg, bt, *, max_seq, n_new, workers,
+                   calib_steps) -> dict:
+    """``plan_src=default|tuned``: footprint (P-LUT cost, table bytes) and
+    decode numbers of the autotuned selection next to the untuned per-site
+    default plans.
+
+    Parity only means something against a model whose activation
+    distributions mean something, so this axis is self-contained: a short
+    in-process training run, a fresh capture of the *trained* model, and
+    one quick-grid autotune — the default row is the same sweep's
+    untuned-default point, so both rows share one capture and one
+    baseline.  The full accuracy story (bigger grid, checkpoint reuse,
+    strict gates) lives in ``launch/tune`` -> ``BENCH_tune.json``.
+    """
+    from repro.tune import (
+        autotune,
+        default_grid,
+        heldout_batches,
+        trained_params,
+    )
+
+    b, t = bt["tokens"].shape
+    tparams, tinfo = trained_params(cfg, train_steps=30, batch=4, seq=16)
+    cap = capture_model(
+        tparams, cfg, synthetic_batches(cfg, calib_steps, batch_size=b,
+                                        seq_len=t, seed=1),
+        w_in=cfg.lut_act_bits_in)
+    outcome = autotune(
+        cfg, tparams, cap,
+        heldout_batches(cfg, 2, batch_size=b, seq_len=t),
+        grid=default_grid(cfg, quick=True), budget=0.01, workers=workers)
+    lut_cfg = outcome.plans.patched_config(cfg)
+    tuned_tables = outcome.plans.tables_for_model(backend="gather")
+    timing = _time_mode(lut_cfg, tparams, bt, max_seq=max_seq,
+                        n_new=n_new, lut_tables=tuned_tables)
+    d = outcome.default
+    return {
+        "trained": {k: tinfo[k] for k in ("source", "steps", "loss_first",
+                                          "loss_last") if k in tinfo},
+        "default": {
+            "cost": d.cost,
+            "table_bytes": d.table_bytes,
+            "top1_drop": round(d.metrics.top1_drop, 4) if d.ok else None,
+            "ppl_delta": round(d.metrics.ppl_delta, 4) if d.ok else None,
+        },
+        "tuned": {
+            "cost": outcome.cost,
+            "table_bytes": outcome.plans.table_bytes(),
+            "decode_tok_s": timing["decode_tok_s"],
+            "decode_compile_s": timing["decode_compile_s"],
+            "budget": outcome.budget,
+            "budget_met": outcome.budget_met,
+            "top1_drop": round(outcome.metrics.top1_drop, 4),
+            "ppl_delta": round(outcome.metrics.ppl_delta, 4),
+            "knobs": {k: p.label() for k, p in outcome.assignment.items()},
+            "frontier_points": len(outcome.frontier),
+        },
+    }
 
 
 def bench_depth_sweep(arch: str, *, depth: int, batch: int, prompt_len: int,
@@ -272,7 +350,7 @@ def main() -> None:
             raise SystemExit(f"unknown arch {a!r}; have {sorted(ARCH_NAMES)}")
 
     results = {
-        "schema": "serve_bench/v3",
+        "schema": "serve_bench/v4",
         "scale": "full" if args.full else "smoke",
         "batch": args.batch,
         "prompt_len": args.prompt_len,
@@ -299,6 +377,13 @@ def main() -> None:
                       f"| {e['table_bytes']} table bytes | "
                       f"dedupe {r['plans']['dedup_rate']:.0%} | "
                       f"plan cost {r['plans']['served_cost']}")
+        ps = res["plan_src"]
+        print(f"{arch} [{fam}] plan_src: default cost "
+              f"{ps['default']['cost']} ({ps['default']['table_bytes']} B) "
+              f"-> tuned {ps['tuned']['cost']} "
+              f"({ps['tuned']['table_bytes']} B), "
+              f"drop {ps['tuned']['top1_drop']} "
+              f"(budget met: {ps['tuned']['budget_met']})")
 
     sweep = bench_depth_sweep(
         archs[0], depth=args.depth, batch=args.batch,

@@ -19,7 +19,12 @@ from .capture import (
     site_key,
     synthetic_batches,
 )
-from .masks import CalibrationSet, calibration_from_capture, care_mask_from_hist
+from .masks import (
+    CalibrationSet,
+    calibration_from_capture,
+    care_mask_from_hist,
+    fold_hist,
+)
 from .store import load_calibration, save_calibration
 
 
@@ -43,6 +48,7 @@ __all__ = [
     "capture_model",
     "care_mask_from_hist",
     "current",
+    "fold_hist",
     "load_calibration",
     "model_batch",
     "save_calibration",

@@ -11,10 +11,12 @@ This module is the front end of that pipeline:
 1. :class:`ActivationCapture` — a context manager that, while active,
    makes every ``repro.nn.mlp.make_activation`` call site stream its
    pre-activation inputs into a per-site histogram (one ``2**w_in``-bin
-   count vector per ``L{layer}/{site}`` key).  Accumulation is host-side
-   numpy; traced values reach the host through ``jax.debug.callback``, so
-   capture is jit-/scan-safe, and concrete (eager) values take a direct
-   path.
+   count vector per ``L{layer}/{site}`` key) and its post-activation
+   outputs into a streaming ``[y_lo, y_hi]`` range tracker (the signal
+   per-site output-width selection prices, :mod:`repro.tune.sweep`).
+   Accumulation is host-side numpy; traced values reach the host through
+   ``jax.debug.callback``, so capture is jit-/scan-safe, and concrete
+   (eager) values take a direct path.
 2. Layer identity — while a capture is active the layer stacks unroll
    (``repro.nn.mlp.run_layers``) so each call site knows its layer index;
    every family's decoder stack routes through ``run_layers`` (encdec
@@ -73,6 +75,11 @@ class ActivationCapture:
         self.x_lo = float(x_lo)
         self.x_hi = float(x_hi)
         self.hists: dict[str, np.ndarray] = {}
+        # Streaming per-site *output* range: key -> [y_lo, y_hi] float64.
+        # The observed output span is what per-site w_out selection prices
+        # (a site whose outputs occupy a fraction of the activation's full
+        # range needs fewer output bits at the same resolution).
+        self.ranges: dict[str, np.ndarray] = {}
         self.n_batches = 0
         self.n_samples = 0
 
@@ -100,6 +107,18 @@ class ActivationCapture:
         hist += np.bincount(codes, minlength=1 << self.w_in)
         self.n_samples += flat.size
 
+    def _accum_out(self, key: str, y: np.ndarray) -> None:
+        flat = np.asarray(y, dtype=np.float64).reshape(-1)
+        flat = flat[np.isfinite(flat)]
+        if flat.size == 0:
+            return
+        r = self.ranges.get(key)
+        if r is None:
+            r = self.ranges.setdefault(
+                key, np.array([np.inf, -np.inf], dtype=np.float64))
+        r[0] = min(r[0], float(flat.min()))
+        r[1] = max(r[1], float(flat.max()))
+
     def observe(self, site: str, layer: int | None, x) -> None:
         """Stream one site's pre-activation tensor into its histogram."""
         key = site_key(site, layer)
@@ -111,12 +130,30 @@ class ActivationCapture:
         else:
             self._accum(key, np.asarray(x))
 
+    def observe_output(self, site: str, layer: int | None, y) -> None:
+        """Stream one site's post-activation tensor into its range tracker."""
+        key = site_key(site, layer)
+        self.ranges.setdefault(
+            key, np.array([np.inf, -np.inf], dtype=np.float64))
+        if isinstance(y, jax.core.Tracer):
+            jax.debug.callback(lambda v, _k=key: self._accum_out(_k, v), y)
+        else:
+            self._accum_out(key, np.asarray(y))
+
     def wrap(self, site: str, layer: int | None, act):
-        """Wrap an activation callable so evaluating it records its input."""
+        """Wrap an activation callable so evaluating it records its input
+        histogram and its output range."""
         def captured(x):
             self.observe(site, layer, x)
-            return act(x)
+            y = act(x)
+            self.observe_output(site, layer, y)
+            return y
         return captured
+
+    def observed_ranges(self) -> dict[str, np.ndarray]:
+        """Finalized per-site output ranges (sites that saw data only)."""
+        return {k: r.copy() for k, r in self.ranges.items()
+                if np.isfinite(r).all() and r[1] >= r[0]}
 
     # -- inspection --------------------------------------------------------
     def sites(self) -> list[str]:

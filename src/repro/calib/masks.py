@@ -45,6 +45,7 @@ class CalibrationSet:
     x_lo: float = -8.0
     x_hi: float = 8.0
     hists: dict[str, np.ndarray] | None = None
+    ranges: dict[str, np.ndarray] | None = None   # key -> [y_lo, y_hi]
     meta: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self) -> None:
@@ -53,6 +54,9 @@ class CalibrationSet:
         if self.hists is not None:
             self.hists = {k: np.asarray(h, dtype=np.int64)
                           for k, h in self.hists.items()}
+        if self.ranges is not None:
+            self.ranges = {k: np.asarray(r, dtype=np.float64)
+                           for k, r in self.ranges.items()}
 
     def mask_for(self, site: str, layer: int | None = None
                  ) -> np.ndarray | None:
@@ -61,6 +65,18 @@ class CalibrationSet:
         for key in (site_key(site, layer), site):
             if key in self.masks:
                 return self.masks[key]
+        return None
+
+    def range_for(self, site: str, layer: int | None = None
+                  ) -> np.ndarray | None:
+        """Resolve a site's observed output range ``[y_lo, y_hi]`` (same
+        per-layer -> site-kind fallback as :meth:`mask_for`); ``None`` when
+        the calibration predates output-range capture (a v1 artifact)."""
+        if self.ranges is None:
+            return None
+        for key in (site_key(site, layer), site):
+            if key in self.ranges:
+                return self.ranges[key]
         return None
 
     def sites(self) -> list[str]:
@@ -103,7 +119,46 @@ def care_mask_from_hist(hist: np.ndarray, *, min_count: int = 1,
             kept = np.zeros(h.size, dtype=bool)
             kept[order[:keep_n]] = True
             mask &= kept
+    if not mask.any():
+        raise ValueError(
+            f"care_mask_from_hist: the mask keeps zero care bins "
+            f"(min_count={min_count}, smoothing={smoothing}, "
+            f"coverage={coverage}; histogram has "
+            f"{int((h > 0).sum())} observed bins over "
+            f"{int(h.sum())} samples) — an all-don't-care table is "
+            f"unconstrained and the compressor may rewrite every entry; "
+            f"relax the knobs or capture more batches")
     return mask
+
+
+def fold_hist(hist: np.ndarray, w_to: int) -> np.ndarray:
+    """Re-bin a ``2**w_from``-bin histogram onto the coarser ``2**w_to``
+    input grid (both uniform over the same ``[x_lo, x_hi]``).
+
+    Each fine bin's count is credited to the coarse code its bin center
+    quantizes to — the same round-to-nearest rule the runtime quantizer
+    applies — so one capture at the widest sweep ``w_in`` serves every
+    narrower candidate without recapturing.  (Values *inside* a fine bin
+    that straddle a coarse boundary are attributed to the center's side;
+    the approximation is one fine bin wide.)
+    """
+    h = np.asarray(hist, dtype=np.int64)
+    n_from = h.size
+    if n_from & (n_from - 1):
+        raise ValueError(f"fold_hist: histogram size {n_from} is not a "
+                         f"power of two")
+    w_from = int(np.log2(n_from))
+    if w_to == w_from:
+        return h.copy()
+    if w_to > w_from:
+        raise ValueError(
+            f"fold_hist: cannot refine a w_in={w_from} histogram to "
+            f"w_in={w_to} — capture at the widest grid in the sweep")
+    fine = np.arange(n_from, dtype=np.float64) / (n_from - 1)
+    codes = np.rint(fine * ((1 << w_to) - 1)).astype(np.int64)
+    out = np.zeros(1 << w_to, dtype=np.int64)
+    np.add.at(out, codes, h)
+    return out
 
 
 def calibration_from_capture(cap: ActivationCapture, *, min_count: int = 1,
@@ -135,9 +190,11 @@ def calibration_from_capture(cap: ActivationCapture, *, min_count: int = 1,
                 f"all-don't-care away from at most one entry; capture more "
                 f"batches or relax min_count/coverage")
         masks[key] = mask
+    ranges = cap.observed_ranges() if hasattr(cap, "observed_ranges") else None
     return CalibrationSet(
         masks=masks, w_in=cap.w_in, x_lo=cap.x_lo, x_hi=cap.x_hi,
         hists={k: h.copy() for k, h in cap.hists.items()},
+        ranges=ranges or None,
         meta={"n_batches": cap.n_batches, "n_samples": cap.n_samples,
               "min_count": min_count, "smoothing": smoothing,
               "coverage": coverage},

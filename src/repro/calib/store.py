@@ -16,9 +16,13 @@ import numpy as np
 
 from .masks import CalibrationSet
 
-_FORMAT = "repro-calib/v1"
+# v2 adds per-site observed output ranges ("range:" entries) for per-site
+# w_out selection; v1 artifacts (no ranges) still load, with ranges=None.
+_FORMAT = "repro-calib/v2"
+_FORMATS = ("repro-calib/v1", "repro-calib/v2")
 _MASK = "mask:"
 _HIST = "hist:"
+_RANGE = "range:"
 
 
 def save_calibration(path: str, calib: CalibrationSet) -> str:
@@ -41,6 +45,9 @@ def save_calibration(path: str, calib: CalibrationSet) -> str:
     if calib.hists is not None:
         for key, hist in calib.hists.items():
             payload[_HIST + key] = np.asarray(hist, dtype=np.int64)
+    if calib.ranges is not None:
+        for key, rng in calib.ranges.items():
+            payload[_RANGE + key] = np.asarray(rng, dtype=np.float64)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         np.savez_compressed(f, **payload)
@@ -57,19 +64,22 @@ def load_calibration(path: str) -> CalibrationSet:
             raise ValueError(
                 f"{path}: not a calibration artifact (missing header)")
         header = json.loads(bytes(data["__header__"]).decode("utf-8"))
-        if header.get("format") != _FORMAT:
+        if header.get("format") not in _FORMATS:
             raise ValueError(
                 f"{path}: unknown calibration format "
-                f"{header.get('format')!r} (expected {_FORMAT!r})")
+                f"{header.get('format')!r} (expected one of {_FORMATS})")
         masks = {k[len(_MASK):]: np.asarray(data[k], dtype=bool)
                  for k in data.files if k.startswith(_MASK)}
         hists = {k[len(_HIST):]: np.asarray(data[k], dtype=np.int64)
                  for k in data.files if k.startswith(_HIST)}
+        ranges = {k[len(_RANGE):]: np.asarray(data[k], dtype=np.float64)
+                  for k in data.files if k.startswith(_RANGE)}
     return CalibrationSet(
         masks=masks,
         w_in=header["w_in"],
         x_lo=header["x_lo"],
         x_hi=header["x_hi"],
         hists=hists or None,
+        ranges=ranges or None,
         meta=header.get("meta", {}),
     )

@@ -14,6 +14,7 @@ from .cost_model import (
 )
 from .engine import (
     CompressReport,
+    PlanCache,
     TableReport,
     compress_network_report,
 )
@@ -36,6 +37,7 @@ __all__ = [
     "TableSpec",
     "CompressConfig",
     "CompressReport",
+    "PlanCache",
     "TableReport",
     "compress_table",
     "compress_table_serial",

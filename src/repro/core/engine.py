@@ -89,6 +89,7 @@ class CompressReport:
     seconds: float           # wall clock for the whole network
     n_unique: int | None = None   # distinct (values, care) tables searched
     dedup_hits: int = 0           # inputs that reused a shared search
+    cache_hits: int = 0           # unique tables served from a PlanCache
 
     @property
     def total_cost(self) -> int:
@@ -129,6 +130,8 @@ class CompressReport:
         if self.n_unique is not None and self.dedup_hits:
             msg += (f"; dedupe: {self.n_unique} unique, "
                     f"{self.dedup_hits} shared ({self.dedup_rate:.0%} hit-rate)")
+        if self.cache_hits:
+            msg += f"; plan-cache: {self.cache_hits} hits"
         return msg
 
     def table_lines(self) -> list[str]:
@@ -313,12 +316,56 @@ def _spec_key(spec: TableSpec) -> tuple:
             spec.care_mask().tobytes())
 
 
+class PlanCache:
+    """Cross-call compression-result cache keyed by table content.
+
+    The autotune sweep (``repro.tune.sweep``) compresses the same network
+    many times with different don't-care knobs; any ``(values, care,
+    w_in, w_out)`` spec that recurs across sweep points — unchanged masks
+    for an insensitive site, the default point re-evaluated per assignment
+    — is served from here instead of re-searched.  Results are exact
+    clones of the original search (the search is deterministic in the
+    spec content), renamed per requesting site, so cached and fresh plans
+    are bit-identical.
+
+    The cache is keyed on table content but NOT on :class:`CompressConfig`
+    — callers must use one cache per engine configuration (the sweep
+    holds one per run).
+    """
+
+    def __init__(self) -> None:
+        self._store: dict[tuple, tuple[Plan, TableReport]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def get(self, spec: TableSpec) -> tuple[Plan, TableReport] | None:
+        hit = self._store.get(_spec_key(spec))
+        if hit is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        plan, rep = hit
+        return (dataclasses.replace(plan, name=spec.name),
+                dataclasses.replace(rep, name=spec.name, seconds=0.0))
+
+    def put(self, spec: TableSpec, plan: Plan, report: TableReport) -> None:
+        self._store[_spec_key(spec)] = (plan, report)
+
+    def summary(self) -> str:
+        return (f"plan-cache[{len(self._store)} entries, "
+                f"{self.hits} hits / {self.misses} misses]")
+
+
 def compress_network_report(
     specs: list[TableSpec],
     cfg: CompressConfig | None = None,
     workers: int | None = None,
     verbose: bool = False,
     dedupe: bool = True,
+    cache: PlanCache | None = None,
 ) -> CompressReport:
     """Compress every L-LUT of a network; tables are independent (paper
     flow), so they fan out over a process pool when ``workers > 1``.
@@ -337,6 +384,11 @@ def compress_network_report(
     cached per worker count so repeated network-sized batches pay startup
     once; use :func:`warm_pool` to pre-pay it and :func:`shutdown_pools`
     to tear them down.  Pool failures fall back to the in-process path.
+
+    ``cache`` (a :class:`PlanCache`) additionally shares results *across
+    calls*: unique tables whose content key is already cached skip the
+    search entirely (``report.cache_hits``) and fresh searches are
+    inserted — the autotune sweep's repeated-spec fast path.
     """
     cfg = cfg or CompressConfig()
     workers = default_workers() if workers is None else max(1, workers)
@@ -357,21 +409,40 @@ def compress_network_report(
         rep_index = {i: i for i in range(len(specs))}
         uniq_specs = list(specs)
 
-    jobs = [(spec, cfg) for spec in uniq_specs]
+    # Cross-call cache: serve already-searched unique tables, run the rest.
+    uniq_results: list[tuple[Plan, TableReport] | None]
+    uniq_results = [None] * len(uniq_specs)
+    cache_hits = 0
+    pending = list(range(len(uniq_specs)))
+    if cache is not None:
+        pending = []
+        for i, spec in enumerate(uniq_specs):
+            hit = cache.get(spec)
+            if hit is not None:
+                uniq_results[i] = hit
+                cache_hits += 1
+            else:
+                pending.append(i)
+
+    jobs = [(uniq_specs[i], cfg) for i in pending]
     if workers == 1 or len(jobs) < 2:
         workers = 1
-        uniq_results = [_compress_one(spec, cfg) for spec, cfg in jobs]
+        run_results = [_compress_one(spec, cfg) for spec, cfg in jobs]
     else:
         chunk = max(1, len(jobs) // (workers * 4))
         try:
             pool = _get_pool(workers)
-            uniq_results = list(pool.map(_pool_worker, jobs, chunksize=chunk))
+            run_results = list(pool.map(_pool_worker, jobs, chunksize=chunk))
         except Exception:
             # Broken/unpicklable pool state: drop the cached pool and fall
             # back to the in-process path rather than failing the caller.
             shutdown_pools()
             workers = 1
-            uniq_results = [_compress_one(spec, cfg) for spec, cfg in jobs]
+            run_results = [_compress_one(spec, cfg) for spec, cfg in jobs]
+    for i, res in zip(pending, run_results):
+        uniq_results[i] = res
+        if cache is not None:
+            cache.put(uniq_specs[i], *res)
 
     plans: list[Plan] = []
     tables: list[TableReport] = []
@@ -395,6 +466,7 @@ def compress_network_report(
         plans=plans, tables=tables, workers=workers,
         seconds=time.perf_counter() - t0,
         n_unique=len(uniq_specs), dedup_hits=dedup_hits,
+        cache_hits=cache_hits,
     )
     if verbose:
         for line in report.table_lines():

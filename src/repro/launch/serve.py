@@ -8,7 +8,7 @@ ReducedLUT-compressed activations (the paper feature).
   PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
       --batch 4 --prompt-len 48 --new-tokens 16 [--kv-int8] [--lut-act] \
       [--lut-backend gather|pallas] [--plan-exec stacked|unrolled] \
-      [--calib-steps N] [--calib-path P]
+      [--calib-steps N] [--calib-path P] [--tuned-plan T]
 
 ``--lut-act`` serves engine-selected plans: every activation site of the
 network is compressed through the batched engine (duplicate tables shared
@@ -22,6 +22,11 @@ stacked ``(L, …)`` array family the layer scan indexes in place
 reference with its O(L) compile time).  ``--calib-path`` loads a saved
 calibration artifact when present and saves the captured one otherwise,
 so restarts skip recapture.
+
+``--tuned-plan`` serves a :mod:`repro.tune` artifact (the output of
+``launch/tune``): the autotuner's Pareto-selected per-site plans are
+loaded bit-exactly from disk — no capture and no compression run at all —
+and decode token-identically to the in-process tuning run.
 """
 from __future__ import annotations
 
@@ -77,6 +82,10 @@ def main() -> None:
                     help="min observations for a bin to stay care")
     ap.add_argument("--calib-smoothing", type=int, default=0,
                     help="laplace-style neighbor-smoothing radius (bins)")
+    ap.add_argument("--tuned-plan", default=None,
+                    help="tuned-plan artifact (.npz) from launch/tune: "
+                         "serve its plans directly, skipping capture and "
+                         "compression (implies --lut-act)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -90,7 +99,20 @@ def main() -> None:
              for k, v in model_batch(cfg, rng, b, t).items()}
 
     lut_tables = None
-    if args.lut_act:
+    if args.tuned_plan:
+        from repro.tune import load_tuned_plan
+
+        tp = load_tuned_plan(args.tuned_plan)
+        cfg = tp.patched_config(cfg)   # binds artifact to this arch/depth
+        lut_tables = tp.tables_for_model(backend=args.lut_backend,
+                                         plan_exec=args.plan_exec)
+        print(tp.summary())
+        from repro.serve import tables_nbytes
+
+        print(f"plan exec: {args.plan_exec} "
+              f"({tables_nbytes(lut_tables)} table bytes, loaded from "
+              f"{args.tuned_plan} — no recapture/recompression)")
+    elif args.lut_act:
         if args.calib_steps > 0 or args.calib_path:
             calib = None
             # save_calibration appends .npz when missing — honor both

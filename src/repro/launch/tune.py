@@ -1,0 +1,207 @@
+"""Accuracy-parity autotuner launcher: trained checkpoint -> tuned plan.
+
+Closes the loop the paper's Table 2 measures: sweep the don't-care knobs
+(``min_count`` / ``coverage`` / ``smoothing``) and table widths
+(``w_in`` / ``w_out``) against *served* quality on held-out token
+streams, extract the compression-vs-quality Pareto frontier, pick the
+cheapest plan within an accuracy budget (default 0.01 top-1 agreement
+drop, the paper's bound), refine per site kind, and freeze the result
+into a bit-exact artifact ``launch/serve --tuned-plan`` loads directly —
+no recapture, no recompression.
+
+  PYTHONPATH=src python -m repro.launch.tune --arch qwen3-0.6b \
+      [--ckpt-dir D] [--train-steps N] [--calib-steps N] [--eval-steps N] \
+      [--budget 0.01] [--grid default|quick] [--out tuned_plan.npz] \
+      [--bench-out BENCH_tune.json]
+
+With ``--ckpt-dir`` pointing at a ``launch/train`` Supervisor directory
+the latest checkpoint is restored; otherwise (or when the directory is
+empty) a short in-process training run at smoke scale stands in — and is
+checkpointed there, so the next tune run restores instead of retraining.
+
+Exits non-zero unless the selected plan meets the budget AND is strictly
+cheaper than the untuned default plan (``--no-strict`` downgrades both to
+warnings) — the CI tune-smoke job leans on this.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.calib import capture_model, synthetic_batches
+from repro.configs import ARCH_NAMES, get_config, smoke_config
+from repro.serve import verify_backend_equivalence
+from repro.tune import (
+    autotune,
+    default_grid,
+    greedy_tokens,
+    heldout_batches,
+    load_tuned_plan,
+    save_tuned_plan,
+    trained_params,
+    tuned_plan_from_outcome,
+)
+
+
+def bench_payload(args, cfg, info, outcome, wall_s: float) -> dict:
+    """The committed ``BENCH_tune.json`` row (schema ``tune_bench/v1``)."""
+    return {
+        "schema": "tune_bench/v1",
+        "arch": args.arch,
+        "family": cfg.family,
+        "scale": "full" if args.full else "smoke",
+        "budget": args.budget,
+        "budget_met": outcome.budget_met,
+        "trained": info,
+        "calib_steps": args.calib_steps,
+        "eval_steps": args.eval_steps,
+        "eval_tokens": outcome.metrics.n_tokens,
+        "grid": args.grid,
+        "frontier": [r.to_dict() for r in outcome.frontier],
+        "sweep": [r.to_dict() for r in outcome.results],
+        "default": outcome.default.to_dict(),
+        "selected": (outcome.selected.to_dict()
+                     if outcome.selected else None),
+        "assignment": {k: p.label()
+                       for k, p in outcome.assignment.items()},
+        "tuned": {
+            "cost": outcome.cost,
+            "table_bytes": outcome.plans.table_bytes(),
+            "metrics": outcome.metrics.to_dict(),
+        },
+        "greedy": {k: v for k, v in outcome.greedy.items()
+                   if k != "history"},
+        "greedy_history": outcome.greedy.get("history", []),
+        "wall_s": round(wall_s, 2),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen3-0.6b")
+    ap.add_argument("--full", action="store_true",
+                    help="full config (tuning at paper scale needs real "
+                         "hardware; default is the smoke variant)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="launch/train Supervisor checkpoint dir: restored "
+                         "when non-empty, else the fallback training run "
+                         "checkpoints here")
+    ap.add_argument("--train-steps", type=int, default=60,
+                    help="in-process fallback training steps")
+    ap.add_argument("--train-batch", type=int, default=8)
+    ap.add_argument("--train-seq", type=int, default=32)
+    ap.add_argument("--calib-steps", type=int, default=4,
+                    help="capture batches for the shared sweep capture")
+    ap.add_argument("--eval-steps", type=int, default=4,
+                    help="held-out parity evaluation batches")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--budget", type=float, default=0.01,
+                    help="max measured top-1 agreement drop (paper bound)")
+    ap.add_argument("--grid", choices=("default", "quick"),
+                    default="default")
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--backend", choices=("gather", "pallas"),
+                    default="gather")
+    ap.add_argument("--plan-exec", choices=("stacked", "unrolled"),
+                    default="stacked")
+    ap.add_argument("--out", default="tuned_plan.npz",
+                    help="tuned-plan artifact path")
+    ap.add_argument("--bench-out", default=None,
+                    help="write the tune_bench/v1 JSON here")
+    ap.add_argument("--no-strict", action="store_true",
+                    help="warn instead of failing when the budget is "
+                         "missed or the tuned plan is not cheaper")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = smoke_config(cfg)
+
+    params, info = trained_params(
+        cfg, ckpt_dir=args.ckpt_dir, train_steps=args.train_steps,
+        batch=args.train_batch, seq=args.train_seq)
+    print(f"params: {info}")
+
+    cap = capture_model(
+        params, cfg, synthetic_batches(cfg, args.calib_steps,
+                                       batch_size=args.batch,
+                                       seq_len=args.seq, seed=1))
+    print(f"capture: {cap.summary()}")
+
+    batches = heldout_batches(cfg, args.eval_steps, batch_size=args.batch,
+                              seq_len=args.seq)
+    grid = default_grid(cfg, quick=args.grid == "quick")
+    outcome = autotune(cfg, params, cap, batches, grid=grid,
+                       budget=args.budget, workers=args.workers,
+                       backend=args.backend, plan_exec=args.plan_exec,
+                       verbose=True)
+    print(outcome.summary())
+    print("frontier:")
+    for r in outcome.frontier:
+        print(f"  {r.point.label()}: cost={r.cost} "
+              f"bytes={r.table_bytes} drop={r.metrics.top1_drop:.4f} "
+              f"ppl_delta={r.metrics.ppl_delta:+.4f}")
+
+    # gather/pallas must bit-match on the final plans before we freeze them
+    from repro.calib import model_batch
+
+    rng = np.random.default_rng(0)
+    batch = model_batch(cfg, rng, args.batch, min(args.seq, 8))
+    verify_backend_equivalence(cfg, params, outcome.plans, batch, 3)
+    print("backend equivalence: gather == pallas on the tuned plans")
+
+    tp = tuned_plan_from_outcome(cfg, outcome, extra_meta={
+        "trained": info, "arch_cli": args.arch})
+    path = save_tuned_plan(args.out, tp)
+    print(f"saved tuned plan -> {path}")
+
+    # round-trip identity: the loaded artifact must decode token-for-token
+    # what the in-process plans decode, on both runtime backends
+    loaded = load_tuned_plan(path)
+    loaded.patched_config(cfg)   # arch/depth binding check
+    n_new = 4
+    live = greedy_tokens(
+        cfg, params, batch, n_new,
+        lut_tables=outcome.plans.tables_for_model(backend="gather"))
+    for backend in ("gather", "pallas"):
+        got = greedy_tokens(
+            cfg, params, batch, n_new,
+            lut_tables=loaded.tables_for_model(backend=backend))
+        assert got == live, (
+            f"tuned-plan round trip diverged [{backend}]: {got} vs {live}")
+    print(f"artifact round trip: token-identical on gather and pallas "
+          f"({n_new} tokens x {args.batch} requests)")
+
+    if args.bench_out:
+        payload = bench_payload(args, cfg, info, outcome, time.time() - t0)
+        with open(args.bench_out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.bench_out}")
+
+    failures = []
+    if not outcome.budget_met:
+        failures.append(
+            f"budget not met: measured top-1 drop "
+            f"{outcome.metrics.top1_drop:.4f} > {args.budget}")
+    if not outcome.improved:
+        failures.append(
+            f"no footprint win: tuned cost {outcome.cost} vs default "
+            f"{outcome.default.cost}")
+    if len(outcome.frontier) < 3:
+        failures.append(
+            f"degenerate frontier: {len(outcome.frontier)} non-dominated "
+            f"points (expected >= 3) — widen the grid or the eval set")
+    for msg in failures:
+        print(f"{'WARNING' if args.no_strict else 'FAIL'}: {msg}")
+    if failures and not args.no_strict:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -122,6 +122,10 @@ def activation_table(
         raise ValueError(
             f"activation_table: empty input range "
             f"[x_lo={x_lo}, x_hi={x_hi}]")
+    if w_out < 2:
+        raise ValueError(
+            f"activation_table: w_out={w_out} leaves fewer than two output "
+            f"levels — the served table would be (near-)constant")
     if care is not None and calibration is not None:
         raise ValueError(
             "activation_table: pass either raw calibration samples or a "
@@ -147,6 +151,19 @@ def activation_table(
     codes = np.clip(
         np.rint((ys - y_lo) / span * ((1 << w_out) - 1)),
         0, (1 << w_out) - 1).astype(np.int64)
+    codes_care = codes if care is None else codes[care]
+    if np.unique(ys_care).size >= 2 and np.unique(codes_care).size < 2:
+        # The care bins carry distinct outputs but the quantizer collapses
+        # them all onto one code (the observed span is below the 1e-6
+        # resolution floor): the table would serve a constant where the
+        # activation varies — a degenerate quantizer the engine would
+        # happily compress into nonsense.
+        raise ValueError(
+            f"activation_table[{name or f'act_{act}'}]: w_out={w_out} "
+            f"cannot represent the observed output range "
+            f"[{y_lo:.3g}, {y_hi:.3g}] — all {int(codes_care.size)} care "
+            f"bins quantize to a single output code; widen the care mask "
+            f"or raise w_out")
     spec = TableSpec(codes, w_in, w_out, care=care,
                      name=name or f"act_{act}")
     quant = {
@@ -164,10 +181,13 @@ def ensure_decomposed(plan, spec: TableSpec,
         return plan
     from repro.core.pipeline import _decompose_hb
 
-    cfg = CompressConfig(exiguity=exiguity, m_candidates=(32,),
+    # m must divide the table length: narrow tables (w_in < 5) take the
+    # whole table as one sub-table instead of the default 32
+    m = min(32, 1 << spec.w_in)
+    cfg = CompressConfig(exiguity=exiguity, m_candidates=(m,),
                          lb_candidates=(0,))
     return _decompose_hb(spec.values, spec.care_mask(), spec.w_in,
-                         spec.w_out, 0, None, 32, cfg, spec.name)
+                         spec.w_out, 0, None, m, cfg, spec.name)
 
 
 def lut_activation_from_plan(plan, spec: TableSpec, quant: dict, *,

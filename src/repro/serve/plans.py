@@ -56,7 +56,12 @@ import numpy as np
 
 from repro.calib import CalibrationSet
 from repro.configs.base import ArchConfig
-from repro.core import CompressConfig, CompressReport, compress_network_report
+from repro.core import (
+    CompressConfig,
+    CompressReport,
+    PlanCache,
+    compress_network_report,
+)
 from repro.core.table import TableSpec
 from repro.kernels import PlanArrays
 from repro.nn.lut_act import (
@@ -254,7 +259,9 @@ def _per_site_specs(cfg, kinds, calib: CalibrationSet, w_in, w_out,
     """Per-site calibration path: one care mask (and output quantization)
     per ``(layer, site)`` from the captured CalibrationSet; falls back to
     the site-kind mask where no per-layer key exists (a layer-agnostic
-    capture, e.g. an old artifact)."""
+    capture, e.g. an old artifact).  ``w_out`` may be a per-site-kind dict
+    (the tuned-plan width override) — a site's layers must share one
+    output width so their plans can stack."""
     specs: list[TableSpec] = []
     metas: list[tuple[str, str, dict]] = []
     layered = cfg.family in PER_LAYER_FAMILIES
@@ -266,8 +273,9 @@ def _per_site_specs(cfg, kinds, calib: CalibrationSet, w_in, w_out,
                     f"build_serving_plans: calibration has no mask for "
                     f"site {site!r} (layer {layer}); captured sites: "
                     f"{calib.sites()}")
+            w_out_site = w_out[site] if isinstance(w_out, dict) else w_out
             spec, quant = activation_table(
-                act, care=care, w_in=w_in, w_out=w_out, x_lo=x_lo,
+                act, care=care, w_in=w_in, w_out=w_out_site, x_lo=x_lo,
                 x_hi=x_hi, name=f"L{layer}/{site}")
             specs.append(spec)
             metas.append((site, act, quant))
@@ -279,13 +287,14 @@ def build_serving_plans(
     calibration: np.ndarray | CalibrationSet,
     *,
     w_in: int | None = None,
-    w_out: int | None = None,
+    w_out: int | dict | None = None,
     x_lo: float = -8.0,
     x_hi: float = 8.0,
     compress_cfg: CompressConfig | None = None,
     workers: int | None = None,
     backend: str = "gather",
     plan_exec: str = "stacked",
+    plan_cache: PlanCache | None = None,
     verbose: bool = False,
 ) -> ServingPlans:
     """Compress every activation site of ``cfg`` into serving tables.
@@ -300,6 +309,12 @@ def build_serving_plans(
     by default as stacked ``(L, …)`` arrays the layer scans index in
     place (``plan_exec="stacked"``); ``plan_exec="unrolled"`` keeps the
     python-unrolled reference form.
+
+    ``w_out`` may be a dict mapping site kinds (``"mlp"``/``"expert"``/
+    ``"ffn"``) to per-site output widths — the tuned-plan width override
+    (:mod:`repro.tune`) — on the per-site calibration path only.
+    ``plan_cache`` (a :class:`~repro.core.PlanCache`) shares compression
+    results across repeated builds (the autotune sweep).
     """
     per_site = isinstance(calibration, CalibrationSet)
     if per_site:
@@ -313,8 +328,20 @@ def build_serving_plans(
         x_lo, x_hi = calibration.x_lo, calibration.x_hi
     else:
         w_in = w_in or cfg.lut_act_bits_in
-    w_out = w_out or cfg.lut_act_bits_out
     kinds = activation_sites(cfg)
+    if isinstance(w_out, dict):
+        if not per_site:
+            raise ValueError(
+                "build_serving_plans: per-site w_out overrides need a "
+                "per-site CalibrationSet (shared calibration serves one "
+                "table per activation kind)")
+        missing = {site for site, _ in kinds} - set(w_out)
+        if missing:
+            raise ValueError(
+                f"build_serving_plans: per-site w_out has no entry for "
+                f"site kind(s) {sorted(missing)} (got {sorted(w_out)})")
+    else:
+        w_out = w_out or cfg.lut_act_bits_out
     if per_site:
         specs, metas = _per_site_specs(cfg, kinds, calibration, w_in,
                                        w_out, x_lo, x_hi)
@@ -323,7 +350,7 @@ def build_serving_plans(
                                      x_lo, x_hi)
     ccfg = compress_cfg or CompressConfig(**DEFAULT_COMPRESS)
     report = compress_network_report(specs, ccfg, workers=workers,
-                                     verbose=verbose)
+                                     verbose=verbose, cache=plan_cache)
     layered = per_site and cfg.family in PER_LAYER_FAMILIES
     sites: dict[str, SitePlan] = {}
     for (site, act, quant), spec, plan in zip(metas, specs, report.plans):

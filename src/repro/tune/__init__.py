@@ -1,0 +1,73 @@
+"""Accuracy-parity autotuner: trained model -> calibrated compression ->
+measured served quality -> Pareto-optimal per-site plans.
+
+The paper's headline claim is a *tradeoff* (up to 1.63x P-LUT reduction
+at <= 0.01 accuracy drop); this package closes the measurement loop the
+compression-side modules leave open:
+
+    params, info = trained_params(cfg, ckpt_dir=...)     # parity.py
+    cap = capture_model(params, cfg, calib_batches)      # repro.calib
+    outcome = autotune(cfg, params, cap,                 # sweep.py
+                       batches=heldout_batches(cfg, 4),
+                       budget=0.01)
+    tp = tuned_plan_from_outcome(cfg, outcome)           # artifact.py
+    save_tuned_plan("tuned.npz", tp)
+    # launch/serve --tuned-plan tuned.npz  (no recapture, no recompress)
+
+``launch/tune.py`` is the CLI over exactly this flow.
+"""
+from .artifact import (
+    TunedPlan,
+    load_tuned_plan,
+    save_tuned_plan,
+    tuned_plan_from_outcome,
+)
+from .parity import (
+    ParityHarness,
+    ParityMetrics,
+    greedy_tokens,
+    heldout_batches,
+    model_logits,
+    served_parity,
+    trained_params,
+)
+from .pareto import greedy_select, pareto_frontier, select_by_budget
+from .sweep import (
+    SweepPoint,
+    SweepResult,
+    TuneOutcome,
+    autotune,
+    build_point_plans,
+    calibration_for,
+    default_grid,
+    resolve_w_out,
+    run_sweep,
+    w_out_from_ranges,
+)
+
+__all__ = [
+    "ParityHarness",
+    "ParityMetrics",
+    "SweepPoint",
+    "SweepResult",
+    "TuneOutcome",
+    "TunedPlan",
+    "autotune",
+    "build_point_plans",
+    "calibration_for",
+    "default_grid",
+    "greedy_select",
+    "greedy_tokens",
+    "heldout_batches",
+    "load_tuned_plan",
+    "model_logits",
+    "pareto_frontier",
+    "resolve_w_out",
+    "run_sweep",
+    "save_tuned_plan",
+    "select_by_budget",
+    "served_parity",
+    "trained_params",
+    "tuned_plan_from_outcome",
+    "w_out_from_ranges",
+]

@@ -1,0 +1,311 @@
+"""Served-quality parity harness: compressed serving vs the float model.
+
+The paper's headline result is a *tradeoff* — up to 1.63x P-LUT reduction
+at a test-accuracy drop of at most 0.01 — but compression alone only
+measures the left side.  This module measures the right side for the LM
+serving stack: run the compressed serving path against the uncompressed
+float baseline of the *same trained parameters* on held-out token
+streams, and report
+
+* per-token **top-1 agreement** (the LM analogue of the paper's test
+  accuracy: how often greedy decoding picks the same token),
+* mean **KL divergence** and **logit MSE** (distributional drift), and
+* **perplexity delta** against the stream's actual next tokens.
+
+Checkpoints come from :mod:`repro.launch.train`'s Supervisor directory
+(:func:`trained_params` restores the latest step); with no checkpoint the
+fall-back is a short in-process training run at smoke scale — calibrated
+don't-care masks are only meaningful against a model whose activation
+distributions mean something, which a randomly initialized network's do
+not.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data import TokenStream
+from repro.nn.layers import logits_projection
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence logits (all families)
+# ---------------------------------------------------------------------------
+def model_logits(params, cfg: ArchConfig, batch: dict, lut_tables=None):
+    """One exact full-sequence forward -> (B, T, V) logits over the token
+    positions (vlm patch-prefix positions are dropped).  The same
+    family dispatch as :func:`repro.calib.capture_model`, so parity runs
+    the very forward the capture calibrated."""
+    from repro.nn.transformer import (
+        decoder_forward,
+        encdec_forward,
+        encoder_forward,
+        hybrid_forward,
+        rwkv_forward,
+    )
+
+    toks = jnp.asarray(batch["tokens"], jnp.int32)
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, _, _ = decoder_forward(params, cfg, toks,
+                                  patches=batch.get("patches"),
+                                  lut_tables=lut_tables)
+    elif cfg.family == "ssm":
+        x, _ = rwkv_forward(params, cfg, toks, lut_tables=lut_tables)
+    elif cfg.family == "hybrid":
+        x, _ = hybrid_forward(params, cfg, toks, lut_tables=lut_tables)
+    elif cfg.family == "encdec":
+        enc = encoder_forward(params, cfg, jnp.asarray(batch["frames"]))
+        x, _ = encdec_forward(params, cfg, toks, enc,
+                              lut_tables=lut_tables)
+    else:
+        raise ValueError(f"model_logits: unknown family {cfg.family!r}")
+    x = x[:, -toks.shape[1]:]
+    return logits_projection(x, params["lm_head"])
+
+
+def heldout_batches(cfg: ArchConfig, steps: int, batch_size: int = 2,
+                    seq_len: int = 16, seed: int = 17) -> list[dict]:
+    """Held-out evaluation batches: a :class:`TokenStream` on its own seed
+    (disjoint from the training stream's), with labels for perplexity and
+    family extras (vlm patches / encdec frames) where needed."""
+    stream = TokenStream(cfg.vocab_size, seq_len, batch_size, seed=seed)
+    rng = np.random.default_rng(seed)
+    out = []
+    for s in range(steps):
+        b = dict(stream.batch_at(s))
+        if cfg.family == "vlm":
+            b["patches"] = np.asarray(
+                rng.normal(size=(batch_size, cfg.n_patches, cfg.d_model)),
+                np.float32)
+        if cfg.family == "encdec":
+            b["frames"] = np.asarray(
+                rng.normal(size=(batch_size, cfg.n_frames, cfg.d_model)),
+                np.float32)
+        out.append(b)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ParityMetrics:
+    """Aggregated served-quality deltas of one table configuration."""
+
+    top1_agreement: float     # fraction of positions with identical argmax
+    kl: float                 # mean KL(ref || served) over positions
+    logit_mse: float          # mean squared logit difference
+    ppl_ref: float            # reference perplexity on the stream labels
+    ppl_lut: float            # served perplexity on the stream labels
+    n_tokens: int
+
+    @property
+    def top1_drop(self) -> float:
+        """The paper's accuracy-drop analogue (what the budget bounds)."""
+        return 1.0 - self.top1_agreement
+
+    @property
+    def ppl_delta(self) -> float:
+        return self.ppl_lut - self.ppl_ref
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["top1_drop"] = self.top1_drop
+        d["ppl_delta"] = self.ppl_delta
+        return d
+
+    def summary(self) -> str:
+        return (f"top-1 agreement {self.top1_agreement:.4f} "
+                f"(drop {self.top1_drop:.4f}), kl {self.kl:.3e}, "
+                f"ppl {self.ppl_ref:.3f} -> {self.ppl_lut:.3f} "
+                f"({self.ppl_delta:+.4f}) over {self.n_tokens} tokens")
+
+
+def _log_softmax(logits: np.ndarray) -> np.ndarray:
+    m = logits.max(axis=-1, keepdims=True)
+    z = logits - m
+    return z - np.log(np.exp(z).sum(axis=-1, keepdims=True))
+
+
+class ParityHarness:
+    """Reference logits computed once; each table config pays one jit.
+
+    The sweep evaluates many table configurations against the same
+    baseline, so the reference forward (and its per-position log-probs /
+    cross-entropy) is precomputed host-side.  ``ref_tables`` swaps the
+    baseline from the float model to another LUT configuration — the
+    losslessness fixture (identical tables must measure exactly zero
+    drop).
+    """
+
+    def __init__(self, cfg: ArchConfig, params, batches: list[dict],
+                 ref_tables: dict | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.batches = [dict(b) for b in batches]
+        if not self.batches:
+            raise ValueError("ParityHarness: no evaluation batches")
+        ref_cfg = dataclasses.replace(
+            cfg, lut_activation=ref_tables is not None)
+        fn = jax.jit(lambda p, b: model_logits(p, ref_cfg, b, ref_tables))
+        self.ref_logits = [
+            np.asarray(fn(params, self._device(b)), np.float32)
+            for b in self.batches]
+        self.ref_logp = [_log_softmax(lg) for lg in self.ref_logits]
+
+    def _device(self, batch: dict) -> dict:
+        return {k: jnp.asarray(v) for k, v in batch.items()
+                if k in ("tokens", "patches", "frames")}
+
+    def _labels(self, batch: dict) -> np.ndarray:
+        lab = batch.get("labels")
+        if lab is not None:
+            return np.asarray(lab)
+        return np.asarray(batch["tokens"])[:, 1:]
+
+    def evaluate(self, lut_tables: dict | None) -> ParityMetrics:
+        """Measure one serving-table configuration against the baseline."""
+        lut_cfg = dataclasses.replace(
+            self.cfg, lut_activation=lut_tables is not None)
+        fn = jax.jit(lambda p, b: model_logits(p, lut_cfg, b, lut_tables))
+        n_tok = agree = 0
+        kl_sum = mse_sum = ce_ref = ce_lut = 0.0
+        n_lab = 0
+        for batch, ref_lg, ref_lp in zip(self.batches, self.ref_logits,
+                                         self.ref_logp):
+            lut_lg = np.asarray(fn(self.params, self._device(batch)),
+                                np.float32)
+            lut_lp = _log_softmax(lut_lg)
+            n = int(np.prod(ref_lg.shape[:2]))
+            n_tok += n
+            agree += int((ref_lg.argmax(-1) == lut_lg.argmax(-1)).sum())
+            p_ref = np.exp(ref_lp)
+            kl_sum += float((p_ref * (ref_lp - lut_lp)).sum())
+            mse_sum += float(np.mean((ref_lg - lut_lg) ** 2)) * n
+            # teacher-forced next-token CE against the stream labels
+            labels = self._labels(batch)
+            t = labels.shape[1]
+            idx = np.ogrid[:labels.shape[0], :t]
+            ce_ref += float(-ref_lp[:, :t][idx[0], idx[1], labels].sum())
+            ce_lut += float(-lut_lp[:, :t][idx[0], idx[1], labels].sum())
+            n_lab += int(labels.size)
+        return ParityMetrics(
+            top1_agreement=agree / n_tok,
+            kl=kl_sum / n_tok,
+            logit_mse=mse_sum / n_tok,
+            ppl_ref=float(np.exp(ce_ref / n_lab)),
+            ppl_lut=float(np.exp(ce_lut / n_lab)),
+            n_tokens=n_tok,
+        )
+
+
+def served_parity(cfg: ArchConfig, params, batches: list[dict],
+                  lut_tables: dict | None, *,
+                  ref_tables: dict | None = None) -> ParityMetrics:
+    """One-shot convenience wrapper over :class:`ParityHarness`."""
+    return ParityHarness(cfg, params, batches,
+                         ref_tables=ref_tables).evaluate(lut_tables)
+
+
+# ---------------------------------------------------------------------------
+# Greedy-decode comparison (artifact round-trip identity)
+# ---------------------------------------------------------------------------
+def greedy_tokens(cfg: ArchConfig, params, batch: dict, n_new: int,
+                  lut_tables: dict | None = None,
+                  max_seq: int | None = None) -> list[list[int]]:
+    """Greedy-decode ``n_new`` tokens through the serving path — the
+    token-identity probe for tuned-artifact round trips."""
+    from repro.serve.decode import decode_step, prefill
+
+    cfg = dataclasses.replace(cfg, lut_activation=lut_tables is not None)
+    dev = {k: jnp.asarray(v) for k, v in batch.items()
+           if k in ("tokens", "patches", "frames")}
+    b, t = dev["tokens"].shape
+    if cfg.family == "vlm" and "patches" in dev:
+        t = t + dev["patches"].shape[1]
+    max_seq = max_seq or (t + n_new)
+    lg, cache = jax.jit(
+        lambda p, x: prefill(p, cfg, x, max_seq=max_seq,
+                             lut_tables=lut_tables))(params, dev)
+    step = jax.jit(lambda p, c, tk, pos: decode_step(
+        p, cfg, c, tk, pos, lut_tables=lut_tables))
+    tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+    toks = []
+    for i in range(n_new):
+        toks.append(np.asarray(tok)[:, 0].tolist())
+        lg, cache = step(params, cache, tok, jnp.asarray(t + i))
+        tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+    return [[toks[i][r] for i in range(n_new)] for r in range(b)]
+
+
+# ---------------------------------------------------------------------------
+# Trained parameters (checkpoint or in-process fallback)
+# ---------------------------------------------------------------------------
+def trained_params(cfg: ArchConfig, *, ckpt_dir: str | None = None,
+                   train_steps: int = 60, batch: int = 8, seq: int = 32,
+                   lr: float = 1e-2, seed: int = 0) -> tuple[dict, dict]:
+    """Parameters the parity harness should judge: the latest Supervisor
+    checkpoint under ``ckpt_dir`` when one exists, else a short in-process
+    training run (saved to ``ckpt_dir`` when given, so the next tune run
+    restores instead of retraining).  Returns ``(params, info)``."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import AdamWConfig, warmup_cosine_schedule
+    from repro.train import (
+        Supervisor,
+        TrainConfig,
+        abstract_train_state,
+        init_train_state,
+        latest_step,
+        make_train_step,
+        restore_checkpoint,
+        train_state_shardings,
+    )
+
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(
+            lr=warmup_cosine_schedule(lr, max(1, train_steps // 10),
+                                      max(2, train_steps))),
+        remat=False,
+    )
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        state_like = abstract_train_state(cfg, tcfg)
+        try:
+            state, step = restore_checkpoint(ckpt_dir, state_like)
+        except ValueError as e:
+            raise ValueError(
+                f"trained_params: checkpoint under {ckpt_dir} does not "
+                f"match arch {cfg.name!r} with default TrainConfig "
+                f"({e}) — retrain or point --ckpt-dir elsewhere") from e
+        return state["params"], {"source": "checkpoint", "step": int(step),
+                                 "ckpt_dir": ckpt_dir}
+
+    mesh = make_host_mesh(dp=1, tp=1)
+    stream = TokenStream(cfg.vocab_size, seq, batch, seed=seed)
+    _, jit_step, _ = make_train_step(cfg, tcfg, mesh)
+    specs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+             for k, v in stream.batch_at(0).items()}
+    jstep = jit_step(specs)
+    state = jax.device_put(init_train_state(cfg, tcfg),
+                           train_state_shardings(cfg, tcfg, mesh))
+    losses: list[float] = []
+
+    def step_fn(state, b):
+        state, m = jstep(state, {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(m["loss"]))
+        return state, m
+
+    if ckpt_dir:
+        sup = Supervisor(ckpt_dir, ckpt_every=train_steps)
+        state, _ = sup.run(state, step_fn, stream.batch_at, train_steps)
+    else:
+        for s in range(train_steps):
+            state, _ = step_fn(state, stream.batch_at(s))
+    return state["params"], {
+        "source": "in_process", "steps": train_steps,
+        "loss_first": losses[0], "loss_last": losses[-1],
+        "ckpt_dir": ckpt_dir,
+    }

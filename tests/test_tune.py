@@ -1,0 +1,411 @@
+"""Accuracy-parity autotuner: parity harness, Pareto/greedy selection,
+sweep machinery, tuned-plan artifacts, and the calibration groundwork
+(output-range capture, histogram folding, degenerate-quantizer guards)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from hypothesis import given, settings, strategies as st
+
+from repro.calib import (
+    CalibrationSet,
+    calibration_from_capture,
+    capture_model,
+    fold_hist,
+    load_calibration,
+    save_calibration,
+    synthetic_batches,
+)
+from repro.configs import get_config, smoke_config
+from repro.core import CompressConfig, PlanCache
+from repro.nn import init_params
+from repro.nn.lut_act import activation_table
+from repro.serve import build_serving_plans
+from repro.tune import (
+    ParityHarness,
+    SweepPoint,
+    autotune,
+    build_point_plans,
+    calibration_for,
+    greedy_select,
+    greedy_tokens,
+    heldout_batches,
+    load_tuned_plan,
+    pareto_frontier,
+    save_tuned_plan,
+    select_by_budget,
+    trained_params,
+    tuned_plan_from_outcome,
+    w_out_from_ranges,
+)
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.fixture(scope="module")
+def trained_dense():
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    params, info = trained_params(cfg, train_steps=25, batch=4, seq=16)
+    assert info["loss_last"] < info["loss_first"]
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def dense_capture(trained_dense):
+    cfg, params = trained_dense
+    return capture_model(
+        params, cfg, synthetic_batches(cfg, 2, batch_size=2, seq_len=8,
+                                       seed=1))
+
+
+@pytest.fixture(scope="module")
+def eval_batches(trained_dense):
+    cfg, _ = trained_dense
+    return heldout_batches(cfg, 2, batch_size=2, seq_len=12)
+
+
+# =========================================================================
+# calibration groundwork: output ranges, folding, store round trip
+# =========================================================================
+def test_capture_tracks_output_ranges(dense_capture):
+    ranges = dense_capture.observed_ranges()
+    assert set(ranges) == set(dense_capture.hists)
+    for key, (lo, hi) in ranges.items():
+        assert np.isfinite([lo, hi]).all() and hi > lo
+        # silu outputs are bounded below by its global minimum ~ -0.2785
+        # (bf16 forward rounding can land a hair below the float64 value)
+        assert lo >= -0.30
+
+
+def test_calibration_set_carries_ranges(dense_capture):
+    calib = calibration_from_capture(dense_capture)
+    assert calib.ranges is not None
+    assert set(calib.ranges) == set(calib.masks)
+    r = calib.range_for("mlp", 0)
+    np.testing.assert_allclose(r, dense_capture.ranges["L0/mlp"])
+
+
+def test_store_roundtrip_ranges_bitexact(tmp_path, dense_capture):
+    calib = calibration_from_capture(dense_capture)
+    path = save_calibration(str(tmp_path / "c"), calib)
+    loaded = load_calibration(path)
+    assert set(loaded.ranges) == set(calib.ranges)
+    for key in calib.ranges:
+        np.testing.assert_array_equal(loaded.ranges[key],
+                                      calib.ranges[key])
+
+
+def test_store_loads_v1_artifact_without_ranges(tmp_path):
+    """Older (pre-range) artifacts still load, with ranges=None."""
+    import json
+
+    header = {"format": "repro-calib/v1", "w_in": 4, "x_lo": -8.0,
+              "x_hi": 8.0, "meta": {}}
+    path = str(tmp_path / "old.npz")
+    np.savez(
+        path,
+        __header__=np.frombuffer(json.dumps(header).encode(), np.uint8),
+        **{"mask:mlp": np.ones(16, bool)})
+    loaded = load_calibration(path)
+    assert loaded.ranges is None
+    assert loaded.w_in == 4 and set(loaded.masks) == {"mlp"}
+
+
+def test_fold_hist_preserves_mass_and_grid():
+    h = np.zeros(1 << 10, np.int64)
+    h[[0, 1, 511, 512, 1022, 1023]] = [7, 1, 3, 4, 2, 9]
+    f = fold_hist(h, 8)
+    assert f.size == 256 and f.sum() == h.sum()
+    assert f[0] == 8 and f[255] == 11      # edges stay edges
+    assert fold_hist(h, 10) is not h       # same-width copy
+    np.testing.assert_array_equal(fold_hist(h, 10), h)
+    with pytest.raises(ValueError, match="refine"):
+        fold_hist(np.zeros(16, np.int64), 5)
+
+
+def test_care_mask_rejects_zero_care_bins():
+    from repro.calib import care_mask_from_hist
+
+    hist = np.zeros(32, np.int64)
+    hist[3] = 1
+    with pytest.raises(ValueError, match="zero care bins"):
+        care_mask_from_hist(hist, min_count=5)
+
+
+# =========================================================================
+# degenerate quantizer / width hardening
+# =========================================================================
+def test_activation_table_rejects_unrepresentable_w_out():
+    # gelu's far-negative tail varies at the ~1e-12 scale: a care mask
+    # confined there has a real (distinct-valued) output range below any
+    # w_out step's resolution
+    care = np.zeros(256, bool)
+    care[20:24] = True
+    with pytest.raises(ValueError, match="cannot represent"):
+        activation_table("gelu", care=care, w_in=8, w_out=8)
+    with pytest.raises(ValueError, match="fewer than two output"):
+        activation_table("silu", w_in=8, w_out=1)
+
+
+def test_build_serving_plans_rejects_degenerate_sweep_point():
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    cfg = dataclasses.replace(cfg, activation="gelu")
+    care = np.zeros(256, bool)
+    care[20:24] = True
+    calib = CalibrationSet(
+        masks={f"L{i}/mlp": care for i in range(cfg.n_layers)}, w_in=8)
+    with pytest.raises(ValueError, match="cannot represent"):
+        build_serving_plans(cfg, calib, w_out=8)
+
+
+def test_per_site_w_out_dict(dense_capture, trained_dense):
+    cfg, _ = trained_dense
+    calib = calibration_for(dense_capture, SweepPoint(), w_in=8)
+    plans = build_serving_plans(cfg, calib, w_out={"mlp": 6})
+    entry = plans.tables_for_model()["sites"]["mlp"]
+    assert entry["stacked"]["meta"]["w_out"] == 6
+    with pytest.raises(ValueError, match="no entry for"):
+        build_serving_plans(cfg, calib, w_out={"ffn": 6})
+    with pytest.raises(ValueError, match="per-site CalibrationSet"):
+        build_serving_plans(cfg, RNG.normal(size=1000), w_in=8,
+                            w_out={"mlp": 6})
+
+
+def test_w_out_from_ranges_narrow_range_saves_bits(trained_dense,
+                                                   dense_capture):
+    cfg, _ = trained_dense
+    calib = calibration_from_capture(dense_capture)
+    # real observed ranges: derived widths never exceed the base
+    w = w_out_from_ranges(cfg, calib, 10)
+    assert set(w) == {"mlp"} and 4 <= w["mlp"] <= 10
+    # a site observing a sliver of the output range needs fewer bits
+    narrow = dataclasses.replace(calib)
+    narrow.ranges = {k: np.array([0.0, 0.05]) for k in calib.ranges}
+    w_narrow = w_out_from_ranges(cfg, narrow, 10)
+    assert w_narrow["mlp"] < w["mlp"]
+    # no ranges (v1 artifact): base width everywhere
+    legacy = dataclasses.replace(calib)
+    legacy.ranges = None
+    assert w_out_from_ranges(cfg, legacy, 10) == {"mlp": 10}
+
+
+# =========================================================================
+# plan cache
+# =========================================================================
+def test_plan_cache_across_sweep_points(trained_dense, dense_capture):
+    cfg, _ = trained_dense
+    cache = PlanCache()
+    p1 = build_point_plans(cfg, dense_capture, SweepPoint(w_in=8),
+                           plan_cache=cache)
+    assert p1.report.cache_hits == 0
+    p2 = build_point_plans(cfg, dense_capture, SweepPoint(w_in=8),
+                           plan_cache=cache)
+    assert p2.report.cache_hits == p2.report.n_unique
+    assert p2.total_cost == p1.total_cost
+    for k in p1.sites:
+        for a, b in zip(p1.sites[k].luts, p2.sites[k].luts):
+            np.testing.assert_array_equal(a.plan.reconstruct(),
+                                          b.plan.reconstruct())
+
+
+# =========================================================================
+# parity harness
+# =========================================================================
+def test_parity_lossless_compression_is_exactly_zero_drop(trained_dense,
+                                                          eval_batches):
+    """With full care masks (no don't-cares) the decomposition
+    reconstructs every table entry exactly, so engine-compressed tables
+    must measure exactly zero drop against the same uncompressed table."""
+    cfg, params = trained_dense
+    full = CalibrationSet(
+        masks={f"L{i}/mlp": np.ones(256, bool)
+               for i in range(cfg.n_layers)}, w_in=8)
+    compressed = build_serving_plans(cfg, full, w_out=8)
+    plain = build_serving_plans(
+        cfg, full, w_out=8,
+        compress_cfg=CompressConfig(m_candidates=(), lb_candidates=()))
+    assert all(t.kind == "plain" for t in plain.report.tables)
+    harness = ParityHarness(cfg, params, eval_batches,
+                            ref_tables=plain.tables_for_model())
+    m = harness.evaluate(compressed.tables_for_model())
+    assert m.top1_agreement == 1.0
+    assert m.kl == 0.0 and m.logit_mse == 0.0
+    assert m.ppl_delta == 0.0
+
+
+def test_parity_self_is_zero_and_float_baseline_sane(trained_dense,
+                                                     eval_batches):
+    cfg, params = trained_dense
+    harness = ParityHarness(cfg, params, eval_batches)
+    m = harness.evaluate(None)
+    assert m.top1_agreement == 1.0 and m.kl == 0.0
+    assert m.ppl_ref == m.ppl_lut > 1.0
+    assert m.n_tokens == sum(np.prod(b["tokens"].shape)
+                             for b in eval_batches)
+
+
+# =========================================================================
+# pareto frontier + greedy selector (property tests)
+# =========================================================================
+@given(seed=st.integers(min_value=0, max_value=200),
+       n=st.integers(min_value=1, max_value=40))
+@settings(max_examples=30, deadline=None)
+def test_pareto_frontier_monotone_and_nondominated(seed, n):
+    rng = np.random.default_rng(seed)
+    pts = [{"cost": int(rng.integers(1, 50)),
+            "drop": round(float(rng.random()), 2)} for _ in range(n)]
+    front = pareto_frontier(pts, cost=lambda r: r["cost"],
+                            drop=lambda r: r["drop"])
+    assert front
+    for a, b in zip(front, front[1:]):
+        assert a["cost"] <= b["cost"]
+        assert a["drop"] > b["drop"]          # strictly decreasing
+    for f in front:                            # nothing dominates a point
+        for p in pts:
+            dominates = (p["cost"] <= f["cost"] and p["drop"] <= f["drop"]
+                         and (p["cost"] < f["cost"]
+                              or p["drop"] < f["drop"]))
+            assert not dominates
+    feasible = select_by_budget(front, 0.5, drop=lambda r: r["drop"])
+    if feasible is not None:
+        assert feasible["drop"] <= 0.5
+        cheaper = [p for p in pts if p["cost"] < feasible["cost"]]
+        assert all(p["drop"] > 0.5 for p in cheaper)
+
+
+@given(seed=st.integers(min_value=0, max_value=300))
+@settings(max_examples=30, deadline=None)
+def test_greedy_selector_never_violates_budget(seed):
+    """Synthetic selection problem: random per-kind costs, a random
+    (deterministic) measured-drop function.  Whatever the landscape, the
+    returned assignment's *measured* drop obeys the budget and its cost
+    never exceeds the start's."""
+    rng = np.random.default_rng(seed)
+    kinds = ["mlp", "expert", "ffn"][: int(rng.integers(1, 4))]
+    n_cand = int(rng.integers(2, 5))
+    candidates = {k: list(range(n_cand)) for k in kinds}
+    costs = {(k, c): float(rng.integers(1, 100))
+             for k in kinds for c in candidates[kinds[0]]}
+    budget = float(rng.random() * 0.05)
+
+    def measured_drop(assignment) -> float:
+        h = hash(tuple(sorted(assignment.items()))) & 0xFFFF
+        return (h / 0xFFFF) * 0.1            # in [0, 0.1]
+
+    def evaluate(assignment):
+        return (sum(costs[(k, c)] for k, c in assignment.items()),
+                measured_drop(assignment))
+
+    start = {k: 0 for k in kinds}
+    start_cost, start_drop = evaluate(start)
+    if start_drop > budget:
+        with pytest.raises(ValueError, match="violates the accuracy"):
+            greedy_select(kinds, candidates, costs, evaluate,
+                          budget=budget, start=start)
+        return
+    assignment, info = greedy_select(kinds, candidates, costs, evaluate,
+                                     budget=budget, start=start)
+    final_cost, final_drop = evaluate(assignment)
+    assert final_drop <= budget
+    assert final_cost <= start_cost
+    assert info["cost"] == final_cost and info["drop"] == final_drop
+    assert info["evals"] <= 32
+
+
+# =========================================================================
+# sweep + autotune + artifact round trip
+# =========================================================================
+@pytest.fixture(scope="module")
+def tuned(trained_dense, dense_capture, eval_batches):
+    cfg, params = trained_dense
+    grid = [SweepPoint(), SweepPoint(coverage=0.999),
+            SweepPoint(w_in=8, w_out="auto", coverage=0.999),
+            SweepPoint(w_in=6, w_out=6, min_count=2)]
+    return autotune(cfg, params, dense_capture, eval_batches, grid=grid,
+                    budget=0.01)
+
+
+def test_autotune_outcome(tuned):
+    out = tuned
+    assert out.results[0].point == SweepPoint()      # untuned default
+    assert out.default.ok
+    assert len(out.frontier) >= 1
+    assert out.metrics.top1_drop <= 0.01 or not out.budget_met
+    if out.budget_met:
+        assert out.cost <= out.default.cost
+    # frontier is drawn from the measured sweep points
+    ok_costs = {r.cost for r in out.results if r.ok}
+    assert all(r.cost in ok_costs for r in out.frontier)
+
+
+def test_autotune_skips_degenerate_points(trained_dense, dense_capture,
+                                          eval_batches):
+    cfg, params = trained_dense
+    grid = [SweepPoint(),
+            SweepPoint(min_count=10 ** 9)]   # mask keeps zero bins
+    out = autotune(cfg, params, dense_capture, eval_batches, grid=grid,
+                   budget=0.5)
+    assert out.results[1].error is not None
+    assert "zero care bins" in out.results[1].error
+    assert out.results[0].ok
+
+
+def test_tuned_artifact_roundtrip_token_identical(tmp_path, tuned,
+                                                  trained_dense):
+    """save -> load -> serve must decode token-for-token what the
+    in-process tuned plans decode, on both runtime backends."""
+    cfg, params = trained_dense
+    out = tuned
+    tp = tuned_plan_from_outcome(cfg, out)
+    path = save_tuned_plan(str(tmp_path / "tuned"), tp)
+    loaded = load_tuned_plan(path)
+    assert loaded.arch == cfg.name
+    assert loaded.knobs.keys() == {"mlp"}
+    assert loaded.meta["cost"] == out.cost
+    batch = {"tokens": np.asarray(
+        RNG.integers(1, cfg.vocab_size, (2, 6)), np.int32)}
+    live = greedy_tokens(cfg, params, batch, 4,
+                         lut_tables=out.plans.tables_for_model())
+    for backend in ("gather", "pallas"):
+        for plan_exec in ("stacked", "unrolled"):
+            got = greedy_tokens(
+                cfg, params, batch, 4,
+                lut_tables=loaded.tables_for_model(backend=backend,
+                                                   plan_exec=plan_exec))
+            assert got == live, (backend, plan_exec)
+    # bit-exact array round trip
+    for site, entries in tp.sites.items():
+        for a, b in zip(entries, loaded.sites[site]):
+            assert a["meta"] == b["meta"]
+            for f in a["arrays"]:
+                np.testing.assert_array_equal(a["arrays"][f],
+                                              b["arrays"][f])
+
+
+def test_tuned_plan_rejects_wrong_arch(tmp_path, tuned, trained_dense):
+    cfg, _ = trained_dense
+    tp = tuned_plan_from_outcome(cfg, tuned)
+    other = smoke_config(get_config("rwkv6-3b"))
+    with pytest.raises(ValueError, match="tuned for arch"):
+        tp.patched_config(other)
+
+
+def test_mixed_assignment_builds_per_kind_plans():
+    """The greedy selector's mixed-assignment path: a MoE model with
+    different knobs per site kind builds, and each kind's tables carry
+    its own widths."""
+    cfg = smoke_config(get_config("deepseek-moe-16b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cap = capture_model(
+        params, cfg, synthetic_batches(cfg, 1, batch_size=2, seq_len=8,
+                                       seed=1))
+    assignment = {None: SweepPoint(w_in=8),
+                  "expert": SweepPoint(w_in=8, w_out=6),
+                  "mlp": SweepPoint(w_in=8, w_out=8, coverage=0.999)}
+    plans = build_point_plans(cfg, cap, assignment, w_in=8)
+    tabs = plans.tables_for_model()["sites"]
+    assert tabs["expert"]["stacked"]["meta"]["w_out"] == 6
+    assert tabs["mlp"]["stacked"]["meta"]["w_out"] == 8
