@@ -20,6 +20,23 @@ except ImportError:  # jax <= 0.5: experimental module, check_rep / auto
     _NEW_API = False
 
 
+def scan_safe_in_manual(mesh, manual_axes) -> bool:
+    """Whether ``lax.scan`` may stay inside a shard_map-manual region.
+
+    XLA's SPMD partitioner check-fails (``sharding.IsManualSubgroup()``)
+    on control flow nested in a *partially*-manual computation — some
+    mesh axes manual, the rest GSPMD-auto — on every JAX release this
+    repo supports, so those regions must python-unroll their layer
+    stacks.  A *fully*-manual region (every mesh axis manual, the
+    top-level serving shard_map) hands XLA a plain per-shard program and
+    scan partitions trivially; with no mesh on record we cannot prove
+    full coverage and conservatively report unsafe.
+    """
+    if mesh is None:
+        return False
+    return frozenset(manual_axes) >= frozenset(mesh.axis_names)
+
+
 def shard_map(
     f,
     *,

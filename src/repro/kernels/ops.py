@@ -187,6 +187,24 @@ def lut_act_stacked(
     interpret = resolve_interpret(interpret)
     meta = stacked["meta"]
     a = stacked["arrays"]
+    # Layer-sharded slabs (placement policy, serve/sharded.py) cannot feed
+    # the kernel directly — pallas_call wants the whole stack resident.
+    # Under a GSPMD mesh, constrain the table operands back to replicated
+    # so the partitioner inserts one all-gather at the point of use (the
+    # pallas-backend analogue of the gather backend's jnp.take
+    # gather-at-use).  Manual regions skip this: shard_map serving
+    # replicates table slabs by construction.
+    from repro.nn.sharding import current_manual_axes, current_mesh
+
+    mesh = current_mesh()
+    if mesh is not None and not current_manual_axes():
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        rep = NamedSharding(mesh, PartitionSpec())
+        constrain = lambda t: jax.lax.with_sharding_constraint(t, rep)
+        a = {k: constrain(v) for k, v in a.items()}
+        stacked = dict(stacked, meta_i=constrain(stacked["meta_i"]),
+                       meta_f=constrain(stacked["meta_f"]))
     shape = x.shape
     block_rows = _pick_block_rows(int(np.prod(shape)))
     x2d, n = _to_2d(x, block_rows)

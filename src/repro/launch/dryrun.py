@@ -73,12 +73,12 @@ def _prefill_lowered(cfg, mesh, seq, batch):
     return jax.jit(fn, in_shardings=(pspecs, bsh)).lower(params, specs)
 
 
-def _decode_lowered(cfg, mesh, seq, batch):
+def _decode_lowered(cfg, mesh, seq, batch, lut_tables=None):
     from repro.nn.transformer import init_params
     from repro.serve.kvcache import cache_specs
     from repro.train.step import make_serve_step
 
-    step, jit_step = make_serve_step(cfg, mesh)
+    step, jit_step = make_serve_step(cfg, mesh, lut_tables=lut_tables)
     params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
     cache = cache_specs(cfg, batch, seq)
     tokens = jax.ShapeDtypeStruct((batch, 1), np.int32)
@@ -86,8 +86,24 @@ def _decode_lowered(cfg, mesh, seq, batch):
     return jit_step(batch, seq).lower(params, cache, tokens, pos)
 
 
+def _lut_plan(cfg, mesh):
+    """Shared-calibration serving plans for LUT-aware decode dry-runs:
+    returns ``(patched_cfg, lut_tables, placement_report)`` where the
+    report prices the tables *per device* on this mesh (replicated slabs
+    cost full bytes everywhere; layer-sharded stacks cost 1/|data| each)."""
+    from repro.serve import build_serving_plans
+    from repro.serve.sharded import plan_placement_report
+
+    calib = np.random.default_rng(0).normal(size=100000) * 3
+    plans = build_serving_plans(cfg, calib)
+    tables = plans.tables_for_model(mesh=False)
+    return (plans.patched_config(cfg), tables,
+            plan_placement_report(tables, mesh))
+
+
 def dryrun_cell(arch: str, shape: str, multi_pod: bool,
-                tcfg=None, quiet: bool = False) -> dict:
+                tcfg=None, quiet: bool = False,
+                lut_act: bool = False) -> dict:
     cfg = get_config(arch)
     info = SHAPES[shape]
     ok, why = cell_supported(cfg, shape)
@@ -103,13 +119,23 @@ def dryrun_cell(arch: str, shape: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     try:
+        lut_tables = None
+        if lut_act and info["kind"] == "decode":
+            cfg, lut_tables, report = _lut_plan(cfg, mesh)
+            result["lut_tables"] = report
+            if not quiet:
+                print(f"  lut tables: {report['replicated_bytes']} B "
+                      f"replicated + {report['sharded_bytes']} B "
+                      f"layer-sharded = {report['per_device_bytes']} B "
+                      f"per device")
         if info["kind"] == "train":
             lowered = _train_lowered(cfg, mesh, info["seq"], info["batch"],
                                      tcfg)
         elif info["kind"] == "prefill":
             lowered = _prefill_lowered(cfg, mesh, info["seq"], info["batch"])
         else:
-            lowered = _decode_lowered(cfg, mesh, info["seq"], info["batch"])
+            lowered = _decode_lowered(cfg, mesh, info["seq"], info["batch"],
+                                      lut_tables=lut_tables)
         t_lower = time.time() - t0
         t0 = time.time()
         compiled = lowered.compile()
@@ -156,6 +182,10 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--lut-act", action="store_true",
+                    help="decode cells serve shared-calibration LUT plans "
+                         "and report per-device table bytes "
+                         "(replicated vs layer-sharded)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -168,6 +198,8 @@ def main() -> None:
         for shape in shapes:
             for mp in meshes:
                 tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+                if args.lut_act:
+                    tag += "__lut"
                 path = os.path.join(args.out, tag + ".json")
                 if os.path.exists(path):
                     with open(path) as f:
@@ -177,7 +209,7 @@ def main() -> None:
                         cells.append(prev)
                         continue
                 print(f"[dryrun] {tag}")
-                res = dryrun_cell(arch, shape, mp)
+                res = dryrun_cell(arch, shape, mp, lut_act=args.lut_act)
                 cells.append(res)
                 with open(path, "w") as f:
                     json.dump(res, f, indent=1)

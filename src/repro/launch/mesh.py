@@ -14,5 +14,35 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(dp: int = 1, tp: int = 1):
-    """Small mesh over host devices (tests / examples)."""
+    """Small ``(data, model)`` mesh over host devices (tests / examples).
+
+    Validates the request against the visible device count up front — the
+    error out of ``jax.make_mesh`` for an oversubscribed mesh is an opaque
+    reshape failure.
+    """
+    if dp < 1 or tp < 1:
+        raise ValueError(
+            f"make_host_mesh: dp and tp must be >= 1, got dp={dp} tp={tp}")
+    n = len(jax.devices())
+    if dp * tp > n:
+        raise ValueError(
+            f"make_host_mesh: mesh {dp}x{tp} needs {dp * tp} devices but "
+            f"only {n} are visible — set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={dp * tp} "
+            f"before the first jax import (or shrink the mesh)")
     return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def mesh_or_none(dp: int = 1, tp: int = 1):
+    """``make_host_mesh`` that degrades gracefully instead of raising.
+
+    Returns ``None`` for the trivial 1x1 request (no mesh machinery
+    needed) and for requests the visible device count cannot satisfy —
+    serve paths then fall back to the plain single-device program, which
+    is bit-identical to the sharded one by the mesh-suite contract.
+    """
+    if dp * tp <= 1:
+        return None
+    if dp < 1 or tp < 1 or dp * tp > len(jax.devices()):
+        return None
+    return make_host_mesh(dp, tp)

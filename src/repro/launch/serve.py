@@ -46,9 +46,10 @@ from repro.calib import (
     synthetic_batches,
 )
 from repro.configs import ARCH_NAMES, get_config, smoke_config
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import mesh_or_none
 from repro.nn import init_params
 from repro.serve import (
+    ShardedServe,
     build_serving_plans,
     decode_step,
     init_cache,
@@ -86,8 +87,36 @@ def main() -> None:
                     help="tuned-plan artifact (.npz) from launch/tune: "
                          "serve its plans directly, skipping capture and "
                          "compression (implies --lut-act)")
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="serve on a (data, model) host mesh, e.g. 2,2 — "
+                         "data-parallel batch x bit-exact tensor-parallel "
+                         "model with placed LUT tables; needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=N set before launch; degrades to single-device "
+                         "when the mesh cannot be built")
+    ap.add_argument("--mesh-mode", choices=("gspmd", "shard_map"),
+                    default="gspmd",
+                    help="sharded program form: gspmd partitioner "
+                         "(default; layer-sharded table slabs) or a "
+                         "fully-manual top-level shard_map (replicated "
+                         "tables, lax.scan kept inside the region)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        try:
+            dp, tp = (int(v) for v in args.mesh.split(","))
+        except ValueError:
+            ap.error(f"--mesh expects DP,TP (e.g. 2,2), got {args.mesh!r}")
+        mesh = mesh_or_none(dp, tp)
+        if mesh is None and dp * tp > 1:
+            print(f"mesh {dp}x{tp} unavailable "
+                  f"({len(jax.devices())} visible devices) — "
+                  f"serving single-device (bit-identical by contract)")
+        if mesh is not None and args.kv_int8 and args.mesh_mode == "shard_map":
+            ap.error("--kv-int8 prefill replay is served in gspmd mesh "
+                     "mode only (drop --kv-int8 or use --mesh-mode gspmd)")
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -150,10 +179,25 @@ def main() -> None:
                   f"({tables_nbytes(lut_tables)} table bytes)")
 
     max_seq = t + args.new_tokens
+    serve = None
+    if mesh is not None:
+        serve = ShardedServe(cfg, mesh, lut_tables, mode=args.mesh_mode)
+        params = serve.place_params(params)
+        batch = serve.place_batch(batch)
+        lut_tables = serve.tables
+        print(f"mesh {dict(mesh.shape)} mode={args.mesh_mode}; "
+              f"table placement:")
+        for site, info in serve.placement.items():
+            print(f"  {site}: {info['placement']} "
+                  f"({info['bytes']} B, {info['per_device_bytes']} B/dev)")
+
     t0 = time.time()
-    logits, cache = jax.jit(
-        lambda p, x: prefill(p, cfg, x, max_seq=max_seq,
-                             lut_tables=lut_tables))(params, batch)
+    if serve is not None:
+        logits, cache = serve.prefill(params, batch, max_seq)
+    else:
+        logits, cache = jax.jit(
+            lambda p, x: prefill(p, cfg, x, max_seq=max_seq,
+                                 lut_tables=lut_tables))(params, batch)
     print(f"prefill {b}x{t}: {time.time() - t0:.2f}s")
 
     if args.kv_int8 and cfg.family in ("dense", "moe", "vlm"):
@@ -161,12 +205,19 @@ def main() -> None:
         # one compiled replay scan instead of t python-level step calls
         cache_q = init_cache(cfg, b, max_seq, kv_dtype="int8")
         print("int8 KV cache enabled (decode writes quantized entries)")
-        logits, cache = jax.jit(lambda p, c, tk: prefill_replay(
-            p, cfg, c, tk, 0, lut_tables=lut_tables))(
-            params, cache_q, batch["tokens"])
+        if serve is not None:
+            cache_q = serve.place_cache(cache_q)
+            logits, cache = serve.replay(params, cache_q, batch["tokens"])
+        else:
+            logits, cache = jax.jit(lambda p, c, tk: prefill_replay(
+                p, cfg, c, tk, 0, lut_tables=lut_tables))(
+                params, cache_q, batch["tokens"])
 
-    step = jax.jit(lambda p, c, tk, pos: decode_step(
-        p, cfg, c, tk, pos, lut_tables=lut_tables))
+    if serve is not None:
+        step = serve.decode
+    else:
+        step = jax.jit(lambda p, c, tk, pos: decode_step(
+            p, cfg, c, tk, pos, lut_tables=lut_tables))
     tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
     outs = []
     t0 = time.time()

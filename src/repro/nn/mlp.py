@@ -174,6 +174,40 @@ def site_tables(lut_tables: dict | None, site: str,
     return entry["layers"][layer]
 
 
+def entry_operands(tab: dict):
+    """Split a resolved site entry into ``(array_operands, rebuild)``.
+
+    ``shard_map`` regions may not close over traced values (the in-scan
+    layer id) and should not close over table slabs whose placement the
+    mesh policy controls — both must ride in as explicit mapped
+    operands.  ``array_operands`` is the pytree of device arrays to pass
+    through the shard_map (layer id included, as int32); ``rebuild``
+    recreates the entry the evaluators consume from that pytree inside
+    the region (the python-scalar meta is closed over — it is static).
+    """
+    if "stacked" in tab:
+        st = tab["stacked"]
+        meta = st["meta"]
+        ops = {"arrays": st["arrays"], "meta_i": st["meta_i"],
+               "meta_f": st["meta_f"],
+               "layer": jnp.asarray(tab["layer"], jnp.int32)}
+
+        def rebuild(ops):
+            return {"stacked": {"meta": meta, "arrays": ops["arrays"],
+                                "meta_i": ops["meta_i"],
+                                "meta_f": ops["meta_f"]},
+                    "layer": ops["layer"]}
+
+        return ops, rebuild
+    meta = tab["meta"]
+    ops = {"arrays": tab["arrays"]}
+
+    def rebuild(ops):
+        return {"meta": meta, "arrays": ops["arrays"]}
+
+    return ops, rebuild
+
+
 def apply_lut_act(x, tab: dict, backend: str = "gather"):
     """Evaluate one compressed-table activation entry on ``x``.
 

@@ -22,7 +22,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 
 from .layers import activation_fn
-from .sharding import DP_AXES, TP_AXIS, current_mesh
+from .sharding import DP_AXES, TP_AXIS, current_manual_axes, current_mesh
 
 
 def _round_up(x: int, m: int) -> int:
@@ -92,11 +92,20 @@ def moe_block(params: dict, x: jax.Array, cfg, shared_mlp=None,
     """(B, T, d) -> ((B, T, d), aux_loss). Uses shard_map EP under a mesh
     with a model axis; plain local compute otherwise.  With serving plans
     carrying an ``"expert"`` site, the per-expert nonlinearity evaluates
-    the ReducedLUT-compressed table for this ``layer`` (arrays are closed
-    over and replicate across the expert-parallel shard_map — they are
-    KB-sized).  make_activation also hooks the expert site into any
+    the ReducedLUT-compressed table for this ``layer`` — the table arrays
+    and the (possibly traced, in-scan) layer id ride into the
+    expert-parallel shard_map as *explicit mapped operands*
+    (:func:`repro.nn.mlp.entry_operands`), replicated across the region,
+    instead of being closed over; only the python-scalar meta stays a
+    closure.  Inside an already-manual region (the top-level serving
+    shard_map, :mod:`repro.serve.sharded`) no nested shard_map may open:
+    expert parallelism then runs inline against the enclosing region's
+    axis bindings.  make_activation also hooks the expert site into any
     active calibration capture."""
-    from .mlp import make_activation
+    from repro.calib import capture as calib_capture
+
+    from .mlp import apply_lut_act, entry_operands, make_activation, \
+        site_tables
 
     b, t, d = x.shape
     m = cfg.moe
@@ -105,6 +114,37 @@ def moe_block(params: dict, x: jax.Array, cfg, shared_mlp=None,
     act_name = "silu"
     act_fn = make_activation(cfg, lut_tables, site="expert",
                              fallback=act_name, layer=layer)
+
+    tab = None
+    backend = "gather"
+    if (cfg.lut_activation and lut_tables is not None
+            and not calib_capture.capture_active()):
+        tab = site_tables(lut_tables, "expert", layer)
+        backend = lut_tables.get("backend", "gather")
+
+    manual = current_manual_axes()
+    if mesh is not None and TP_AXIS in manual:
+        # Inside a manual shard_map over the model axis: operands arrived
+        # as local shards, axis_index/psum bind to the enclosing region.
+        n_tp = mesh.shape[TP_AXIS]
+        e_loc = params["w_in"].shape[0]
+        ep = n_tp > 1 and e_loc * n_tp == m.n_experts
+        capacity = _round_up(
+            max(int(s_local_tokens * m.top_k / m.n_experts
+                    * m.capacity_factor), m.top_k), 8)
+        e0 = jax.lax.axis_index(TP_AXIS) * e_loc if ep else 0
+        y, aux = moe_ffn_local(
+            x.reshape(-1, d), params["router"], params["w_in"],
+            params["w_out"], n_experts=m.n_experts, top_k=m.top_k,
+            capacity=capacity, e0=e0, act_name=act_name, act_fn=act_fn,
+        )
+        if ep:
+            y = jax.lax.psum(y, TP_AXIS)
+            aux = jax.lax.psum(aux, TP_AXIS) / n_tp
+        y = y.reshape(b, t, d)
+        if shared_mlp is not None:
+            y = y + shared_mlp(x)
+        return y, aux
 
     tp = (mesh is not None and TP_AXIS in mesh.axis_names
           and m.n_experts % mesh.shape[TP_AXIS] == 0)
@@ -118,14 +158,18 @@ def moe_block(params: dict, x: jax.Array, cfg, shared_mlp=None,
         capacity = _round_up(
             max(int(s_shard * m.top_k / m.n_experts * m.capacity_factor),
                 m.top_k), 8)
+        tab_ops, rebuild = (entry_operands(tab) if tab is not None
+                            else ({}, None))
 
-        def mapped(xl, router_w, w_in, w_out):
+        def mapped(xl, router_w, w_in, w_out, tab_ops):
             e_loc = w_in.shape[0]
             e0 = jax.lax.axis_index(TP_AXIS) * e_loc
+            act = (act_fn if rebuild is None else
+                   (lambda z: apply_lut_act(z, rebuild(tab_ops), backend)))
             y, aux = moe_ffn_local(
                 xl.reshape(-1, d), router_w, w_in, w_out,
                 n_experts=m.n_experts, top_k=m.top_k, capacity=capacity,
-                e0=e0, act_name=act_name, act_fn=act_fn,
+                e0=e0, act_name=act_name, act_fn=act,
             )
             y = jax.lax.psum(y, TP_AXIS)
             aux = jax.lax.psum(aux, TP_AXIS) / n_tp
@@ -137,10 +181,11 @@ def moe_block(params: dict, x: jax.Array, cfg, shared_mlp=None,
         y, aux = shard_map(
             mapped, mesh=mesh,
             in_specs=(P(dspec, None, None), P(None, None),
-                      P(TP_AXIS, None, None), P(TP_AXIS, None, None)),
+                      P(TP_AXIS, None, None), P(TP_AXIS, None, None),
+                      jax.tree.map(lambda _: P(), tab_ops)),
             out_specs=(P(dspec, None, None), P()),
             check_vma=False,
-        )(x, params["router"], params["w_in"], params["w_out"])
+        )(x, params["router"], params["w_in"], params["w_out"], tab_ops)
     else:
         capacity = _round_up(
             max(int(s_local_tokens * m.top_k / m.n_experts

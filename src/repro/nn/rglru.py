@@ -86,8 +86,11 @@ def recurrent_block(params, x, cfg, state=None):
         jnp.einsum("btd,de->bte", x, params["w_gate"])
     )
     gate = shard(gate, "dp", None, "tp")
-    out = jnp.einsum("bte,ed->btd", h.astype(x.dtype) * gate,
-                     params["w_out"])
+    # constrain the gated recurrence output before the down-projection
+    # (exact_tp: replicated — keeps the w_out contraction unpartitioned,
+    # preserving the sharded-serving bit-identity contract)
+    gh = shard(h.astype(x.dtype) * gate, "dp", None, "tp")
+    out = jnp.einsum("bte,ed->btd", gh, params["w_out"])
     return shard(out, "dp", None, None), {"conv": conv_state, "lru": lru_state}
 
 
@@ -103,5 +106,6 @@ def recurrent_block_step(params, x, cfg, state):
     gate = activation_fn("gelu")(
         jnp.einsum("btd,de->bte", x, params["w_gate"])
     )[:, 0]
-    out = (h.astype(x.dtype) * gate) @ params["w_out"]
+    gh = shard(h.astype(x.dtype) * gate, "dp", "tp")
+    out = gh @ params["w_out"]
     return out[:, None], {"conv": xp[:, -(k - 1):], "lru": lru_state}

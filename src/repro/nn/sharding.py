@@ -52,6 +52,35 @@ def current_manual_axes() -> frozenset:
     return getattr(_STATE, "manual", frozenset())
 
 
+def exact_tp_active() -> bool:
+    return getattr(_STATE, "exact_tp", False)
+
+
+@contextlib.contextmanager
+def exact_tp(on: bool = True):
+    """Bit-exact tensor-parallel serving mode.
+
+    Megatron-style placement shards *contraction* dims ("tp" on wo /
+    w_out / w_ffn_v), so GSPMD partitions the row-parallel matmuls and
+    the partial-sum all-reduce changes float summation order — served
+    logits stop being bit-identical to the single-device program.  Under
+    this context ``shard()`` resolves the "tp"/"sp" logical axes to
+    *replicated* instead: column-parallel weights still compute their
+    output shards locally (exact), and the constraint right after each
+    column-parallel matmul becomes the all-gather that re-replicates the
+    activation before any contraction over a model-dim can be
+    partitioned.  No floating-point reduction is ever split across the
+    model axis, which is the bit-identity contract the mesh equivalence
+    suite (tests/mesh/) asserts.
+    """
+    prev = exact_tp_active()
+    _STATE.exact_tp = on
+    try:
+        yield
+    finally:
+        _STATE.exact_tp = prev
+
+
 @contextlib.contextmanager
 def manual_axes(axes):
     """Mark mesh axes as shard_map-manual for the enclosed trace.
@@ -69,19 +98,36 @@ def manual_axes(axes):
         _STATE.manual = prev
 
 
+# layer_scan bookkeeping, read by the mesh suite's compile-count check:
+# every python-unroll fallback increments "unrolled", every real
+# ``lax.scan`` increments "scan".
+SCAN_STATS = {"scan": 0, "unrolled": 0}
+
+
 def layer_scan(body, carry, xs):
-    """``jax.lax.scan`` that unrolls inside shard_map-manual regions.
+    """``jax.lax.scan`` that unrolls inside *partially*-manual regions.
 
     XLA's SPMD partitioner (through at least jax 0.4.x) check-fails on
     control-flow ops nested in a partially-manual computation — e.g. the
     grad-compress path, manual over dp with tp left GSPMD-auto.  A python
-    unroll emits straight-line HLO that partitions fine; outside a manual
-    region this is exactly ``jax.lax.scan``.
+    unroll emits straight-line HLO that partitions fine.
+
+    A *fully*-manual region (a top-level ``shard_map`` manual over every
+    mesh axis — the sharded-serving mode in :mod:`repro.serve.sharded`)
+    presents XLA with a plain per-shard program, where ``lax.scan``
+    partitions trivially, so the scan is kept and the O(L) unroll is not
+    taken (asserted by tests/mesh/).  Outside any manual region this is
+    exactly ``jax.lax.scan``.
     """
-    if not current_manual_axes():
+    from repro.compat import scan_safe_in_manual
+
+    manual = current_manual_axes()
+    if not manual or scan_safe_in_manual(current_mesh(), manual):
+        SCAN_STATS["scan"] += 1
         return jax.lax.scan(body, carry, xs)
     import jax.numpy as jnp
 
+    SCAN_STATS["unrolled"] += 1
     length = jax.tree.leaves(xs)[0].shape[0]
     ys = []
     for i in range(length):
@@ -137,14 +183,19 @@ def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
     if mesh is None:
         return x
     manual = current_manual_axes()
+    exact = exact_tp_active()
     resolved = []
     for dim, a in zip(x.shape, logical_axes):
-        r = resolve_axis(a, mesh)
+        r = None if (exact and a in ("tp", "sp")) else resolve_axis(a, mesh)
         if isinstance(r, tuple):
             r = tuple(ax for ax in r if ax not in manual) or None
         elif r in manual:
             r = None
         resolved.append(r if _divisible(dim, mesh, r) else None)
+    if manual and all(r is None for r in resolved):
+        # Inside a manual region an all-replicated constraint is both
+        # useless and (fully-manual shard_map) invalid — skip it.
+        return x
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*resolved))
     )

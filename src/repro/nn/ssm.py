@@ -173,7 +173,10 @@ def rwkv_time_mix(params, x, cfg, x_last=None, wkv_state=None,
 
     y = rms_norm(y.reshape(b * t, h, n), params["ln_x"].reshape(h, n),
                  eps=1e-5).reshape(b, t, d)
-    out = jnp.einsum("btd,de->bte", y.astype(x.dtype) * g, params["w_o"])
+    # constrain before the output projection (exact_tp: replicated, so the
+    # w_o contraction never psums a partitioned product — bit-identity)
+    gy = shard(y.astype(x.dtype) * g, "dp", None, "tp")
+    out = jnp.einsum("btd,de->bte", gy, params["w_o"])
     return shard(out, "dp", None, None), (x[:, -1:], wkv_state)
 
 

@@ -251,6 +251,11 @@ def _attn_apply(p, x, cfg, *, causal=True, window=None, pos_offset=0,
     v = shard(v, "dp", None, None, None)
     out = mha(q, k, v, causal=causal, window=window, q_offset=pos_offset,
               chunk_q=chunk_q)
+    # constrain BEFORE the output projection: under exact_tp this resolves
+    # to replicated, so the wo contraction is never partitioned over heads
+    # (a partitioned contraction psums partial products and breaks the
+    # sharded-serving bit-identity contract)
+    out = shard(out, "dp", None, "tp", None)
     out = jnp.einsum("btq,qd->btd", out.reshape(b, t, cfg.q_dim), p["wo"])
     return shard(out, "dp", "sp", None), (k, v)
 
@@ -296,6 +301,7 @@ def _decode_attn(p, x, cfg, k_cache, v_cache, pos, *, window=None,
             v_scale, vs.astype(v_scale.dtype), (0, pos, 0))
         out = decode_attend(q, k_cache, v_cache, pos,
                             k_scale=k_scale, v_scale=v_scale)
+        out = shard(out, "dp", None, "tp", None)
         out = jnp.einsum("btq,qd->btd", out.reshape(b, 1, cfg.q_dim),
                          p["wo"])
         return out, (k_cache, k_scale), (v_cache, v_scale)
@@ -315,6 +321,7 @@ def _decode_attn(p, x, cfg, k_cache, v_cache, pos, *, window=None,
         slots = jnp.arange(w)
         stored = pos - ((pos - slots) % w)
         out = ring_decode_attend(q, k_cache, v_cache, stored, pos, window)
+    out = shard(out, "dp", None, "tp", None)
     out = jnp.einsum("btq,qd->btd", out.reshape(b, 1, cfg.q_dim), p["wo"])
     return out, k_cache, v_cache
 
@@ -597,6 +604,7 @@ def encdec_forward(params, cfg, tokens, enc_out, collect_kv=False,
         ev = jnp.einsum("bsd,dq->bsq", enc_out, p["xwv"]).reshape(
             b, -1, cfg.n_kv_heads, cfg.d_head)
         h = mha(q, ek, ev, causal=False)
+        h = shard(h, "dp", None, "tp", None)
         h = jnp.einsum("btq,qd->btd", h.reshape(b, t, cfg.q_dim), p["xwo"])
         x = x + h
         h = mlp_block(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg,

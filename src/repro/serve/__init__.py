@@ -10,10 +10,20 @@ from .plans import (
     build_serving_plans,
     verify_backend_equivalence,
 )
+from .sharded import (
+    PlacementPolicy,
+    ShardedServe,
+    place_tables,
+    plan_placement_report,
+    serve_cache_shardings,
+    serve_param_shardings,
+)
 from .stacked import StackedPlanArrays, tables_nbytes
 
 __all__ = ["prefill", "decode_step", "prefill_replay", "cache_specs",
            "init_cache", "cache_shardings", "ContinuousBatcher", "Request",
            "ServingPlans", "SitePlan", "StackedPlanArrays",
            "activation_sites", "build_serving_plans", "tables_nbytes",
-           "verify_backend_equivalence"]
+           "verify_backend_equivalence", "ShardedServe", "PlacementPolicy",
+           "place_tables", "plan_placement_report", "serve_param_shardings",
+           "serve_cache_shardings"]

@@ -48,36 +48,57 @@ class ContinuousBatcher:
     def __init__(self, cfg: ArchConfig, params, batch_size: int,
                  max_seq: int, eos_token: int = 0,
                  kv_dtype: str = "bfloat16", lut_tables: dict | None = None,
-                 prefill: str = "step"):
+                 prefill: str = "step", mesh=None):
         if prefill not in ("step", "replay"):
             raise ValueError(
                 f"prefill must be 'step' or 'replay', got {prefill!r}")
         self.cfg = cfg
-        self.params = params
         self.b = batch_size
         self.max_seq = max_seq
         self.eos = eos_token
-        self.lut_tables = lut_tables
         self.prefill = prefill
+        self.mesh = mesh
         self.cache = init_cache(cfg, batch_size, max_seq, kv_dtype)
+        if mesh is not None:
+            # Sharded serving: data-parallel batch pool x (bit-exact)
+            # tensor-parallel model, tables placed per the mesh policy.
+            # The scheduler logic above this line is unchanged — slot
+            # snapshots/restores run as eager ops on committed arrays and
+            # keep their placement.
+            from .sharded import ShardedServe
+
+            self._serve = ShardedServe(cfg, mesh, lut_tables,
+                                       kv_dtype=kv_dtype)
+            self.lut_tables = self._serve.tables
+            self.params = self._serve.place_params(params)
+            self.cache = self._serve.place_cache(self.cache)
+            self._replay = lambda p, c, toks: self._serve.replay(
+                p, c, toks, 0)
+            self._step = self._serve.decode
+        else:
+            self._serve = None
+            self.lut_tables = lut_tables
+            self.params = params
+            # one wrapper; jit shape-specializes per prompt length
+            # internally
+            self._replay = jax.jit(lambda p, c, toks: prefill_replay(
+                p, cfg, c, toks, 0, lut_tables=lut_tables))
+            # per-slot positions differ => decode_step takes a (B,) pos
+            # vector?  the shared step uses a scalar pos; we instead track
+            # per-slot pos and run the step with per-slot token + per-slot
+            # position by vectorizing pos into the cache write via one
+            # step per unique pos group — offline simplification: slots
+            # advance in lock-step per step call with their own positions
+            # through masked writes.
+            self._step = jax.jit(
+                lambda p, c, t, pos: decode_step(p, cfg, c, t, pos,
+                                                 lut_tables=lut_tables))
         self.slots = [_Slot() for _ in range(batch_size)]
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
         self.steps = 0
         self.active_slot_steps = 0
         self.replayed_tokens = 0
-        # one wrapper; jit shape-specializes per prompt length internally
-        self._replay = jax.jit(lambda p, c, toks: prefill_replay(
-            p, cfg, c, toks, 0, lut_tables=lut_tables))
-        # per-slot positions differ => decode_step takes a (B,) pos vector?
-        # the shared step uses a scalar pos; we instead track per-slot pos
-        # and run the step with per-slot token + per-slot position by
-        # vectorizing pos into the cache write via one step per unique pos
-        # group — offline simplification: slots advance in lock-step per
-        # step call with their own positions through masked writes.
-        self._step = jax.jit(
-            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos,
-                                             lut_tables=lut_tables))
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)

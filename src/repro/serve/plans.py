@@ -175,17 +175,24 @@ class ServingPlans:
     backend: str = "gather"
     calib: str = "shared"        # "shared" | "per_site"
     plan_exec: str = "stacked"   # "stacked" | "unrolled" (per-layer plans)
+    mesh: object | None = None   # default placement mesh (serve.sharded)
 
     _FORMS = {"stacked": "stacked", "unrolled": "layers"}
 
     def tables_for_model(self, backend: str | None = None,
-                         plan_exec: str | None = None) -> dict:
+                         plan_exec: str | None = None, mesh=None,
+                         policy=None) -> dict:
         """The ``lut_tables`` dict threaded through decode/prefill/batcher.
 
         ``plan_exec`` picks the per-layer execution form: ``"stacked"``
         (default — ``(L, …)`` padded stacks, layer stacks keep
         ``lax.scan``) or ``"unrolled"`` (one entry per layer, stacks
         python-unroll).  Shared plans are unaffected.
+
+        With a ``mesh`` (argument, or the one the plans were built
+        against), the arrays come back *placed*: committed per the
+        :mod:`repro.serve.sharded` policy — small tables replicated,
+        large stacked slabs layer-sharded along the data axis.
         """
         exec_ = plan_exec or self.plan_exec
         if exec_ not in self._FORMS:
@@ -193,11 +200,17 @@ class ServingPlans:
                 f"tables_for_model: unknown plan_exec {exec_!r} "
                 f"(expected 'stacked' or 'unrolled')")
         form = self._FORMS[exec_]
-        return {
+        tables = {
             "backend": backend or self.backend,
             "sites": {k: sp.entry(form=form)
                       for k, sp in self.sites.items()},
         }
+        mesh = mesh if mesh is not None else self.mesh
+        if mesh:   # pass mesh=False to force unplaced single-device arrays
+            from .sharded import place_tables
+
+            tables, _ = place_tables(tables, mesh, policy)
+        return tables
 
     def table_bytes(self, plan_exec: str | None = None) -> int:
         """Device bytes of the serving tables in one execution form —
@@ -295,6 +308,7 @@ def build_serving_plans(
     backend: str = "gather",
     plan_exec: str = "stacked",
     plan_cache: PlanCache | None = None,
+    mesh=None,
     verbose: bool = False,
 ) -> ServingPlans:
     """Compress every activation site of ``cfg`` into serving tables.
@@ -314,7 +328,9 @@ def build_serving_plans(
     ``"ffn"``) to per-site output widths — the tuned-plan width override
     (:mod:`repro.tune`) — on the per-site calibration path only.
     ``plan_cache`` (a :class:`~repro.core.PlanCache`) shares compression
-    results across repeated builds (the autotune sweep).
+    results across repeated builds (the autotune sweep).  ``mesh`` binds
+    the plans to a placement mesh: every ``tables_for_model`` call then
+    returns committed, policy-placed arrays (:mod:`repro.serve.sharded`).
     """
     per_site = isinstance(calibration, CalibrationSet)
     if per_site:
@@ -367,7 +383,36 @@ def build_serving_plans(
                                per_layer=layered)
     return ServingPlans(arch=cfg.name, family=cfg.family, report=report,
                         sites=sites, backend=backend, plan_exec=plan_exec,
+                        mesh=mesh,
                         calib="per_site" if per_site else "shared")
+
+
+def _greedy_decode(cfg, params, batch, t, n_new, max_seq, tables,
+                   serve=None):
+    """(tokens per step, per-step logits) for one backend/tables config.
+
+    With ``serve`` (a :class:`~repro.serve.sharded.ShardedServe`) the
+    sharded jitted steps run; otherwise the plain single-device program.
+    """
+    from .decode import decode_step, prefill
+
+    if serve is not None:
+        lg, cache = serve.prefill(params, batch, max_seq)
+        step = lambda p, c, tk, pos: serve.decode(p, c, tk, pos)
+    else:
+        lg, cache = jax.jit(
+            lambda p, x: prefill(p, cfg, x, max_seq=max_seq,
+                                 lut_tables=tables))(params, batch)
+        step = jax.jit(lambda p, c, tk, pos: decode_step(
+            p, cfg, c, tk, pos, lut_tables=tables))
+    tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+    toks, logits = [], [np.asarray(lg[:, -1])]
+    for i in range(n_new):
+        toks.append(np.asarray(tok)[:, 0].tolist())
+        lg, cache = step(params, cache, tok, jnp.asarray(t + i))
+        logits.append(np.asarray(lg[:, -1]))
+        tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+    return toks, logits
 
 
 def verify_backend_equivalence(
@@ -378,6 +423,8 @@ def verify_backend_equivalence(
     n_new: int,
     max_seq: int | None = None,
     plan_exec: str | None = None,
+    mesh=None,
+    table_overrides: dict | None = None,
 ) -> list[list[int]]:
     """Decode ``n_new`` greedy tokens with the gather backend and the fused
     Pallas backend and assert they bit-match token-for-token.
@@ -386,13 +433,29 @@ def verify_backend_equivalence(
     float dequantization expression — per layer, when the plans are
     per-site, in whichever execution form ``plans.plan_exec`` (or the
     ``plan_exec`` override) selects — so the served logits, and therefore
-    every sampled token, must agree exactly.  ``prompt`` may be a full batch dict for families whose
-    prefill needs extra inputs (vlm patches, encdec frames).  Returns the
-    (B, n_new) token lists on success; raises ``AssertionError`` on the
-    first diverging token.
-    """
-    from .decode import decode_step, prefill
+    every sampled token, must agree exactly.  ``prompt`` may be a full
+    batch dict for families whose prefill needs extra inputs (vlm
+    patches, encdec frames).
 
+    With ``mesh``, each backend *additionally* runs through the sharded
+    serving path (:class:`~repro.serve.sharded.ShardedServe`, policy-
+    placed tables) and its greedy tokens are asserted **bit-identical**
+    to that backend's single-device reference — comparing against the
+    unsharded program (not merely the two sharded backends against each
+    other) is what catches a mis-replicated table slab.  Per-step logits
+    are also asserted bit-identical whenever the data axis leaves at
+    least two examples per device; a one-example shard computes at
+    different array shapes, where XLA may choose a scalar instead of a
+    vectorized transcendental code path (an ulp-level reassociation the
+    serving layer cannot forbid), so those cells assert a tight absolute
+    tolerance instead — tokens stay hard-asserted everywhere.
+    ``table_overrides`` maps a backend name to a pre-placed
+    ``lut_tables`` dict used for its sharded run only (the mesh suite's
+    deliberate-corruption negative test).
+
+    Returns the (B, n_new) token lists on success; raises
+    ``AssertionError`` on the first divergence.
+    """
     cfg = plans.patched_config(cfg)
     if isinstance(prompt, dict):
         batch = {k: jnp.asarray(v) for k, v in prompt.items()}
@@ -405,20 +468,42 @@ def verify_backend_equivalence(
     outs: dict[str, list[list[int]]] = {}
     for backend in ("gather", "pallas"):
         tables = plans.tables_for_model(backend=backend,
-                                        plan_exec=plan_exec)
-        lg, cache = jax.jit(
-            lambda p, x: prefill(p, cfg, x, max_seq=max_seq,
-                                 lut_tables=tables))(params, batch)
-        step = jax.jit(lambda p, c, tk, pos: decode_step(
-            p, cfg, c, tk, pos, lut_tables=tables))
-        tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
-        toks = []
-        for i in range(n_new):
-            toks.append(np.asarray(tok)[:, 0].tolist())
-            lg, cache = step(params, cache, tok, jnp.asarray(t + i))
-            tok = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+                                        plan_exec=plan_exec, mesh=False)
+        toks, logits = _greedy_decode(cfg, params, batch, t, n_new,
+                                      max_seq, tables)
         outs[backend] = [[toks[i][r] for i in range(n_new)]
                          for r in range(b)]
+        if mesh is None:
+            continue
+        from .sharded import ShardedServe
+
+        s_tables = (table_overrides or {}).get(backend)
+        if s_tables is None:
+            s_tables = plans.tables_for_model(backend=backend,
+                                              plan_exec=plan_exec,
+                                              mesh=mesh)
+        serve = ShardedServe(cfg, mesh, s_tables)
+        s_toks, s_logits = _greedy_decode(
+            cfg, serve.place_params(params), serve.place_batch(batch), t,
+            n_new, max_seq, None, serve=serve)
+        assert s_toks == toks, (
+            f"sharded {backend} decode diverges from the single-device "
+            f"reference: {s_toks} != {toks}")
+        n_data = 1
+        for ax in ("pod", "data"):
+            n_data *= int(mesh.shape.get(ax, 1))
+        bits = n_data == 1 or (b % n_data == 0 and b // n_data >= 2)
+        for i, (ref, got) in enumerate(zip(logits, s_logits)):
+            if bits:
+                assert np.array_equal(ref, got), (
+                    f"sharded {backend} logits not bit-identical to the "
+                    f"single-device reference at step {i} "
+                    f"(max |diff| {np.max(np.abs(ref - got))})")
+            else:
+                assert np.allclose(ref, got, rtol=0, atol=1e-4), (
+                    f"sharded {backend} logits diverge from the "
+                    f"single-device reference at step {i} beyond ulp "
+                    f"tolerance (max |diff| {np.max(np.abs(ref - got))})")
     for r, (a, bb) in enumerate(zip(outs["gather"], outs["pallas"])):
         assert a == bb, (
             f"backend divergence on request {r}: gather={a} pallas={bb}")

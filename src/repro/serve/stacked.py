@@ -126,6 +126,32 @@ class StackedPlanArrays:
                        for c in COMPONENTS},
         }
 
+    def split_layers(self, sizes: tuple[int, ...]) -> list:
+        """Re-chunk the stack into contiguous layer groups (the shape a
+        layer-sharding placement hands each device): one
+        ``StackedPlanArrays`` per group, each re-padded to its *local*
+        maximum — exactly what a shard materializes.  ``sizes`` must sum
+        to ``n_layers``."""
+        if sum(sizes) != self.n_layers or any(s <= 0 for s in sizes):
+            raise ValueError(
+                f"split_layers: sizes {sizes} must be positive and sum to "
+                f"n_layers={self.n_layers}")
+        parts, start = [], 0
+        for s in sizes:
+            parts.append(StackedPlanArrays.from_entries(
+                [self.layer_entry(i) for i in range(start, start + s)]))
+            start += s
+        return parts
+
+    @staticmethod
+    def concat_layers(parts: list) -> "StackedPlanArrays":
+        """Inverse of :meth:`split_layers`: restack the chunks (global
+        re-pad) — the ``lens``/``metas`` round-trip is asserted by the
+        re-chunk property test in tests/test_stacked.py."""
+        entries = [p.layer_entry(i) for p in parts
+                   for i in range(p.n_layers)]
+        return StackedPlanArrays.from_entries(entries)
+
     # -- accounting --------------------------------------------------------
     @property
     def nbytes(self) -> int:

@@ -1,0 +1,377 @@
+"""Mesh-suite worker: one scenario per process, 8 forced host devices.
+
+Run as ``python tests/mesh/_worker.py <scenario> '<json kwargs>'`` with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in the environment
+(the conftest's ``mesh_run`` fixture does this).  The last stdout line is
+a JSON verdict: ``{"ok": true, ...}`` or ``{"ok": false, "error", "trace"}``.
+
+The flag must be set before the first jax import, so this file asserts it
+rather than setting it — a worker launched without it would silently test
+the single-device degenerate case only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import tempfile
+import traceback
+
+assert "--xla_force_host_platform_device_count" in os.environ.get(
+    "XLA_FLAGS", ""), (
+    "mesh worker needs XLA_FLAGS=--xla_force_host_platform_device_count=N "
+    "set before the first jax import (use the mesh_run fixture)")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.calib import (
+    calibration_from_capture,
+    capture_model,
+    model_batch,
+    synthetic_batches,
+)
+from repro.configs import get_config, smoke_config
+from repro.launch.mesh import make_host_mesh, mesh_or_none
+from repro.nn import init_params
+from repro.serve import build_serving_plans, verify_backend_equivalence
+
+ARCHS = ("qwen3-0.6b", "deepseek-moe-16b", "phi-3-vision-4.2b",
+         "rwkv6-3b", "recurrentgemma-9b", "whisper-small")
+
+
+def _setup(arch: str, *, per_site: bool = False, batch: int = 4,
+           seq: int = 8, seed: int = 0):
+    """(cfg, params, plans, batch) — float32 smoke model + serving plans.
+
+    float32 keeps the bit-identity contract checkable end to end: the
+    sharded/unsharded comparison happens on served logits, and bf16
+    rounding would mask exactly the ulp-level drift the suite hunts.
+    """
+    rng = np.random.default_rng(seed)
+    cfg = dataclasses.replace(smoke_config(get_config(arch)),
+                              dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    if per_site:
+        cap = capture_model(
+            params, cfg,
+            synthetic_batches(cfg, 2, batch_size=2, seq_len=seq, seed=1))
+        calib = calibration_from_capture(cap)
+    else:
+        calib = rng.normal(size=20000) * 3
+    plans = build_serving_plans(cfg, calib)
+    cfg = plans.patched_config(cfg)
+    batch_d = model_batch(cfg, rng, batch, seq)
+    return cfg, params, plans, batch_d
+
+
+# =========================================================================
+# scenarios
+# =========================================================================
+def scenario_family(arch: str, meshes=None, batch: int = 4, n_new: int = 3):
+    """Sharded == single-device, per mesh shape x both table backends.
+
+    ``verify_backend_equivalence(mesh=...)`` does the heavy lifting: for
+    every backend it decodes the single-device reference, re-runs through
+    :class:`ShardedServe` with policy-placed tables, and hard-asserts the
+    greedy tokens bit-identical (logits too, wherever the data axis
+    leaves >= 2 examples per device).
+    """
+    meshes = meshes or [[1, 1], [2, 1], [1, 2], [2, 2], [4, 2]]
+    cfg, params, plans, batch_d = _setup(arch, batch=batch)
+    toks_by_mesh = {}
+    for dp, tp in meshes:
+        mesh = make_host_mesh(dp, tp)
+        toks = verify_backend_equivalence(cfg, params, plans, batch_d,
+                                          n_new=n_new, mesh=mesh)
+        toks_by_mesh[f"{dp}x{tp}"] = toks
+    # the references agree by construction, so tokens must be
+    # mesh-shape-invariant too
+    first = next(iter(toks_by_mesh.values()))
+    for shape, toks in toks_by_mesh.items():
+        assert toks == first, f"tokens changed with mesh shape {shape}"
+    return {"tokens": first, "meshes": sorted(toks_by_mesh)}
+
+
+def scenario_plan_exec(arch: str = "qwen3-0.6b", n_new: int = 3):
+    """Per-site (per-layer) plans under a mesh, both execution forms:
+    stacked (L, ...) slabs and the python-unrolled per-layer entries."""
+    cfg, params, plans, batch_d = _setup(arch, per_site=True)
+    assert plans.per_layer, "per-site calibration should yield per-layer plans"
+    mesh = make_host_mesh(2, 2)
+    out = {}
+    for plan_exec in ("stacked", "unrolled"):
+        out[plan_exec] = verify_backend_equivalence(
+            cfg, params, plans, batch_d, n_new=n_new, mesh=mesh,
+            plan_exec=plan_exec)
+    assert out["stacked"] == out["unrolled"]
+    return {"tokens": out["stacked"]}
+
+
+def scenario_layer_sharded(arch: str = "qwen3-0.6b", n_new: int = 3):
+    """Force the layer-sharded placement (threshold 0) and assert the
+    gather-at-use path still decodes bit-identically."""
+    from repro.serve import PlacementPolicy, plan_placement_report
+
+    cfg, params, plans, batch_d = _setup(arch, per_site=True)
+    mesh = make_host_mesh(2, 1)   # smoke n_layers (2 or 4) % dp == 0
+    policy = PlacementPolicy(shard_threshold_bytes=0)
+    overrides = {
+        b: plans.tables_for_model(backend=b, mesh=mesh, policy=policy)
+        for b in ("gather", "pallas")}
+    report = plan_placement_report(
+        plans.tables_for_model(mesh=False), mesh, policy)
+    placements = {s: r["placement"] for s, r in report["sites"].items()}
+    assert "layer_sharded" in placements.values(), placements
+    assert report["per_device_bytes"] < (report["replicated_bytes"]
+                                         + report["sharded_bytes"])
+    toks = verify_backend_equivalence(cfg, params, plans, batch_d,
+                                      n_new=n_new, mesh=mesh,
+                                      table_overrides=overrides)
+    return {"tokens": toks, "placements": placements}
+
+
+def scenario_shard_map(arch: str = "qwen3-0.6b", n_new: int = 3):
+    """Fully-manual shard_map serving mode: same greedy tokens as the
+    single-device program, and ``layer_scan`` keeps ``lax.scan`` (no
+    python-unroll) because the region is manual over every mesh axis."""
+    from repro.nn.sharding import SCAN_STATS
+    from repro.serve.plans import _greedy_decode
+    from repro.serve.sharded import ShardedServe
+
+    cfg, params, plans, batch_d = _setup(arch, per_site=True)
+    mesh = make_host_mesh(2, 2)
+    tables = plans.tables_for_model(backend="gather", mesh=False)
+    batch_j = {k: jnp.asarray(v) for k, v in batch_d.items()}
+    b, t = batch_j["tokens"].shape
+    max_seq = t + n_new
+    ref_toks, ref_logits = _greedy_decode(cfg, params, batch_j, t, n_new,
+                                          max_seq, tables)
+
+    before = dict(SCAN_STATS)
+    serve = ShardedServe(cfg, mesh, tables, mode="shard_map")
+    # manual mode replicates every table slab
+    assert all(r["placement"] == "replicated"
+               for r in serve.placement.values()), serve.placement
+    s_toks, s_logits = _greedy_decode(
+        cfg, serve.place_params(params), serve.place_batch(batch_j), t,
+        n_new, max_seq, None, serve=serve)
+    after = dict(SCAN_STATS)
+    assert s_toks == ref_toks, (
+        f"shard_map decode diverges: {s_toks} != {ref_toks}")
+    max_diff = max(float(np.max(np.abs(r - s)))
+                   for r, s in zip(ref_logits, s_logits))
+    # per-device batch is b/dp >= 2 here, but manual mode computes at
+    # per-shard shapes by construction — hold logits to the same ulp
+    # tolerance the gspmd one-example-shard case gets
+    assert max_diff <= 1e-4, f"shard_map logits off by {max_diff}"
+    assert after["unrolled"] == before["unrolled"], (
+        "fully-manual serving must not python-unroll the layer stacks")
+    assert after["scan"] > before["scan"]
+
+    cache = serve.prefill(serve.place_params(params),
+                          serve.place_batch(batch_j), max_seq)[1]
+    tok = jnp.zeros((b, 1), jnp.int32)
+    hlo = serve.lower_decode(serve.place_params(params), cache, tok,
+                             t).as_text()
+    assert "while" in hlo, "manual decode should lower layer stacks to while"
+    return {"tokens": ref_toks, "max_logit_diff": max_diff,
+            "scan_stats": after}
+
+
+def scenario_tuned(arch: str = "qwen3-0.6b", n_new: int = 4):
+    """A saved+reloaded tuned-plan artifact (repro.tune) serves under a
+    mesh bit-identically to its single-device decode."""
+    from repro.serve.plans import _greedy_decode
+    from repro.serve.sharded import ShardedServe
+    from repro.tune import (
+        SweepPoint,
+        autotune,
+        heldout_batches,
+        load_tuned_plan,
+        save_tuned_plan,
+        tuned_plan_from_outcome,
+    )
+
+    rng = np.random.default_rng(0)
+    cfg = dataclasses.replace(smoke_config(get_config(arch)),
+                              dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cap = capture_model(
+        params, cfg, synthetic_batches(cfg, 2, batch_size=2, seq_len=8,
+                                       seed=1))
+    out = autotune(cfg, params, cap,
+                   heldout_batches(cfg, 1, batch_size=2, seq_len=8),
+                   grid=[SweepPoint(), SweepPoint(coverage=0.999)],
+                   budget=1.0)
+    with tempfile.TemporaryDirectory() as td:
+        path = save_tuned_plan(os.path.join(td, "tuned"),
+                               tuned_plan_from_outcome(cfg, out))
+        loaded = load_tuned_plan(path)
+    cfg = loaded.patched_config(cfg)
+    batch_j = {k: jnp.asarray(v)
+               for k, v in model_batch(cfg, rng, 4, 8).items()}
+    b, t = batch_j["tokens"].shape
+    max_seq = t + n_new
+    mesh = make_host_mesh(2, 2)
+    toks_by_backend = {}
+    for backend in ("gather", "pallas"):
+        tables = loaded.tables_for_model(backend=backend)
+        ref_toks, ref_logits = _greedy_decode(cfg, params, batch_j, t,
+                                              n_new, max_seq, tables)
+        serve = ShardedServe(cfg, mesh, tables)
+        s_toks, s_logits = _greedy_decode(
+            cfg, serve.place_params(params), serve.place_batch(batch_j), t,
+            n_new, max_seq, None, serve=serve)
+        assert s_toks == ref_toks, (
+            f"sharded tuned-plan decode [{backend}] diverges")
+        for i, (r, s) in enumerate(zip(ref_logits, s_logits)):
+            assert np.array_equal(r, s), (
+                f"tuned-plan logits [{backend}] differ at step {i}")
+        toks_by_backend[backend] = s_toks
+    assert toks_by_backend["gather"] == toks_by_backend["pallas"]
+    return {"tokens": toks_by_backend["gather"],
+            "knobs": sorted(loaded.knobs)}
+
+
+def scenario_misreplicated(arch: str = "qwen3-0.6b", n_new: int = 3):
+    """Negative control: a table slab that *claims* replicated sharding
+    but holds corrupted buffers on the non-zero devices must be caught by
+    the sharded-vs-reference assertion — this is exactly the failure mode
+    comparing the two sharded backends against each other would miss."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg, params, plans, batch_d = _setup(arch)
+    mesh = make_host_mesh(2, 2)
+    tables = plans.tables_for_model(backend="gather", mesh=mesh)
+    rep = NamedSharding(mesh, P())
+
+    def corrupt(a):
+        """Rebuild ``a`` as 'replicated' with garbage off device 0."""
+        host = np.asarray(a)
+        bufs = []
+        for i, d in enumerate(mesh.devices.flat):
+            buf = host if i == 0 else np.zeros_like(host)
+            bufs.append(jax.device_put(buf, d))
+        return jax.make_array_from_single_device_arrays(
+            host.shape, rep, bufs)
+
+    site = next(iter(tables["sites"]))
+    entry = tables["sites"][site]
+    key = "stacked" if "stacked" in entry else None
+    arrs = entry[key]["arrays"] if key else entry["arrays"]
+    bad_arrs = {f: corrupt(v) for f, v in arrs.items()}
+    bad_entry = ({key: dict(entry[key], arrays=bad_arrs)} if key
+                 else dict(entry, arrays=bad_arrs))
+    bad = dict(tables, sites=dict(tables["sites"], **{site: bad_entry}))
+
+    # the corruption must survive ShardedServe's own re-placement
+    # (device_put to an identical sharding is a no-op, not a repair)
+    from repro.serve.sharded import place_tables
+    placed, _ = place_tables(bad, mesh)
+    probe = next(iter(jax.tree.leaves(
+        placed["sites"][site][key]["arrays"] if key
+        else placed["sites"][site]["arrays"])))
+    shard_vals = [np.asarray(s.data) for s in probe.addressable_shards]
+    if all(np.array_equal(shard_vals[0], v) for v in shard_vals[1:]):
+        return {"ok": False,
+                "error": "corruption was healed by re-placement — the "
+                         "negative control cannot exercise the check"}
+
+    try:
+        verify_backend_equivalence(cfg, params, plans, batch_d,
+                                   n_new=n_new, mesh=mesh,
+                                   table_overrides={"gather": bad})
+    except AssertionError as e:
+        return {"caught": str(e)[:200]}
+    raise AssertionError(
+        "verify_backend_equivalence accepted a mis-replicated table slab")
+
+
+def scenario_batcher(arch: str = "qwen3-0.6b"):
+    """ContinuousBatcher(mesh=...) emits the same per-request outputs as
+    the single-device batcher, through admission/replay/eviction churn."""
+    from repro.serve import ContinuousBatcher, Request
+
+    cfg, params, plans, _ = _setup(arch)
+    tables = plans.tables_for_model(backend="gather", mesh=False)
+    mesh = make_host_mesh(2, 2)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab_size, n).tolist()
+               for n in (5, 3, 7, 2, 4, 6)]
+
+    def run(mesh_):
+        b = ContinuousBatcher(cfg, params, batch_size=4, max_seq=24,
+                              lut_tables=tables, prefill="replay",
+                              mesh=mesh_)
+        for rid, p in enumerate(prompts):
+            b.submit(Request(rid=rid, prompt=list(p), max_new=4))
+        for _ in range(200):
+            if len(b.finished) == len(prompts):
+                break
+            b.step()
+        assert len(b.finished) == len(prompts), "batcher did not drain"
+        return {r.rid: r.out for r in b.finished}
+
+    ref, sharded = run(None), run(mesh)
+    assert sharded == ref, f"batcher outputs diverge: {sharded} != {ref}"
+    return {"outputs": {str(k): v for k, v in ref.items()}}
+
+
+def scenario_mesh_helpers():
+    """make_host_mesh validation + mesh_or_none degradation, with the
+    real 8-device topology visible."""
+    n = len(jax.devices())
+    assert n == 8, f"worker expected 8 forced host devices, got {n}"
+    m = make_host_mesh(4, 2)
+    assert dict(m.shape) == {"data": 4, "model": 2}
+    for bad in ((3, 3), (9, 1), (1, 16)):
+        try:
+            make_host_mesh(*bad)
+        except ValueError as e:
+            assert "devices" in str(e) and "visible" in str(e), str(e)
+        else:
+            raise AssertionError(f"make_host_mesh{bad} should have raised")
+    for bad in ((0, 1), (1, -2)):
+        try:
+            make_host_mesh(*bad)
+        except ValueError as e:
+            assert ">= 1" in str(e)
+        else:
+            raise AssertionError(f"make_host_mesh{bad} should have raised")
+    assert mesh_or_none(1, 1) is None
+    assert mesh_or_none(16, 1) is None
+    assert dict(mesh_or_none(2, 2).shape) == {"data": 2, "model": 2}
+    return {"devices": n}
+
+
+SCENARIOS = {
+    "family": scenario_family,
+    "plan_exec": scenario_plan_exec,
+    "layer_sharded": scenario_layer_sharded,
+    "shard_map": scenario_shard_map,
+    "tuned": scenario_tuned,
+    "misreplicated": scenario_misreplicated,
+    "batcher": scenario_batcher,
+    "mesh_helpers": scenario_mesh_helpers,
+}
+
+
+def main() -> int:
+    name = sys.argv[1]
+    kwargs = json.loads(sys.argv[2]) if len(sys.argv) > 2 else {}
+    try:
+        result = SCENARIOS[name](**kwargs) or {}
+    except Exception as e:   # noqa: BLE001 — verdict protocol
+        print(json.dumps({"ok": False, "error": f"{type(e).__name__}: {e}",
+                          "trace": traceback.format_exc()}))
+        return 1
+    ok = result.pop("ok", True)
+    print(json.dumps({"ok": ok, **result}))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+"""Mesh-suite harness: every test here runs its scenario in a fresh
+subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+jax locks the platform device count at first init, and the tier-1 run in
+the parent process has usually initialized jax already — so multi-device
+scenarios are only reachable from a process whose environment carries the
+flag *before* the first jax import.  ``_worker.py`` is that process: the
+``mesh_run`` fixture launches it with one scenario name + JSON kwargs and
+asserts the JSON verdict it prints on its last stdout line.
+
+Everything in this directory is auto-marked ``mesh`` and therefore
+excluded from the default run (pytest.ini deselects it); CI's mesh-smoke
+job opts in with ``-m mesh``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_REPO = os.path.dirname(os.path.dirname(_HERE))
+
+
+def pytest_collection_modifyitems(items):
+    for item in items:
+        if os.path.dirname(str(item.fspath)) == _HERE:
+            item.add_marker(pytest.mark.mesh)
+
+
+@pytest.fixture(scope="session")
+def mesh_run():
+    """Run one ``_worker.py`` scenario in an 8-host-device subprocess and
+    return its parsed JSON result (asserting success)."""
+
+    def run(scenario: str, timeout: int = 1200, **kwargs):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["JAX_PLATFORMS"] = "cpu"
+        env["PYTHONPATH"] = os.path.join(_REPO, "src")
+        proc = subprocess.run(
+            [sys.executable, os.path.join(_HERE, "_worker.py"), scenario,
+             json.dumps(kwargs)],
+            capture_output=True, text=True, timeout=timeout, env=env,
+            cwd=_REPO)
+        tail = "\n".join((proc.stdout + proc.stderr).splitlines()[-30:])
+        assert proc.returncode == 0, (
+            f"mesh worker [{scenario}] exited {proc.returncode}:\n{tail}")
+        last = proc.stdout.strip().splitlines()[-1]
+        try:
+            result = json.loads(last)
+        except json.JSONDecodeError:
+            raise AssertionError(
+                f"mesh worker [{scenario}] printed no JSON verdict:\n{tail}")
+        assert result.get("ok"), (
+            f"mesh worker [{scenario}] failed: "
+            f"{result.get('error')}\n{result.get('trace', '')[-2000:]}")
+        return result
+
+    return run

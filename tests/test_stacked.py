@@ -222,6 +222,50 @@ def test_stacked_pallas_matches_gather_per_layer():
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_layers=st.integers(min_value=2, max_value=5))
+def test_split_concat_layers_roundtrip(seed, n_layers):
+    """Re-chunking property (the shape a layer-sharding placement hands
+    each device): ``concat_layers(split_layers(sizes))`` is lossless for
+    every partition of the layer range — identical metas, true lengths,
+    and padded arrays — and each chunk's local padding never exceeds the
+    global pad width."""
+    st_arr = StackedPlanArrays.from_entries(
+        _entries(_ragged_luts(seed, n_layers=n_layers)))
+    rng = np.random.default_rng(seed)
+    sizes, left = [], n_layers
+    while left:
+        s = int(rng.integers(1, left + 1))
+        sizes.append(s)
+        left -= s
+    parts = st_arr.split_layers(tuple(sizes))
+    assert [p.n_layers for p in parts] == sizes
+    from repro.serve.stacked import COMPONENTS
+
+    for p in parts:
+        for c in COMPONENTS:
+            assert p.arrays[c].shape[1] <= st_arr.arrays[c].shape[1]
+    back = StackedPlanArrays.concat_layers(parts)
+    assert back.n_layers == st_arr.n_layers
+    assert back.metas == st_arr.metas
+    assert back.lens == st_arr.lens
+    for c in COMPONENTS:
+        np.testing.assert_array_equal(np.asarray(back.arrays[c]),
+                                      np.asarray(st_arr.arrays[c]))
+    np.testing.assert_array_equal(np.asarray(back.meta_i),
+                                  np.asarray(st_arr.meta_i))
+    np.testing.assert_array_equal(np.asarray(back.meta_f),
+                                  np.asarray(st_arr.meta_f))
+
+
+def test_split_layers_rejects_bad_partition():
+    st_arr = StackedPlanArrays.from_entries(_entries(_ragged_luts(2)))
+    for sizes in ((st_arr.n_layers + 1,), (st_arr.n_layers, 0), ()):
+        with pytest.raises(ValueError, match="sum to"):
+            st_arr.split_layers(sizes)
+
+
 def test_stacked_rejects_mixed_quantizers():
     luts = _ragged_luts(3, n_layers=2)
     entries = _entries(luts)
