@@ -19,9 +19,13 @@ Measures, per architecture family (dense / moe / ssm by default):
 and runs the backend equivalence harness (gather vs pallas decode must
 bit-match token-for-token) per calibration mode before timing anything.
 A depth-sweep row (one dense arch at ``--depth`` layers) makes the
-O(L)-compile-time win of the stacked form visible in the committed file.
+O(L)-compile-time win of the stacked form visible in the committed file,
+and a **site-coverage row** (``sites=act|all`` on one dense config)
+prices the registry-extended sites — softmax exp, rmsnorm rsqrt, logit
+softcap, rotary sine — next to the activation-only scope: served P-LUT
+totals, table bytes and decode tok/s per scope.
 
-Writes the trajectory file ``BENCH_serve.json`` (schema: serve_bench/v4).
+Writes the trajectory file ``BENCH_serve.json`` (schema: serve_bench/v5).
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
   PYTHONPATH=src python benchmarks/serve_bench.py \
@@ -323,6 +327,51 @@ def bench_depth_sweep(arch: str, *, depth: int, batch: int, prompt_len: int,
     return row
 
 
+def bench_sites_coverage(arch: str, *, batch: int, prompt_len: int,
+                         n_new: int, full: bool, workers: int | None,
+                         calib_steps: int) -> dict:
+    """``sites=act|all``: the site-registry coverage axis on one dense
+    config — activation-only compression vs every registered site
+    (softmax exp, norm rsqrt, logit softcap, rope).  Both scopes run the
+    *same* soft-capped model (the act scope evaluates the cap exactly),
+    so the decode tok/s and P-LUT columns are apples-to-apples."""
+    softcap = 30.0
+    out = {"arch": arch, "logit_softcap": softcap, "scopes": {}}
+    for scope in ("act", "all"):
+        cfg = get_config(arch)
+        if not full:
+            cfg = smoke_config(cfg)
+        cfg = dataclasses.replace(cfg, lut_sites=scope,
+                                  logit_softcap=softcap)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        bt = _make_batch(cfg, rng, batch, prompt_len)
+        t_cache = prompt_len + (cfg.n_patches if cfg.family == "vlm" else 0)
+        max_seq = t_cache + n_new + 1
+        calib = capture_calibration(
+            params, cfg,
+            synthetic_batches(cfg, calib_steps, batch_size=batch,
+                              seq_len=prompt_len, seed=1),
+            w_in=cfg.lut_act_bits_in)
+        plans = build_serving_plans(cfg, calib, workers=workers)
+        verify_backend_equivalence(
+            cfg, params, plans, {k: np.asarray(v) for k, v in bt.items()},
+            min(n_new, 4), max_seq=max_seq)
+        tables = plans.tables_for_model(backend="gather")
+        r = _time_mode(plans.patched_config(cfg), params, bt,
+                       max_seq=max_seq, n_new=n_new, lut_tables=tables)
+        out["scopes"][scope] = {
+            "sites": sorted(plans.sites),
+            "served_cost": plans.total_cost,
+            "plain_cost": plans.report.total_plain_cost,
+            "saved_frac": round(plans.report.saved_frac, 4),
+            "table_bytes": tables_nbytes(tables),
+            "decode_tok_s": r["decode_tok_s"],
+            "decode_compile_s": r["decode_compile_s"],
+        }
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--archs", default=DEFAULT_ARCHS,
@@ -350,7 +399,7 @@ def main() -> None:
             raise SystemExit(f"unknown arch {a!r}; have {sorted(ARCH_NAMES)}")
 
     results = {
-        "schema": "serve_bench/v4",
+        "schema": "serve_bench/v5",
         "scale": "full" if args.full else "smoke",
         "batch": args.batch,
         "prompt_len": args.prompt_len,
@@ -396,6 +445,17 @@ def main() -> None:
           f"(stacked); decode compile "
           f"{sweep['unrolled']['decode_compile_s']}s -> "
           f"{sweep['stacked']['decode_compile_s']}s")
+
+    cov = bench_sites_coverage(
+        archs[0], batch=args.batch, prompt_len=args.prompt_len,
+        n_new=args.new_tokens, full=args.full, workers=args.workers,
+        calib_steps=args.calib_steps)
+    results["sites_coverage"] = cov
+    for scope, s in cov["scopes"].items():
+        print(f"sites-coverage [{cov['arch']}] sites={scope}: "
+              f"{len(s['sites'])} site kinds, plan cost {s['served_cost']} "
+              f"({s['saved_frac']:.0%} saved, {s['table_bytes']} table "
+              f"bytes), {s['decode_tok_s']} tok/s")
 
     families = {r["family"] for r in results["archs"].values()}
     print(f"{len(results['archs'])} archs over {len(families)} families "

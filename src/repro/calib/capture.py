@@ -34,6 +34,8 @@ import numpy as np
 
 import jax
 
+from repro import sites
+
 # Active captures, innermost last.  JAX tracing is single-threaded per
 # process and capture is an eval-time tool, so a plain module-level stack
 # (rather than a contextvar) is sufficient and keeps the hot check cheap.
@@ -74,6 +76,10 @@ class ActivationCapture:
         self.w_in = w_in
         self.x_lo = float(x_lo)
         self.x_hi = float(x_hi)
+        # Per-key input-domain overrides (registry sites pin their own
+        # quantizer range, e.g. the softmax exp over [-16, 0]); keys
+        # without an entry histogram over the global [x_lo, x_hi].
+        self.domains: dict[str, tuple[float, float]] = {}
         self.hists: dict[str, np.ndarray] = {}
         # Streaming per-site *output* range: key -> [y_lo, y_hi] float64.
         # The observed output span is what per-site w_out selection prices
@@ -98,7 +104,8 @@ class ActivationCapture:
         if flat.size == 0:
             return
         levels = (1 << self.w_in) - 1
-        xn = np.clip((flat - self.x_lo) / (self.x_hi - self.x_lo), 0.0, 1.0)
+        x_lo, x_hi = self.domains.get(key, (self.x_lo, self.x_hi))
+        xn = np.clip((flat - x_lo) / (x_hi - x_lo), 0.0, 1.0)
         codes = np.rint(xn * levels).astype(np.int64)
         hist = self.hists.get(key)
         if hist is None:
@@ -119,12 +126,15 @@ class ActivationCapture:
         r[0] = min(r[0], float(flat.min()))
         r[1] = max(r[1], float(flat.max()))
 
-    def observe(self, site: str, layer: int | None, x) -> None:
+    def observe(self, site: str, layer: int | None, x,
+                domain: tuple[float, float] | None = None) -> None:
         """Stream one site's pre-activation tensor into its histogram."""
         key = site_key(site, layer)
         # Register the key eagerly so the site inventory is complete even
         # before deferred callbacks flush.
         self.hists.setdefault(key, np.zeros(1 << self.w_in, dtype=np.int64))
+        if domain is not None:
+            self.domains[key] = (float(domain[0]), float(domain[1]))
         if isinstance(x, jax.core.Tracer):
             jax.debug.callback(lambda v, _k=key: self._accum(_k, v), x)
         else:
@@ -140,11 +150,14 @@ class ActivationCapture:
         else:
             self._accum_out(key, np.asarray(y))
 
-    def wrap(self, site: str, layer: int | None, act):
+    def wrap(self, site: str, layer: int | None, act,
+             domain: tuple[float, float] | None = None):
         """Wrap an activation callable so evaluating it records its input
-        histogram and its output range."""
+        histogram and its output range.  ``domain`` pins this key's
+        histogram quantizer range (registry sites with their own input
+        domain); ``None`` keeps the capture-wide default."""
         def captured(x):
-            self.observe(site, layer, x)
+            self.observe(site, layer, x, domain=domain)
             y = act(x)
             self.observe_output(site, layer, y)
             return y
@@ -235,6 +248,14 @@ def capture_model(params, cfg, batches, *, w_in: int | None = None,
                 raise ValueError(f"capture_model: unknown family "
                                  f"{cfg.family!r}")
             jax.block_until_ready(out)
+            # The softcap site lives past the forwards above (they return
+            # hidden states, not logits): project explicitly so the
+            # network-global tanh histogram is observed too.
+            if sites.site_spec(sites.LOGIT_SOFTCAP).active(cfg):
+                from repro.nn.mlp import project_logits
+
+                jax.block_until_ready(
+                    project_logits(out, params["lm_head"], cfg))
             cap.n_batches += 1
     # Deferred debug callbacks must land before masks are derived.
     jax.effects_barrier()

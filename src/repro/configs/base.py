@@ -55,6 +55,13 @@ class ArchConfig:
     lut_activation: bool = False
     lut_act_bits_in: int = 10
     lut_act_bits_out: int = 10
+    # which registered sites (repro.sites) get LUT treatment: "act"
+    # (activation sites only — the default, pre-registry behavior),
+    # "all", or an explicit tuple of site keys
+    lut_sites: str | tuple = "act"
+    # tanh soft-capping scale applied to the final logits (None = off);
+    # when set, the softcap tanh is itself a registered LUT site
+    logit_softcap: float | None = None
 
     # quality-of-life
     max_seq_len: int = 524288

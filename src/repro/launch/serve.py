@@ -73,6 +73,13 @@ def main() -> None:
                     help="per-layer table execution: stacked (L, ...) "
                          "arrays inside lax.scan (default) or the "
                          "python-unrolled reference")
+    ap.add_argument("--lut-sites", choices=("act", "all"), default="act",
+                    help="LUT site scope: act (the activation sites only, "
+                         "the default) or all (every registered site — "
+                         "softmax exp, norm rsqrt, logit softcap, rope)")
+    ap.add_argument("--logit-softcap", type=float, default=None,
+                    help="tanh soft-cap the final logits at this scale "
+                         "(enables the network-global softcap LUT site)")
     ap.add_argument("--calib-steps", type=int, default=0,
                     help="capture N batches for per-site don't-care masks "
                          "(0 = shared synthetic calibration)")
@@ -121,6 +128,11 @@ def main() -> None:
     cfg = get_config(args.arch)
     if not args.full:
         cfg = smoke_config(cfg)
+    if args.lut_sites != "act" or args.logit_softcap is not None:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, lut_sites=args.lut_sites,
+                                  logit_softcap=args.logit_softcap)
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     b, t = args.batch, args.prompt_len

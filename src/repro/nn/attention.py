@@ -23,7 +23,28 @@ from .sharding import shard
 NEG_INF = -1e30
 
 
-def _chunk_scores(qc, k, v, pos_q, pos_k, *, causal, window, scale):
+def masked_softmax(s: jax.Array, exp_fn=None) -> jax.Array:
+    """Softmax over the last axis of NEG_INF-masked f32 scores.
+
+    With ``exp_fn=None`` this is ``jax.nn.softmax`` verbatim — the exact
+    golden path, byte-identical to the pre-registry forward.  With an
+    ``exp_fn`` (the attention-exp LUT site) the exponential runs through
+    the callable on max-shifted scores; masked entries are re-zeroed
+    *after* the lookup (a clipped-domain table maps NEG_INF to
+    ``exp(x_lo)``, not 0) and the normalizer is guarded so fully-masked
+    rows (padded/invalid positions) produce zeros instead of NaN.
+    """
+    if exp_fn is None:
+        return jax.nn.softmax(s, axis=-1)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = exp_fn(s - m)
+    e = jnp.where(s > NEG_INF * 0.5, e, 0.0)
+    tot = jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.where(tot > 0, e / tot, 0.0)
+
+
+def _chunk_scores(qc, k, v, pos_q, pos_k, *, causal, window, scale,
+                  exp_fn=None):
     """One query chunk against a key set.
 
     qc: (B, Cq, KV, G, Dh); k/v: (B, Tk, KV, Dh);
@@ -38,7 +59,7 @@ def _chunk_scores(qc, k, v, pos_q, pos_k, *, causal, window, scale):
     if window is not None:
         mask = mask & (pos_q[:, None] - pos_k[None, :] < window)
     s = jnp.where(mask[None, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    p = masked_softmax(s, exp_fn)
     out = jnp.einsum(
         "bkgqt,btkd->bqkgd", p.astype(v.dtype), v,
         preferred_element_type=jnp.float32,
@@ -56,6 +77,7 @@ def mha(
     q_offset: jax.Array | int = 0,
     k_offset: jax.Array | int = 0,
     chunk_q: int = 512,
+    exp_fn=None,
 ) -> jax.Array:
     """General GQA attention. Returns (B, Tq, H, Dh)."""
     b, tq, h, dh = q.shape
@@ -68,7 +90,8 @@ def mha(
     if tq <= chunk_q:
         pos_q = jnp.arange(tq) + q_offset
         out = _chunk_scores(qg, k, v, pos_q, pos_k,
-                            causal=causal, window=window, scale=scale)
+                            causal=causal, window=window, scale=scale,
+                            exp_fn=exp_fn)
         return out.reshape(b, tq, h, dh)
 
     pad = (-tq) % chunk_q
@@ -84,7 +107,8 @@ def mha(
         qc, c = args
         pos_q = jnp.arange(chunk_q) + q_offset + c * chunk_q
         return _chunk_scores(qc, k, v, pos_q, pos_k,
-                             causal=causal, window=window, scale=scale)
+                             causal=causal, window=window, scale=scale,
+                             exp_fn=exp_fn)
 
     outs = jax.lax.map(body, (qs, jnp.arange(nc)))
     out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, tq_p, kv, g, dh)
@@ -98,6 +122,7 @@ def decode_attend(
     pos: jax.Array,        # scalar: current position (0-based)
     k_scale: jax.Array | None = None,  # (B, Tmax, KV) int8-cache scales
     v_scale: jax.Array | None = None,
+    exp_fn=None,
 ) -> jax.Array:
     """Single-token decode against a full cache (entries > pos masked).
 
@@ -126,7 +151,7 @@ def decode_attend(
     s = s * (dh ** -0.5)
     valid = jnp.arange(tmax)[None] <= pos
     s = jnp.where(valid[None, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    p = masked_softmax(s, exp_fn)
     out = jnp.einsum(
         "bkgqt,btkd->bqkgd", p.astype(vc.dtype), vc,
         preferred_element_type=jnp.float32,
@@ -141,6 +166,7 @@ def ring_decode_attend(
     ring_pos: jax.Array,   # (W,) absolute position stored in each slot
     pos: jax.Array,
     window: int,
+    exp_fn=None,
 ) -> jax.Array:
     """Decode against a sliding-window ring buffer (hybrid local layers)."""
     b, w, kvh, dh = k_ring.shape
@@ -153,7 +179,7 @@ def ring_decode_attend(
     ) * (dh ** -0.5)
     valid = (ring_pos <= pos) & (ring_pos > pos - window) & (ring_pos >= 0)
     s = jnp.where(valid[None, None, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    p = masked_softmax(s, exp_fn)
     out = jnp.einsum(
         "bkgqt,btkd->bqkgd", p.astype(v_ring.dtype), v_ring,
         preferred_element_type=jnp.float32,

@@ -26,16 +26,20 @@ def set_fast_stream(on: bool) -> None:
     FAST_STREAM = on
 
 
-def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             rsqrt_fn=None) -> jax.Array:
+    """RMS norm; ``rsqrt_fn`` overrides the inverse square root (the
+    norm-rsqrt LUT site) — ``None`` keeps the exact ``jax.lax.rsqrt``."""
+    rsqrt = jax.lax.rsqrt if rsqrt_fn is None else rsqrt_fn
     dt = x.dtype
     if FAST_STREAM:
         var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
                        keepdims=True)
-        inv = jax.lax.rsqrt(var + eps).astype(dt)
+        inv = rsqrt(var + eps).astype(dt)
         return x * inv * (1.0 + scale.astype(dt))
     x = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
-    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+    return ((x * rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
 
 
 def layer_norm(x, scale, bias, eps: float = 1e-5):

@@ -31,6 +31,9 @@ ACT_FNS = {
     "relu2": lambda x: np.square(np.maximum(x, 0.0)),
     "exp": np.exp,
     "sigmoid": lambda x: 1 / (1 + np.exp(-x)),
+    "rsqrt": lambda x: 1.0 / np.sqrt(x),
+    "tanh": np.tanh,
+    "sin": np.sin,
 }
 
 

@@ -12,9 +12,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import sites
 from repro.calib import capture as calib_capture
 
-from .layers import activation_fn, is_gated
+from .layers import activation_fn, is_gated, logits_projection
 from .sharding import layer_scan, shard
 
 
@@ -143,25 +144,25 @@ def run_layers(body, carry, xs, *, lut_tables=None, remat=False):
     return layer_scan(fn, carry, xs)
 
 
-def site_tables(lut_tables: dict | None, site: str,
+def site_tables(lut_tables: dict | None, site: str | None = None,
                 layer=None) -> dict | None:
-    """Resolve one activation site's table entry.
+    """Resolve one site's table entry (default: the MLP activation site).
 
-    Four shapes are accepted: the legacy single-table dict (applies to
-    the ``"mlp"`` site only — the pre-plans behavior), the serving-plans
-    multi-site dict ``{"sites": {site: {...}}, "backend": ...}``, the
-    unrolled per-layer form ``{"layers": [...]}`` (one entry per layer,
-    resolved by a *concrete* ``layer`` index), and the stacked per-layer
-    form ``{"stacked": {...}}`` (``(L, …)`` padded stacks,
+    Four shapes are accepted: the legacy bare single-table dict (routed
+    through :func:`repro.sites.coerce_site_tables`, which maps it to the
+    MLP site with a DeprecationWarning), the serving-plans multi-site
+    dict ``{"sites": {site: {...}}, "backend": ...}``, the unrolled
+    per-layer form ``{"layers": [...]}`` (one entry per layer, resolved
+    by a *concrete* ``layer`` index), and the stacked per-layer form
+    ``{"stacked": {...}}`` (``(L, …)`` padded stacks,
     :mod:`repro.serve.stacked`), whose ``layer`` may be a **traced**
     in-scan id — resolution is deferred to the evaluators.
     """
+    lut_tables = sites.coerce_site_tables(lut_tables)
     if lut_tables is None:
         return None
-    if "sites" in lut_tables:
-        entry = lut_tables["sites"].get(site)
-    else:
-        entry = lut_tables if site == "mlp" else None
+    site = sites.MLP if site is None else site
+    entry = lut_tables["sites"].get(site)
     if entry is None or ("layers" not in entry and "stacked" not in entry):
         return entry
     if layer is None:
@@ -242,29 +243,86 @@ def apply_lut_act(x, tab: dict, backend: str = "gather"):
     return lut_act_jnp(x, arrays, **meta)
 
 
-def make_activation(cfg, lut_tables: dict | None, site: str = "mlp",
+def make_activation(cfg, lut_tables: dict | None, site: str | None = None,
                     fallback: str | None = None, layer: int | None = None):
     """Returns act(x) for the configured nonlinearity.
 
-    With ``cfg.lut_activation`` and compiled plan arrays available for
-    ``site`` (per-layer arrays resolved via ``layer``), the activation
+    ``site`` is a registered site key (:mod:`repro.sites`; default the
+    MLP activation site).  With ``cfg.lut_activation``, the site active
+    under the config's ``lut_sites`` scope, and compiled plan arrays
+    available (per-layer arrays resolved via ``layer``), the activation
     evaluates the ReducedLUT-compressed table; otherwise the exact
     ``fallback`` (default ``cfg.activation``) runs.  While an activation
-    capture is active the returned callable additionally streams its
-    input into the capture's ``(layer, site)`` histogram.
+    capture is active — and the site is active — the returned callable
+    additionally streams its input into the capture's ``(layer, site)``
+    histogram.
     """
+    site = sites.MLP if site is None else site
+    spec = sites.site_spec(site)
     act = None
-    if cfg.lut_activation and lut_tables is not None:
-        tab = site_tables(lut_tables, site, layer)
-        if tab is not None:
-            backend = lut_tables.get("backend", "gather")
-            act = lambda x: apply_lut_act(x, tab, backend)
+    cap = None
+    if spec.active(cfg):
+        if cfg.lut_activation and lut_tables is not None:
+            tab = site_tables(lut_tables, site, layer)
+            if tab is not None:
+                backend = lut_tables.get("backend", "gather")
+                act = lambda x: apply_lut_act(x, tab, backend)
+        cap = calib_capture.current()
     if act is None:
         act = activation_fn(fallback or cfg.activation)
-    cap = calib_capture.current()
     if cap is not None:
-        act = cap.wrap(site, layer, act)
+        act = cap.wrap(site, layer, act, domain=spec.domain())
     return act
+
+
+def site_act(cfg, lut_tables: dict | None, site: str, layer=None):
+    """Resolve one non-default scalar site to a callable, or ``None``.
+
+    Returns ``None`` whenever the site is inactive for this config (not
+    hosted, or outside the ``lut_sites`` scope) *and* no capture is
+    running — callers keep their exact inline math on the ``None`` path,
+    byte-identical to the pre-registry forward.  Otherwise the callable
+    evaluates the site's compressed table (when plan arrays are served)
+    or the exact scalar function, wrapped to stream capture histograms
+    while a capture context is active.
+    """
+    spec = sites.site_spec(site)
+    if not spec.active(cfg):
+        return None
+    lyr = layer if spec.per_layer else None
+    fn = None
+    if cfg.lut_activation and lut_tables is not None:
+        tab = site_tables(lut_tables, site, lyr)
+        if tab is not None:
+            backend = lut_tables.get("backend", "gather")
+            fn = lambda x: apply_lut_act(x, tab, backend)
+    cap = calib_capture.current()
+    if fn is None and cap is None:
+        return None
+    if fn is None:
+        fn = sites.exact_fn(spec, cfg)
+    if cap is not None:
+        fn = cap.wrap(site, lyr, fn, domain=spec.domain())
+    return fn
+
+
+def project_logits(x, lm_head, cfg, lut_tables: dict | None = None):
+    """Final logits projection, with optional tanh soft-capping.
+
+    Without ``cfg.logit_softcap`` this is exactly
+    :func:`repro.nn.layers.logits_projection`.  With it, the logits are
+    scaled, tanh-capped and rescaled — and the tanh is the registered
+    softcap site, so under an active scope it evaluates the compressed
+    table (network-global: one table, no layer index).
+    """
+    logits = logits_projection(x, lm_head)
+    cap_scale = getattr(cfg, "logit_softcap", None)
+    if not cap_scale:
+        return logits
+    scaled = logits.astype(jnp.float32) / cap_scale
+    tanh = site_act(cfg, lut_tables, sites.LOGIT_SOFTCAP)
+    capped = tanh(scaled) if tanh is not None else jnp.tanh(scaled)
+    return (cap_scale * capped).astype(logits.dtype)
 
 
 def mlp_block(params: dict, x: jax.Array, cfg, lut_tables=None,

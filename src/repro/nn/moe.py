@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import sites
 from repro.compat import shard_map
 
 from .layers import activation_fn
@@ -91,7 +92,7 @@ def moe_block(params: dict, x: jax.Array, cfg, shared_mlp=None,
               lut_tables=None, layer: int | None = None):
     """(B, T, d) -> ((B, T, d), aux_loss). Uses shard_map EP under a mesh
     with a model axis; plain local compute otherwise.  With serving plans
-    carrying an ``"expert"`` site, the per-expert nonlinearity evaluates
+    carrying the expert site, the per-expert nonlinearity evaluates
     the ReducedLUT-compressed table for this ``layer`` — the table arrays
     and the (possibly traced, in-scan) layer id ride into the
     expert-parallel shard_map as *explicit mapped operands*
@@ -112,14 +113,14 @@ def moe_block(params: dict, x: jax.Array, cfg, shared_mlp=None,
     mesh = current_mesh()
     s_local_tokens = b * t
     act_name = "silu"
-    act_fn = make_activation(cfg, lut_tables, site="expert",
+    act_fn = make_activation(cfg, lut_tables, site=sites.EXPERT,
                              fallback=act_name, layer=layer)
 
     tab = None
     backend = "gather"
     if (cfg.lut_activation and lut_tables is not None
             and not calib_capture.capture_active()):
-        tab = site_tables(lut_tables, "expert", layer)
+        tab = site_tables(lut_tables, sites.EXPERT, layer)
         backend = lut_tables.get("backend", "gather")
 
     manual = current_manual_axes()

@@ -9,15 +9,27 @@ def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
     return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
 
 
-def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """x: (..., T, H, Dh); positions: broadcastable to (..., T)."""
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               sin_fn=None) -> jax.Array:
+    """x: (..., T, H, Dh); positions: broadcastable to (..., T).
+
+    ``sin_fn`` overrides the sine (the rope-table LUT site, tabulated
+    over one wrapped period [0, 2*pi)); the cosine reuses the same table
+    a quarter period ahead.  ``None`` keeps the exact trig path verbatim.
+    """
     from .layers import FAST_STREAM
 
     d_head = x.shape[-1]
     freqs = rope_freqs(d_head, theta)                    # (Dh/2,)
     angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, Dh/2)
-    cos = jnp.cos(angles)[..., None, :]                  # (..., T, 1, Dh/2)
-    sin = jnp.sin(angles)[..., None, :]
+    if sin_fn is None:
+        cos = jnp.cos(angles)[..., None, :]              # (..., T, 1, Dh/2)
+        sin = jnp.sin(angles)[..., None, :]
+    else:
+        tau = 2.0 * jnp.float32(jnp.pi)
+        sin = sin_fn(jnp.mod(angles, tau))[..., None, :]
+        cos = sin_fn(jnp.mod(angles + 0.5 * jnp.float32(jnp.pi),
+                             tau))[..., None, :]
     if FAST_STREAM:
         # rotate in the stream dtype; trig stays f32 (tiny, position-only)
         cos = cos.astype(x.dtype)

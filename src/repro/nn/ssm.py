@@ -184,11 +184,13 @@ def rwkv_channel_mix(params, x, cfg, x_last=None, lut_tables=None,
                      layer=None):
     """RWKV6 FFN: squared-ReLU with token-shift mixing.
 
-    With serving plans carrying an ``"ffn"`` site, the squared-ReLU
+    With serving plans carrying the ffn site, the squared-ReLU
     evaluates the ReducedLUT-compressed table for this ``layer``
     (cfg.activation is "relu2" for the rwkv family, so the exact fallback
     is the same function).
     """
+    from repro import sites
+
     from .mlp import make_activation
 
     b, t, d = x.shape
@@ -199,7 +201,7 @@ def rwkv_channel_mix(params, x, cfg, x_last=None, lut_tables=None,
     xr = x + (x_prev - x) * params["mu_ffn_r"]
     kk = jnp.einsum("btd,df->btf", xk, params["w_ffn_k"])
     kk = shard(kk, "dp", None, "tp")
-    act = make_activation(cfg, lut_tables, site="ffn", fallback="relu2",
+    act = make_activation(cfg, lut_tables, site=sites.FFN, fallback="relu2",
                           layer=layer)
     vv = jnp.einsum("btf,fd->btd", act(kk), params["w_ffn_v"])
     rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, params["w_ffn_r"]))

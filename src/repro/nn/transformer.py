@@ -25,15 +25,16 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 
+from repro import sites
+
 from .attention import decode_attend, mha, ring_decode_attend
 from .layers import (
     embed_lookup,
-    logits_projection,
     rms_norm,
     softmax_cross_entropy,
     truncated_normal_init,
 )
-from .mlp import make_activation, mlp_block, run_layers
+from .mlp import mlp_block, project_logits, run_layers, site_act
 from .moe import moe_block
 from .rglru import recurrent_block, recurrent_block_step
 from .rope import apply_rope
@@ -225,8 +226,15 @@ def param_pspecs(cfg: ArchConfig, mesh, fsdp: bool = True) -> Any:
 # Attention sub-block (shared by decoder-only / encdec / hybrid-attn)
 # =========================================================================
 def _attn_apply(p, x, cfg, *, causal=True, window=None, pos_offset=0,
-                kv_override=None, rope=True, chunk_q=512):
-    """Returns (out, (k, v)) for cache building."""
+                kv_override=None, rope=True, chunk_q=512, lut_tables=None,
+                layer=None):
+    """Returns (out, (k, v)) for cache building.
+
+    ``lut_tables``/``layer`` resolve the attention-hosted registry sites
+    (rope sine, softmax exp) — both ``None``-gated, so with the sites
+    inactive the exact trig/softmax paths run verbatim.  The qk-norm
+    stays exact (its tiny per-head reduction is not a registered site).
+    """
     b, t, d = x.shape
     q = jnp.einsum("btd,dq->btq", x, p["wq"]).reshape(
         b, t, cfg.n_heads, cfg.d_head)
@@ -243,14 +251,16 @@ def _attn_apply(p, x, cfg, *, causal=True, window=None, pos_offset=0,
             k = rms_norm(k, p["k_norm"], cfg.norm_eps)
     if rope:
         positions = jnp.arange(t) + pos_offset
-        q = apply_rope(q, positions, cfg.rope_theta)
+        sin_fn = site_act(cfg, lut_tables, sites.ROPE, layer)
+        q = apply_rope(q, positions, cfg.rope_theta, sin_fn=sin_fn)
         if kv_override is None:
-            k = apply_rope(k, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta, sin_fn=sin_fn)
     q = shard(q, "dp", None, "tp", None)
     k = shard(k, "dp", None, None, None)
     v = shard(v, "dp", None, None, None)
     out = mha(q, k, v, causal=causal, window=window, q_offset=pos_offset,
-              chunk_q=chunk_q)
+              chunk_q=chunk_q,
+              exp_fn=site_act(cfg, lut_tables, sites.ATTN_EXP, layer))
     # constrain BEFORE the output projection: under exact_tp this resolves
     # to replicated, so the wo contraction is never partitioned over heads
     # (a partitioned contraction psums partial products and breaks the
@@ -269,7 +279,8 @@ def _quantize_kv(x: jax.Array):
 
 
 def _decode_attn(p, x, cfg, k_cache, v_cache, pos, *, window=None,
-                 ring_pos=None, rope=True, scales=None):
+                 ring_pos=None, rope=True, scales=None, lut_tables=None,
+                 layer=None):
     """Single-token attention against a cache; returns (out, k_new, v_new).
 
     ``scales``: (k_scale, v_scale) for int8 caches — quantize at write,
@@ -287,8 +298,10 @@ def _decode_attn(p, x, cfg, k_cache, v_cache, pos, *, window=None,
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
     if rope:
         pos_arr = jnp.full((1,), 0) + pos
-        q = apply_rope(q, pos_arr, cfg.rope_theta)
-        k = apply_rope(k, pos_arr, cfg.rope_theta)
+        sin_fn = site_act(cfg, lut_tables, sites.ROPE, layer)
+        q = apply_rope(q, pos_arr, cfg.rope_theta, sin_fn=sin_fn)
+        k = apply_rope(k, pos_arr, cfg.rope_theta, sin_fn=sin_fn)
+    exp_fn = site_act(cfg, lut_tables, sites.ATTN_EXP, layer)
     if window is None and scales is not None:
         k_scale, v_scale = scales
         kq, ks = _quantize_kv(k)
@@ -300,7 +313,7 @@ def _decode_attn(p, x, cfg, k_cache, v_cache, pos, *, window=None,
         v_scale = jax.lax.dynamic_update_slice(
             v_scale, vs.astype(v_scale.dtype), (0, pos, 0))
         out = decode_attend(q, k_cache, v_cache, pos,
-                            k_scale=k_scale, v_scale=v_scale)
+                            k_scale=k_scale, v_scale=v_scale, exp_fn=exp_fn)
         out = shard(out, "dp", None, "tp", None)
         out = jnp.einsum("btq,qd->btd", out.reshape(b, 1, cfg.q_dim),
                          p["wo"])
@@ -310,7 +323,7 @@ def _decode_attn(p, x, cfg, k_cache, v_cache, pos, *, window=None,
             k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
         v_cache = jax.lax.dynamic_update_slice(
             v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
-        out = decode_attend(q, k_cache, v_cache, pos)
+        out = decode_attend(q, k_cache, v_cache, pos, exp_fn=exp_fn)
     else:
         w = k_cache.shape[1]
         slot = pos % w
@@ -320,7 +333,8 @@ def _decode_attn(p, x, cfg, k_cache, v_cache, pos, *, window=None,
             v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
         slots = jnp.arange(w)
         stored = pos - ((pos - slots) % w)
-        out = ring_decode_attend(q, k_cache, v_cache, stored, pos, window)
+        out = ring_decode_attend(q, k_cache, v_cache, stored, pos, window,
+                                 exp_fn=exp_fn)
     out = shard(out, "dp", None, "tp", None)
     out = jnp.einsum("btq,qd->btd", out.reshape(b, 1, cfg.q_dim), p["wo"])
     return out, k_cache, v_cache
@@ -340,10 +354,12 @@ def _decoder_embed(params, cfg, tokens, patches=None):
 
 def _decoder_block(p, x, cfg, lut_tables, pos_offset=0, collect_kv=False,
                    chunk_q=512, layer=None):
-    h, kv = _attn_apply(p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
-                        pos_offset=pos_offset, chunk_q=chunk_q)
+    rs = site_act(cfg, lut_tables, sites.NORM_RSQRT, layer)
+    h, kv = _attn_apply(p, rms_norm(x, p["ln1"], cfg.norm_eps, rs), cfg,
+                        pos_offset=pos_offset, chunk_q=chunk_q,
+                        lut_tables=lut_tables, layer=layer)
     x = x + h
-    hin = rms_norm(x, p["ln2"], cfg.norm_eps)
+    hin = rms_norm(x, p["ln2"], cfg.norm_eps, rs)
     if cfg.moe:
         shared = None
         if cfg.moe.n_shared:
@@ -388,7 +404,7 @@ def decoder_loss(params, cfg, batch, lut_tables=None, remat=False,
                                 remat=remat, chunk_q=chunk_q)
     if patches is not None:
         x = x[:, patches.shape[1]:]
-    logits = logits_projection(x, params["lm_head"])
+    logits = project_logits(x, params["lm_head"], cfg, lut_tables)
     loss = softmax_cross_entropy(logits, batch["labels"])
     if cfg.moe:
         loss = loss + cfg.moe.router_aux_weight * aux / cfg.n_layers
@@ -409,23 +425,24 @@ def rwkv_forward(params, cfg, tokens, states=None, remat=False,
 
     def body(carry, inp, layer):
         x = carry
+        rs = site_act(cfg, lut_tables, sites.NORM_RSQRT, layer)
         if decode:
             p, st = inp
             h, (ax, wkv) = rwkv_time_mix(
-                p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                p, rms_norm(x, p["ln1"], cfg.norm_eps, rs), cfg,
                 x_last=st["att_x"], wkv_state=st["wkv"])
             x = x + h
             h, fx = rwkv_channel_mix(
-                p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
+                p, rms_norm(x, p["ln2"], cfg.norm_eps, rs), cfg,
                 x_last=st["ffn_x"], lut_tables=lut_tables, layer=layer)
             x = x + h
             return x, {"att_x": ax, "ffn_x": fx, "wkv": wkv}
         p = inp
         h, (ax, wkv) = rwkv_time_mix(
-            p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+            p, rms_norm(x, p["ln1"], cfg.norm_eps, rs), cfg)
         x = x + h
         h, fx = rwkv_channel_mix(
-            p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
+            p, rms_norm(x, p["ln2"], cfg.norm_eps, rs), cfg,
             lut_tables=lut_tables, layer=layer)
         x = x + h
         ys = ({"att_x": ax, "ffn_x": fx, "wkv": wkv} if collect_states
@@ -441,7 +458,7 @@ def rwkv_forward(params, cfg, tokens, states=None, remat=False,
 
 def rwkv_loss(params, cfg, batch, lut_tables=None, remat=False, **_):
     x, _ = rwkv_forward(params, cfg, batch["tokens"], remat=remat)
-    logits = logits_projection(x, params["lm_head"])
+    logits = project_logits(x, params["lm_head"], cfg, lut_tables)
     return softmax_cross_entropy(logits, batch["labels"])
 
 
@@ -502,14 +519,15 @@ def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
             # Global mlp-site index: groups are laid out contiguously, one
             # mlp per pattern element — matches serve.plans' L{i} numbering.
             layer = None if group is None else group * len(pattern) + i
-            xin = rms_norm(x, p[f"t{i}_ln"], cfg.norm_eps)
+            rs = site_act(cfg, lut_tables, sites.NORM_RSQRT, layer)
+            xin = rms_norm(x, p[f"t{i}_ln"], cfg.norm_eps, rs)
             h, s = _hybrid_temporal(kind, p[f"t{i}_{kind}"], xin, cfg, pos,
                                     state=st.get(f"t{i}") if decode else None,
                                     mode=mode)
             new_st[f"t{i}"] = s
             x = x + h
             h = mlp_block(p[f"m{i}"], rms_norm(x, p[f"m{i}_ln"],
-                                               cfg.norm_eps), cfg,
+                                               cfg.norm_eps, rs), cfg,
                           lut_tables, layer=layer)
             x = x + h
         return x, new_st if collect else jnp.zeros((), jnp.float32)
@@ -528,7 +546,8 @@ def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
         while f"t{i}_rec" in tp_:
             p_rec = jax.tree.map(lambda a: a[0], tp_[f"t{i}_rec"])
             ln = tp_[f"t{i}_ln"][0]
-            xin = rms_norm(x, ln, cfg.norm_eps)
+            rs = site_act(cfg, lut_tables, sites.NORM_RSQRT, tail_base + i)
+            xin = rms_norm(x, ln, cfg.norm_eps, rs)
             st = states["tail"].get(f"t{i}") if decode else None
             if decode:
                 h, s = recurrent_block_step(p_rec, xin, cfg, st)
@@ -541,7 +560,7 @@ def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
             # mlp-site index is always available — stacked and unrolled
             # per-layer tables both resolve it.
             h = mlp_block(mp, rms_norm(x, tp_[f"m{i}_ln"][0],
-                                       cfg.norm_eps), cfg, lut_tables,
+                                       cfg.norm_eps, rs), cfg, lut_tables,
                           layer=tail_base + i)
             x = x + h
             i += 1
@@ -553,7 +572,7 @@ def hybrid_forward(params, cfg, tokens, states=None, pos=0, remat=False,
 
 def hybrid_loss(params, cfg, batch, lut_tables=None, remat=False, **_):
     x, _ = hybrid_forward(params, cfg, batch["tokens"], remat=remat)
-    logits = logits_projection(x, params["lm_head"])
+    logits = project_logits(x, params["lm_head"], cfg, lut_tables)
     return softmax_cross_entropy(logits, batch["labels"])
 
 
@@ -591,11 +610,13 @@ def encdec_forward(params, cfg, tokens, enc_out, collect_kv=False,
     x = embed_lookup(params["embed"], tokens)
 
     def body(x, p, layer):
-        h, kv = _attn_apply(p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
-                            causal=True, rope=True)
+        rs = site_act(cfg, lut_tables, sites.NORM_RSQRT, layer)
+        h, kv = _attn_apply(p, rms_norm(x, p["ln1"], cfg.norm_eps, rs), cfg,
+                            causal=True, rope=True, lut_tables=lut_tables,
+                            layer=layer)
         x = x + h
         # cross attention (encoder K/V computed per layer)
-        xin = rms_norm(x, p["lnx"], cfg.norm_eps)
+        xin = rms_norm(x, p["lnx"], cfg.norm_eps, rs)
         b, t, d = xin.shape
         q = jnp.einsum("btd,dq->btq", xin, p["xwq"]).reshape(
             b, t, cfg.n_heads, cfg.d_head)
@@ -603,11 +624,12 @@ def encdec_forward(params, cfg, tokens, enc_out, collect_kv=False,
             b, -1, cfg.n_kv_heads, cfg.d_head)
         ev = jnp.einsum("bsd,dq->bsq", enc_out, p["xwv"]).reshape(
             b, -1, cfg.n_kv_heads, cfg.d_head)
-        h = mha(q, ek, ev, causal=False)
+        h = mha(q, ek, ev, causal=False,
+                exp_fn=site_act(cfg, lut_tables, sites.ATTN_EXP, layer))
         h = shard(h, "dp", None, "tp", None)
         h = jnp.einsum("btq,qd->btd", h.reshape(b, t, cfg.q_dim), p["xwo"])
         x = x + h
-        h = mlp_block(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
+        h = mlp_block(p, rms_norm(x, p["ln2"], cfg.norm_eps, rs), cfg,
                       lut_tables, layer=layer)
         out = (jnp.zeros((), jnp.float32), kv if collect_kv else None)
         return x + h, out
@@ -621,7 +643,7 @@ def encdec_forward(params, cfg, tokens, enc_out, collect_kv=False,
 def encdec_loss(params, cfg, batch, lut_tables=None, remat=False, **_):
     enc = encoder_forward(params, cfg, batch["frames"], remat=remat)
     x, _ = encdec_forward(params, cfg, batch["tokens"], enc, remat=remat)
-    logits = logits_projection(x, params["lm_head"])
+    logits = project_logits(x, params["lm_head"], cfg, lut_tables)
     return softmax_cross_entropy(logits, batch["labels"])
 
 

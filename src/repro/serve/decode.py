@@ -11,9 +11,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import sites
 from repro.configs.base import ArchConfig
-from repro.nn.layers import logits_projection, rms_norm
-from repro.nn.mlp import mlp_block, run_layers
+from repro.nn.layers import rms_norm
+from repro.nn.mlp import mlp_block, project_logits, run_layers, site_act
 from repro.nn.moe import moe_block
 from repro.nn.transformer import (
     _attn_apply,
@@ -38,7 +39,7 @@ def decoder_prefill(params, cfg, batch, max_seq: int | None = None,
     x, _, kvs = decoder_forward(
         params, cfg, tokens, patches=batch.get("patches"), collect_kv=True,
         lut_tables=lut_tables)
-    logits = logits_projection(x[:, -1:], params["lm_head"])
+    logits = project_logits(x[:, -1:], params["lm_head"], cfg, lut_tables)
     k, v = kvs
     cache = {"k": k, "v": v}
     if max_seq and max_seq > k.shape[2]:
@@ -56,17 +57,19 @@ def decoder_decode_step(params, cfg, cache, tokens, pos,
     int8 = "k_scale" in cache
 
     def body(x, inp, layer):
+        rs = site_act(cfg, lut_tables, sites.NORM_RSQRT, layer)
         if int8:
             p, kc, vc, ksc, vsc = inp
             h, (kc, ksc), (vc, vsc) = _decode_attn(
-                p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg, kc, vc, pos,
-                scales=(ksc, vsc))
+                p, rms_norm(x, p["ln1"], cfg.norm_eps, rs), cfg, kc, vc,
+                pos, scales=(ksc, vsc), lut_tables=lut_tables, layer=layer)
         else:
             p, kc, vc = inp
             h, kc, vc = _decode_attn(
-                p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg, kc, vc, pos)
+                p, rms_norm(x, p["ln1"], cfg.norm_eps, rs), cfg, kc, vc,
+                pos, lut_tables=lut_tables, layer=layer)
         x = x + h
-        hin = rms_norm(x, p["ln2"], cfg.norm_eps)
+        hin = rms_norm(x, p["ln2"], cfg.norm_eps, rs)
         if cfg.moe:
             shared = None
             if cfg.moe.n_shared:
@@ -94,7 +97,7 @@ def decoder_decode_step(params, cfg, cache, tokens, pos,
             lut_tables=lut_tables)
         new_cache = {"k": ks, "v": vs}
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = logits_projection(x, params["lm_head"])
+    logits = project_logits(x, params["lm_head"], cfg, lut_tables)
     return logits, new_cache
 
 
@@ -119,7 +122,7 @@ def encdec_prefill(params, cfg, batch, max_seq: int | None = None,
     xks, xvs = jax.vmap(xkv)(params["dec_blocks"])
     x, kvs = encdec_forward(params, cfg, batch["tokens"], enc,
                             collect_kv=True, lut_tables=lut_tables)
-    logits = logits_projection(x[:, -1:], params["lm_head"])
+    logits = project_logits(x[:, -1:], params["lm_head"], cfg, lut_tables)
     k, v = kvs
     cache = {"k": k, "v": v, "xk": xks.astype(k.dtype),
              "xv": xvs.astype(k.dtype)}
@@ -133,17 +136,20 @@ def encdec_decode_step(params, cfg, cache, tokens, pos, lut_tables=None):
 
     def body(x, inp, layer):
         p, kc, vc, xk, xv = inp
+        rs = site_act(cfg, lut_tables, sites.NORM_RSQRT, layer)
         h, kc, vc = _decode_attn(
-            p, rms_norm(x, p["ln1"], cfg.norm_eps), cfg, kc, vc, pos)
+            p, rms_norm(x, p["ln1"], cfg.norm_eps, rs), cfg, kc, vc, pos,
+            lut_tables=lut_tables, layer=layer)
         x = x + h
-        xin = rms_norm(x, p["lnx"], cfg.norm_eps)
+        xin = rms_norm(x, p["lnx"], cfg.norm_eps, rs)
         b = xin.shape[0]
         q = jnp.einsum("btd,dq->btq", xin, p["xwq"]).reshape(
             b, 1, cfg.n_heads, cfg.d_head)
-        h = mha(q, xk, xv, causal=False)
+        h = mha(q, xk, xv, causal=False,
+                exp_fn=site_act(cfg, lut_tables, sites.ATTN_EXP, layer))
         h = jnp.einsum("btq,qd->btd", h.reshape(b, 1, cfg.q_dim), p["xwo"])
         x = x + h
-        h = mlp_block(p, rms_norm(x, p["ln2"], cfg.norm_eps), cfg,
+        h = mlp_block(p, rms_norm(x, p["ln2"], cfg.norm_eps, rs), cfg,
                       lut_tables, layer=layer)
         return x + h, (kc, vc)
 
@@ -153,7 +159,7 @@ def encdec_decode_step(params, cfg, cache, tokens, pos, lut_tables=None):
          cache["xv"]),
         lut_tables=lut_tables)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = logits_projection(x, params["lm_head"])
+    logits = project_logits(x, params["lm_head"], cfg, lut_tables)
     return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}
 
 
@@ -164,14 +170,14 @@ def rwkv_prefill(params, cfg, batch, max_seq: int | None = None,
                  lut_tables=None):
     x, states = rwkv_forward(params, cfg, batch["tokens"],
                              collect_states=True, lut_tables=lut_tables)
-    logits = logits_projection(x[:, -1:], params["lm_head"])
+    logits = project_logits(x[:, -1:], params["lm_head"], cfg, lut_tables)
     return logits, states
 
 
 def rwkv_decode_step(params, cfg, cache, tokens, pos, lut_tables=None):
     x, states = rwkv_forward(params, cfg, tokens, states=cache,
                              lut_tables=lut_tables)
-    logits = logits_projection(x, params["lm_head"])
+    logits = project_logits(x, params["lm_head"], cfg, lut_tables)
     return logits, states
 
 
@@ -179,14 +185,14 @@ def hybrid_prefill(params, cfg, batch, max_seq: int | None = None,
                    lut_tables=None):
     x, states = hybrid_forward(params, cfg, batch["tokens"], mode="prefill",
                                lut_tables=lut_tables)
-    logits = logits_projection(x[:, -1:], params["lm_head"])
+    logits = project_logits(x[:, -1:], params["lm_head"], cfg, lut_tables)
     return logits, states
 
 
 def hybrid_decode_step(params, cfg, cache, tokens, pos, lut_tables=None):
     x, states = hybrid_forward(params, cfg, tokens, states=cache, pos=pos,
                                mode="decode", lut_tables=lut_tables)
-    logits = logits_projection(x, params["lm_head"])
+    logits = project_logits(x, params["lm_head"], cfg, lut_tables)
     return logits, states
 
 

@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sites as site_registry
 from repro.calib import CalibrationSet
 from repro.configs.base import ArchConfig
 from repro.core import (
@@ -82,33 +83,22 @@ DEFAULT_COMPRESS = dict(exiguity=250, m_candidates=(8, 16, 32, 64),
 PER_LAYER_FAMILIES = ("dense", "moe", "vlm", "ssm", "hybrid", "encdec")
 
 
-def base_activation(name: str) -> str:
-    """The elementwise nonlinearity inside a (possibly gated) MLP."""
-    if name in ("swiglu", "silu"):
-        return "silu"
-    if name in ("geglu", "gelu"):
-        return "gelu"
-    return name
+# Re-export: the base-activation mapping lives with the site registry now.
+base_activation = site_registry.base_activation
 
 
 def activation_sites(cfg: ArchConfig) -> list[tuple[str, str]]:
-    """``(site, act)`` kinds per layer for one architecture family.
+    """``(site, fn)`` kinds for one architecture config, in registry order.
 
     ``site`` is the table key the nn layer resolves at runtime
-    (``repro.nn.mlp.site_tables``): ``"mlp"`` for dense FFN blocks,
-    ``"expert"`` for the MoE per-expert activation, ``"ffn"`` for the RWKV
-    channel-mix squared-ReLU.
+    (``repro.nn.mlp.site_tables``); which sites appear is decided by the
+    :mod:`repro.sites` registry — the config's family, each spec's
+    ``enabled`` gate, and the config's ``lut_sites`` scope selector
+    (default ``"act"``: just the activation sites, the pre-registry
+    behavior).
     """
-    act = base_activation(cfg.activation)
-    if cfg.family == "moe" or cfg.moe is not None:
-        sites = [("expert", "silu")]
-        if cfg.moe is not None and cfg.moe.n_shared:
-            sites.append(("mlp", act))
-        return sites
-    if cfg.family == "ssm":
-        return [("ffn", "relu2")]
-    # dense / vlm / hybrid / encdec all route their FFN through mlp_block
-    return [("mlp", act)]
+    return [(spec.key, spec.fn_name(cfg))
+            for spec in site_registry.active_sites(cfg)]
 
 
 @dataclasses.dataclass
@@ -245,53 +235,98 @@ class ServingPlans:
                 + f" | engine: {self.report.summary()}")
 
 
-def _shared_specs(cfg, kinds, calibration, w_in, w_out, x_lo, x_hi):
+@dataclasses.dataclass(frozen=True)
+class _SpecMeta:
+    """Per-TableSpec assembly record carried from spec building to plan
+    materialization: the served site key, its scalar function, output
+    quantization, whether the site is a per-layer one, and the (possibly
+    site-specific) tabulation domain the LUT dequantizes over."""
+
+    site: str
+    act: str
+    quant: dict
+    per_layer: bool
+    x_lo: float
+    x_hi: float
+
+
+def _shared_specs(cfg, site_specs, calibration, w_in, w_out, x_lo, x_hi):
     """Legacy shared-calibration path: tabulate + calibrate once per
-    distinct activation function — the per-layer specs are renamed views
-    of the same table, so there is no reason to re-histogram the
+    distinct ``(function, domain)`` — the per-layer specs are renamed
+    views of the same table, so there is no reason to re-histogram the
     calibration array per layer just to feed tables the engine dedupe
     collapses."""
-    by_act: dict[str, tuple[TableSpec, dict]] = {}
-    for _, act in kinds:
-        if act not in by_act:
-            by_act[act] = activation_table(
+    cache: dict[tuple, tuple[TableSpec, dict]] = {}
+
+    def tabulate(sp):
+        act = sp.fn_name(cfg)
+        lo, hi = sp.domain() or (x_lo, x_hi)
+        key = (act, lo, hi)
+        if key not in cache:
+            cache[key] = activation_table(
                 act, calibration, w_in=w_in, w_out=w_out,
-                x_lo=x_lo, x_hi=x_hi, name=f"act_{act}")
+                x_lo=lo, x_hi=hi, name=f"act_{act}")
+        spec, quant = cache[key]
+        return spec, quant, act, lo, hi
+
     specs: list[TableSpec] = []
-    metas: list[tuple[str, str, dict]] = []
+    metas: list[_SpecMeta] = []
+    for sp in site_specs:
+        if sp.per_layer:
+            continue
+        spec, quant, act, lo, hi = tabulate(sp)
+        specs.append(dataclasses.replace(spec, name=sp.key))
+        metas.append(_SpecMeta(sp.key, act, quant, False, lo, hi))
     for layer in range(cfg.n_layers):
-        for site, act in kinds:
-            spec, quant = by_act[act]
-            specs.append(dataclasses.replace(spec, name=f"L{layer}/{site}"))
-            metas.append((site, act, quant))
+        for sp in site_specs:
+            if not sp.per_layer:
+                continue
+            spec, quant, act, lo, hi = tabulate(sp)
+            specs.append(dataclasses.replace(spec,
+                                             name=f"L{layer}/{sp.key}"))
+            metas.append(_SpecMeta(sp.key, act, quant, True, lo, hi))
     return specs, metas
 
 
-def _per_site_specs(cfg, kinds, calib: CalibrationSet, w_in, w_out,
+def _per_site_specs(cfg, site_specs, calib: CalibrationSet, w_in, w_out,
                     x_lo, x_hi):
     """Per-site calibration path: one care mask (and output quantization)
     per ``(layer, site)`` from the captured CalibrationSet; falls back to
     the site-kind mask where no per-layer key exists (a layer-agnostic
-    capture, e.g. an old artifact).  ``w_out`` may be a per-site-kind dict
-    (the tuned-plan width override) — a site's layers must share one
+    capture, e.g. an old artifact).  Network-global sites
+    (``per_layer=False`` in the registry, e.g. the logit softcap) get one
+    spec total under their bare key.  ``w_out`` may be a per-site-kind
+    dict (the tuned-plan width override) — a site's layers must share one
     output width so their plans can stack."""
     specs: list[TableSpec] = []
-    metas: list[tuple[str, str, dict]] = []
+    metas: list[_SpecMeta] = []
     layered = cfg.family in PER_LAYER_FAMILIES
+
+    def add(sp, layer):
+        lyr = layer if (layered and sp.per_layer) else None
+        care = calib.mask_for(sp.key, lyr)
+        if care is None:
+            raise ValueError(
+                f"build_serving_plans: calibration has no mask for "
+                f"site {sp.key!r} (layer {lyr}); captured sites: "
+                f"{calib.sites()}")
+        act = sp.fn_name(cfg)
+        lo, hi = sp.domain() or (x_lo, x_hi)
+        w_out_site = w_out[sp.key] if isinstance(w_out, dict) else w_out
+        name = sp.key if layer is None else f"L{layer}/{sp.key}"
+        spec, quant = activation_table(
+            act, care=care, w_in=w_in, w_out=w_out_site, x_lo=lo,
+            x_hi=hi, name=name)
+        specs.append(spec)
+        metas.append(_SpecMeta(sp.key, act, quant, sp.per_layer, lo, hi))
+
+    for sp in site_specs:
+        if not sp.per_layer:
+            add(sp, None)
     for layer in range(cfg.n_layers):
-        for site, act in kinds:
-            care = calib.mask_for(site, layer if layered else None)
-            if care is None:
-                raise ValueError(
-                    f"build_serving_plans: calibration has no mask for "
-                    f"site {site!r} (layer {layer}); captured sites: "
-                    f"{calib.sites()}")
-            w_out_site = w_out[site] if isinstance(w_out, dict) else w_out
-            spec, quant = activation_table(
-                act, care=care, w_in=w_in, w_out=w_out_site, x_lo=x_lo,
-                x_hi=x_hi, name=f"L{layer}/{site}")
-            specs.append(spec)
-            metas.append((site, act, quant))
+        for sp in site_specs:
+            if sp.per_layer:
+                add(sp, layer)
     return specs, metas
 
 
@@ -324,9 +359,11 @@ def build_serving_plans(
     place (``plan_exec="stacked"``); ``plan_exec="unrolled"`` keeps the
     python-unrolled reference form.
 
-    ``w_out`` may be a dict mapping site kinds (``"mlp"``/``"expert"``/
-    ``"ffn"``) to per-site output widths — the tuned-plan width override
-    (:mod:`repro.tune`) — on the per-site calibration path only.
+    ``w_out`` may be a dict mapping registered site keys
+    (:func:`repro.sites.all_sites`) to per-site output widths — the
+    tuned-plan width override (:mod:`repro.tune`) — on the per-site
+    calibration path only.  Keys that are not registered site kinds raise
+    ``ValueError`` rather than being silently ignored.
     ``plan_cache`` (a :class:`~repro.core.PlanCache`) shares compression
     results across repeated builds (the autotune sweep).  ``mesh`` binds
     the plans to a placement mesh: every ``tables_for_model`` call then
@@ -344,46 +381,56 @@ def build_serving_plans(
         x_lo, x_hi = calibration.x_lo, calibration.x_hi
     else:
         w_in = w_in or cfg.lut_act_bits_in
-    kinds = activation_sites(cfg)
+    site_specs = site_registry.active_sites(cfg)
     if isinstance(w_out, dict):
         if not per_site:
             raise ValueError(
                 "build_serving_plans: per-site w_out overrides need a "
                 "per-site CalibrationSet (shared calibration serves one "
                 "table per activation kind)")
-        missing = {site for site, _ in kinds} - set(w_out)
+        missing = {sp.key for sp in site_specs} - set(w_out)
         if missing:
             raise ValueError(
                 f"build_serving_plans: per-site w_out has no entry for "
                 f"site kind(s) {sorted(missing)} (got {sorted(w_out)})")
+        registered = {sp.key for sp in site_registry.all_sites()}
+        unknown = set(w_out) - registered
+        if unknown:
+            raise ValueError(
+                f"build_serving_plans: per-site w_out has unknown site "
+                f"kind(s) {sorted(unknown)}; registered kinds: "
+                f"{sorted(registered)}")
     else:
         w_out = w_out or cfg.lut_act_bits_out
     if per_site:
-        specs, metas = _per_site_specs(cfg, kinds, calibration, w_in,
+        specs, metas = _per_site_specs(cfg, site_specs, calibration, w_in,
                                        w_out, x_lo, x_hi)
     else:
-        specs, metas = _shared_specs(cfg, kinds, calibration, w_in, w_out,
-                                     x_lo, x_hi)
+        specs, metas = _shared_specs(cfg, site_specs, calibration, w_in,
+                                     w_out, x_lo, x_hi)
     ccfg = compress_cfg or CompressConfig(**DEFAULT_COMPRESS)
     report = compress_network_report(specs, ccfg, workers=workers,
                                      verbose=verbose, cache=plan_cache)
     layered = per_site and cfg.family in PER_LAYER_FAMILIES
-    sites: dict[str, SitePlan] = {}
-    for (site, act, quant), spec, plan in zip(metas, specs, report.plans):
+    site_plans: dict[str, SitePlan] = {}
+    for meta, spec, plan in zip(metas, specs, report.plans):
+        site = meta.site
+        site_layered = layered and meta.per_layer
         lut = None
-        if layered or site not in sites:
-            lut = lut_activation_from_plan(plan, spec, quant, x_lo=x_lo,
-                                           x_hi=x_hi, exiguity=ccfg.exiguity)
-        if site in sites:
-            sites[site].n_sites += 1
+        if site_layered or site not in site_plans:
+            lut = lut_activation_from_plan(
+                plan, spec, meta.quant, x_lo=meta.x_lo, x_hi=meta.x_hi,
+                exiguity=ccfg.exiguity)
+        if site in site_plans:
+            site_plans[site].n_sites += 1
             if lut is not None:
-                sites[site].luts.append(lut)
+                site_plans[site].luts.append(lut)
             continue
-        sites[site] = SitePlan(site=site, act=act, luts=[lut], n_sites=1,
-                               per_layer=layered)
+        site_plans[site] = SitePlan(site=site, act=meta.act, luts=[lut],
+                                    n_sites=1, per_layer=site_layered)
     return ServingPlans(arch=cfg.name, family=cfg.family, report=report,
-                        sites=sites, backend=backend, plan_exec=plan_exec,
-                        mesh=mesh,
+                        sites=site_plans, backend=backend,
+                        plan_exec=plan_exec, mesh=mesh,
                         calib="per_site" if per_site else "shared")
 
 

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.data import TokenStream
-from repro.nn.layers import logits_projection
+from repro.nn.mlp import project_logits
 
 
 # ---------------------------------------------------------------------------
@@ -64,7 +64,7 @@ def model_logits(params, cfg: ArchConfig, batch: dict, lut_tables=None):
     else:
         raise ValueError(f"model_logits: unknown family {cfg.family!r}")
     x = x[:, -toks.shape[1]:]
-    return logits_projection(x, params["lm_head"])
+    return project_logits(x, params["lm_head"], cfg, lut_tables)
 
 
 def heldout_batches(cfg: ArchConfig, steps: int, batch_size: int = 2,

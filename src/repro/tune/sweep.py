@@ -29,6 +29,7 @@ import math
 
 import numpy as np
 
+from repro import sites as site_registry
 from repro.calib import CalibrationSet, care_mask_from_hist, fold_hist
 from repro.configs.base import ArchConfig
 from repro.core import PlanCache
@@ -209,13 +210,18 @@ def w_out_from_ranges(cfg: ArchConfig, calib: CalibrationSet,
     The default ``w_out`` prices the activation's *full* tabulated range;
     a site whose observed outputs span a fraction of it can keep the same
     output resolution (quantization step) with fewer bits.  Sites without
-    a captured range (v1 artifacts) keep the base width.
+    a captured range (v1 artifacts) keep the base width.  Each site's
+    full range is computed over its registry domain (falling back to the
+    calibration's global grid) so e.g. the rsqrt site never tabulates
+    negative inputs.
     """
     base = base_w_out or cfg.lut_act_bits_out
     w_in = calib.w_in or cfg.lut_act_bits_in
-    xs = np.linspace(calib.x_lo, calib.x_hi, 1 << w_in)
     out: dict[str, int] = {}
-    for site, act in activation_sites(cfg):
+    for spec in site_registry.active_sites(cfg):
+        site, act = spec.key, spec.fn_name(cfg)
+        lo, hi = spec.domain() or (calib.x_lo, calib.x_hi)
+        xs = np.linspace(lo, hi, 1 << w_in)
         ys = ACT_FNS[act](xs)
         full_span = float(ys.max() - ys.min())
         spans = []

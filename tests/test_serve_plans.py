@@ -157,6 +157,74 @@ def test_batcher_serves_lut_plans():
 
 
 # =========================================================================
+# registry-extended sites (attn-exp / rsqrt-norm / softcap / rotary)
+# =========================================================================
+def _captured_plans(cfg, seed=1):
+    """Capture 2 synthetic batches -> per-site plans for cfg's scope."""
+    from repro.calib import capture_calibration, synthetic_batches
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batches = synthetic_batches(cfg, 2, batch_size=2, seq_len=8, seed=seed)
+    calib = capture_calibration(params, cfg, batches)
+    return params, batches, build_serving_plans(cfg, calib)
+
+
+def _assert_stacked_unrolled_identity(cfg, params, plans, prompt, n_new=3):
+    toks = verify_backend_equivalence(cfg, params, plans, prompt, n_new)
+    toks_u = verify_backend_equivalence(cfg, params, plans, prompt, n_new,
+                                        plan_exec="unrolled")
+    assert toks == toks_u, (
+        f"stacked vs unrolled token divergence: {toks} != {toks_u}")
+    return toks
+
+
+@pytest.mark.parametrize("site", ["attn_exp", "norm_rsqrt", "rope_table"])
+def test_new_site_backend_equivalence(site):
+    """Each new per-layer site kind serves end-to-end: captured, built,
+    and bit-identical gather==pallas in both execution forms."""
+    from repro import sites
+
+    cfg = dataclasses.replace(smoke_config(get_config("qwen3-0.6b")),
+                              lut_sites=(sites.MLP, site))
+    params, batches, plans = _captured_plans(cfg)
+    assert site in plans.sites and plans.sites[site].per_layer
+    assert plans.sites[site].luts[0].dontcare_frac > 0
+    _assert_stacked_unrolled_identity(cfg, params, plans,
+                                      batches[0]["tokens"][:, :6])
+
+
+def test_all_sites_dense_with_softcap():
+    """lut_sites='all' + logit_softcap serves every registered dense site
+    (the network-global softcap included) token-identically across
+    backends and execution forms."""
+    from repro import sites
+
+    cfg = dataclasses.replace(smoke_config(get_config("qwen3-0.6b")),
+                              lut_sites="all", logit_softcap=30.0)
+    params, batches, plans = _captured_plans(cfg)
+    assert set(plans.sites) == {sites.MLP, sites.ATTN_EXP,
+                                sites.NORM_RSQRT, sites.LOGIT_SOFTCAP,
+                                sites.ROPE}
+    assert not plans.sites[sites.LOGIT_SOFTCAP].per_layer
+    _assert_stacked_unrolled_identity(cfg, params, plans,
+                                      batches[0]["tokens"][:, :6])
+
+
+def test_all_sites_ssm_recurrent_scope():
+    """The recurrent family hosts no attention/rope sites; its ffn +
+    rsqrt + softcap tables still serve bit-identically."""
+    from repro import sites
+
+    cfg = dataclasses.replace(smoke_config(get_config("rwkv6-3b")),
+                              lut_sites="all", logit_softcap=30.0)
+    params, batches, plans = _captured_plans(cfg)
+    assert set(plans.sites) == {sites.FFN, sites.NORM_RSQRT,
+                                sites.LOGIT_SOFTCAP}
+    _assert_stacked_unrolled_identity(cfg, params, plans,
+                                      batches[0]["tokens"][:, :6])
+
+
+# =========================================================================
 # degenerate calibration guards
 # =========================================================================
 def test_calibrate_bins_rejects_empty():

@@ -1,0 +1,149 @@
+"""Declarative LUT site registry: enumeration invariants, scope gating,
+the legacy single-table deprecation shim, and the w_out unknown-kind
+guard."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import sites
+from repro.calib import CalibrationSet
+from repro.configs import get_config, smoke_config
+from repro.serve import activation_sites, build_serving_plans
+
+FAMILY_ARCHS = {
+    "dense": "qwen3-0.6b",
+    "moe": "deepseek-moe-16b",
+    "vlm": "phi-3-vision-4.2b",
+    "ssm": "rwkv6-3b",
+    "hybrid": "recurrentgemma-9b",
+    "encdec": "whisper-small",
+}
+ALL_KEYS = [s.key for s in sites.all_sites()]
+
+
+def _cfg(family, scope="act", softcap=None):
+    cfg = smoke_config(get_config(FAMILY_ARCHS[family]))
+    return dataclasses.replace(cfg, lut_sites=scope, logit_softcap=softcap)
+
+
+# =========================================================================
+# registry enumeration invariants (all six families)
+# =========================================================================
+@given(
+    family=st.sampled_from(sorted(FAMILY_ARCHS)),
+    scope=st.sampled_from(["act", "all", ("mlp",), ("mlp", "norm_rsqrt"),
+                           ("attn_exp", "rope_table"), ()]),
+    softcap=st.sampled_from([None, 30.0]),
+)
+@settings(max_examples=40, deadline=None)
+def test_site_enumeration_stable_and_collision_free(family, scope, softcap):
+    cfg = _cfg(family, scope, softcap)
+    active = sites.active_sites(cfg)
+    hosted = sites.hosted_sites(cfg)
+    # deterministic: a second enumeration is identical
+    assert active == sites.active_sites(cfg)
+    assert hosted == sites.hosted_sites(cfg)
+    # collision-free keys, subset chain active <= hosted <= registered
+    keys = [s.key for s in active]
+    assert len(keys) == len(set(keys))
+    assert set(keys) <= {s.key for s in hosted} <= set(ALL_KEYS)
+    # registry order is preserved by every enumeration
+    assert keys == [k for k in ALL_KEYS if k in set(keys)]
+    # key -> spec round-trips through the lookup API
+    for spec in active:
+        assert sites.site_spec(spec.key) is spec
+        assert spec.hosts(cfg) and spec.in_scope(cfg)
+    # scope semantics
+    if scope == "act":
+        assert all(s.kind == "act" for s in active)
+        assert [s for s in hosted if s.kind == "act"] == list(active)
+    elif scope == "all":
+        assert active == hosted
+    else:
+        assert set(keys) <= set(scope)
+    # the serving-plan enumeration is exactly the registry view
+    assert activation_sites(cfg) == [(s.key, s.fn_name(cfg))
+                                     for s in active]
+
+
+def test_every_family_hosts_expected_new_sites():
+    for family in FAMILY_ARCHS:
+        hosted = {s.key for s in sites.hosted_sites(_cfg(family, "all"))}
+        assert sites.NORM_RSQRT in hosted, family
+        if family in ("hybrid", "ssm"):
+            # recurrent layers host no attention: stacked slabs would be
+            # empty or misindexed, so these sites must not appear
+            assert sites.ATTN_EXP not in hosted, family
+            assert sites.ROPE not in hosted, family
+        else:
+            assert sites.ATTN_EXP in hosted, family
+            assert sites.ROPE in hosted, family
+    # the softcap site only exists when the config actually caps
+    assert sites.LOGIT_SOFTCAP not in {
+        s.key for s in sites.hosted_sites(_cfg("dense", "all"))}
+    assert sites.LOGIT_SOFTCAP in {
+        s.key for s in sites.hosted_sites(_cfg("dense", "all", 30.0))}
+
+
+def test_register_site_conflict_and_unknown_key():
+    spec = sites.site_spec(sites.MLP)
+    assert sites.register_site(spec) is spec   # identical re-register ok
+    with pytest.raises(ValueError, match="already registered"):
+        sites.register_site(dataclasses.replace(spec, kind="norm"))
+    with pytest.raises(KeyError, match="registered"):
+        sites.site_spec("nonexistent_site")
+
+
+def test_default_scope_matches_pre_registry_enumeration():
+    """The default lut_sites='act' reproduces the historical site lists."""
+    assert activation_sites(_cfg("dense")) == [("mlp", "silu")]
+    assert activation_sites(_cfg("ssm")) == [("ffn", "relu2")]
+    moe = activation_sites(_cfg("moe"))
+    assert ("expert", "silu") in moe
+
+
+# =========================================================================
+# legacy single-table dict acceptance (deprecation shim)
+# =========================================================================
+def test_bare_table_dict_deprecation_shim():
+    from repro.nn.mlp import site_tables
+
+    bare = {"meta": {"w_in": 8}, "arrays": {}}
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        entry = site_tables(bare)
+    assert entry is bare                       # resolved as the MLP site
+    with pytest.warns(DeprecationWarning):
+        assert site_tables(bare, sites.EXPERT) is None
+    # pass-throughs never warn
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert sites.coerce_site_tables(None) is None
+        new = {"sites": {sites.MLP: bare}, "backend": "gather"}
+        assert sites.coerce_site_tables(new) is new
+        assert site_tables(new) is bare
+
+
+# =========================================================================
+# w_out dict validation (unknown kinds must not be silently ignored)
+# =========================================================================
+def _dense_calib(cfg, w_in=6):
+    mask = np.zeros(1 << w_in, bool)
+    mask[10:50] = True
+    masks = {f"L{l}/{sites.MLP}": mask.copy() for l in range(cfg.n_layers)}
+    return CalibrationSet(masks=masks, w_in=w_in, x_lo=-8.0, x_hi=8.0)
+
+
+def test_w_out_unknown_site_kind_raises():
+    cfg = _cfg("dense")
+    calib = _dense_calib(cfg)
+    with pytest.raises(ValueError, match="registered kinds"):
+        build_serving_plans(cfg, calib, w_out={"mlp": 6, "bogus": 8})
+    # the existing missing-entry guard still fires first
+    with pytest.raises(ValueError, match="no entry for"):
+        build_serving_plans(cfg, calib, w_out={"bogus": 8})
+    # a fully-valid dict builds
+    plans = build_serving_plans(cfg, calib, w_out={"mlp": 6})
+    assert set(plans.sites) == {sites.MLP}
