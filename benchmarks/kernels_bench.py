@@ -1,36 +1,94 @@
-"""Kernel micro-benchmarks (interpret mode — correctness-path timing on
-CPU; TPU is the lowering target, see kernels/*.py)."""
+"""Kernel micro-benchmarks: the LUT hot path, isolated vs fused.
+
+Times, on the local backend (interpret mode off-TPU — correctness-path
+numbers; TPU is the lowering target, see kernels/*.py):
+
+  - the legacy single-table kernels (``lut_reconstruct``, ``lutnn_layer``,
+    ``lut_act``) plus the bit-packed slab variant of ``lut_act``,
+  - the stacked per-layer kernel (``lut_act_stacked``), raw vs packed
+    slabs, on real per-site plans from a smoke model,
+  - one serving step's site family three ways: S isolated
+    ``lut_act_stacked`` launches, the single-grid multi-site kernel
+    (``lut_act_multi`` over the ``(S, L, n)`` super-slab), and — for the
+    matmul-fed activation site — the matmul-epilogue fusion
+    (``fused_matmul_lut``) against its unfused einsum + LUT reference,
+
+so the kernel roofline finally meets the serving path: the same
+isolated/multi-site/fused axis ``BENCH_serve.json`` prices end-to-end is
+priced here per launch, next to the packed-vs-raw table bytes.
+
+Writes the trajectory file ``BENCH_kernels.json`` (schema:
+``kernels_bench/v1``):
+
+  PYTHONPATH=src python benchmarks/kernels_bench.py
+
+``run()`` keeps the ``(name, us, info)`` row contract used by
+``benchmarks/run.py``.
+"""
 from __future__ import annotations
 
+import argparse
+import dataclasses
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.calib import capture_calibration, synthetic_batches
+from repro.configs import get_config, smoke_config
 from repro.core import CompressConfig, TableSpec, compress_table
-from repro.kernels import PlanArrays, lut_act, lut_reconstruct, lutnn_layer
+from repro.kernels import (
+    PlanArrays,
+    default_interpret,
+    lut_act,
+    lut_act_multi,
+    lut_act_stacked,
+    lut_reconstruct,
+    lutnn_layer,
+)
+from repro.kernels.fused_matmul_lut import fused_matmul_lut
+from repro.kernels.packing import packed_nbytes
+from repro.nn import init_params
+from repro.serve import build_serving_plans, tables_nbytes
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_kernels.json")
 
 
-def _time(fn, *args, iters=5, **kw):
-    fn(*args, **kw).block_until_ready()  # compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args, **kw)
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+def _time(fn, *args, iters=5, repeats=3, **kw):
+    """Best-of-``repeats`` mean microseconds per call (compile excluded).
+
+    The best-of guard matters off-TPU: interpret-mode dispatch shares the
+    host with everything else and single-pass means wander by tens of
+    percent run to run.
+    """
+    out = fn(*args, **kw)  # compile
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+    return best
 
 
-def run() -> list[tuple[str, float, str]]:
+def _legacy_rows(iters) -> list[dict]:
+    """The original single-table kernel rows, plus the packed-slab twin
+    of ``lut_act`` (same plan, bit-packed components, in-kernel unpack)."""
     rows = []
     spec = TableSpec.random(12, 8, 0.4, 0, smooth=True)
     plan = compress_table(spec, CompressConfig(exiguity=100,
                                                m_candidates=(16, 64)))
     pa = PlanArrays.from_plan(plan)
     x = jnp.asarray(np.random.default_rng(0).integers(0, 4096, 8192))
-    us = _time(lut_reconstruct, x, pa)
-    rows.append(("lut_reconstruct_8k", us,
-                 f"kind={plan.kind};pluts={plan.plut_cost()}"))
+    us = _time(lut_reconstruct, x, pa, iters=iters)
+    rows.append({"name": "lut_reconstruct_8k", "us": us,
+                 "info": f"kind={plan.kind};pluts={plan.plut_cost()}"})
 
     codes = jnp.asarray(
         np.random.default_rng(1).integers(0, 4, (256, 64)), jnp.int32)
@@ -38,11 +96,158 @@ def run() -> list[tuple[str, float, str]]:
         np.random.default_rng(2).integers(0, 64, (32, 6)), jnp.int32)
     tables = jnp.asarray(
         np.random.default_rng(3).integers(0, 4, (32, 4096)), jnp.int32)
-    us = _time(lutnn_layer, codes, conn, tables, bits=2)
-    rows.append(("lutnn_layer_256x32", us, "bits=2;fanin=6"))
+    us = _time(lutnn_layer, codes, conn, tables, bits=2, iters=iters)
+    rows.append({"name": "lutnn_layer_256x32", "us": us,
+                 "info": "bits=2;fanin=6"})
 
     xf = jnp.asarray(np.random.default_rng(4).normal(size=(256, 512)),
                      jnp.bfloat16)
-    us = _time(lut_act, xf, pa, x_lo=-4.0, x_hi=4.0, y_lo=-1.0, y_hi=1.0)
-    rows.append(("lut_act_256x512_bf16", us, "w_in=12;w_out=8"))
+    kw = dict(x_lo=-4.0, x_hi=4.0, y_lo=-1.0, y_hi=1.0)
+    us = _time(lut_act, xf, pa, iters=iters, **kw)
+    raw_b = sum(int(a.size) * a.dtype.itemsize for a in pa.arrays.values())
+    rows.append({"name": "lut_act_256x512_bf16", "us": us,
+                 "info": f"w_in=12;w_out=8;bytes={raw_b}"})
+
+    pp = PlanArrays.from_plan(plan, packed=True)
+    us = _time(lut_act, xf, pp, iters=iters, **kw)
+    rows.append({"name": "lut_act_256x512_bf16_packed", "us": us,
+                 "info": f"bytes={packed_nbytes(pp.arrays)}"})
     return rows
+
+
+def _hot_path_rows(iters) -> tuple[list[dict], dict]:
+    """Isolated vs multi-site vs fused on real per-site smoke plans."""
+    cfg = dataclasses.replace(smoke_config(get_config("qwen3-0.6b")),
+                              dtype="float32", lut_sites="all")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    calib = capture_calibration(
+        params, cfg, synthetic_batches(cfg, 1, batch_size=2, seq_len=8,
+                                       seed=1),
+        w_in=cfg.lut_act_bits_in)
+    plans = build_serving_plans(cfg, calib, w_out=8, backend="pallas",
+                                plan_exec="stacked")
+    per_layer = sorted(k for k, sp in plans.sites.items() if sp.per_layer)
+    rows = []
+    rng = np.random.default_rng(7)
+
+    # -- stacked exec, one site: raw vs packed slabs ----------------------
+    site0 = per_layer[0]
+    sp0 = plans.sites[site0]
+    meta0 = sp0.lut.meta()
+    x0 = jnp.asarray(rng.uniform(meta0["x_lo"], meta0["x_hi"],
+                                 (256, 512)), jnp.float32)
+    for packed in (False, True):
+        entry = sp0.entry("stacked", packed=packed)["stacked"]
+        f = jax.jit(lambda x, e=entry: lut_act_stacked(x, e, 0))
+        us = _time(f, x0, iters=iters)
+        nb = tables_nbytes(entry["arrays"])
+        rows.append({
+            "name": f"lut_act_stacked_{'packed' if packed else 'raw'}",
+            "us": us,
+            "info": f"site={site0};L={sp0.stacked().n_layers};"
+                    f"shape=256x512;bytes={nb}"})
+
+    # -- one serving step's per-layer family: S isolated launches vs the
+    #    single-grid multi-site kernel over the (S, L, n) super-slab ------
+    multi = plans.tables_for_model(backend="pallas", plan_exec="stacked",
+                                   kernel="fused")["multi"]
+    site_meta = multi["meta"]["site_meta"]
+    xs = {}
+    for i, site in enumerate(per_layer):
+        sm = site_meta[site]
+        xs[site] = jnp.asarray(
+            rng.uniform(sm["x_lo"], sm["x_hi"], (64, 128 + 64 * (i % 2))),
+            jnp.float32)
+    entries = {s: plans.sites[s].entry("stacked", packed=True)["stacked"]
+               for s in per_layer}
+
+    def _isolated(xs):
+        return {s: lut_act_stacked(x, entries[s], 0)
+                for s, x in xs.items()}
+
+    iso = jax.jit(_isolated)
+    one = jax.jit(lambda xs: lut_act_multi(xs, multi, 0))
+    us_iso = _time(iso, xs, iters=iters)
+    us_multi = _time(one, xs, iters=iters)
+    iso_b = sum(tables_nbytes(e["arrays"]) for e in entries.values())
+    multi_b = tables_nbytes(multi["arrays"])
+    shapes = ";".join(f"{s}={tuple(x.shape)}" for s, x in xs.items())
+    rows.append({"name": f"multisite_{len(per_layer)}x_isolated",
+                 "us": us_iso,
+                 "info": f"launches={len(per_layer)};bytes={iso_b};"
+                         f"{shapes}"})
+    rows.append({"name": f"multisite_{len(per_layer)}x_single_grid",
+                 "us": us_multi,
+                 "info": f"launches=1;bytes={multi_b};{shapes}"})
+
+    # -- matmul-epilogue fusion on the activation site --------------------
+    act_entry = entries[site0]
+    b, t, k, n = 4, 16, 96, 128
+    xm = jnp.asarray(rng.normal(size=(b, t, k)) * 0.1, jnp.float32)
+    wm = jnp.asarray(rng.normal(size=(k, 2 * n)) * 0.1, jnp.float32)
+
+    def _unfused(x, w):
+        h = jnp.einsum("btk,kn->btn", x, w)
+        g, u = h[..., :n], h[..., n:]
+        return lut_act_stacked(g, act_entry, 0) * u
+
+    ref = jax.jit(_unfused)
+    tab = {"stacked": act_entry, "layer": 0}
+    fused = jax.jit(lambda x, w: fused_matmul_lut(x, w, tab, gated=True))
+    us_ref = _time(ref, xm, wm, iters=iters)
+    us_fused = _time(fused, xm, wm, iters=iters)
+    shape = f"x={b}x{t}x{k};w={k}x{2 * n};gated=1;site={site0}"
+    rows.append({"name": "matmul_then_lut", "us": us_ref, "info": shape})
+    rows.append({"name": "fused_matmul_lut", "us": us_fused,
+                 "info": shape})
+
+    summary = {
+        "sites": per_layer,
+        # > 1 means the one-launch / fused form wins; interpret mode pays
+        # for the traced (side-table) meta the single-grid form needs, so
+        # off-TPU these can dip below 1 — the serving bench picks the
+        # winning kernel per cell either way
+        "multisite_speedup": round(us_iso / us_multi, 3),
+        "fused_speedup": round(us_ref / us_fused, 3),
+        # super-slab padding overhead vs per-site packed slabs
+        "multi_bytes_frac": round(multi_b / iso_b, 3) if iso_b else None,
+    }
+    return rows, summary
+
+
+def collect(iters: int = 5) -> dict:
+    rows = _legacy_rows(iters)
+    hot, summary = _hot_path_rows(iters)
+    rows += hot
+    return {
+        "schema": "kernels_bench/v1",
+        "backend": jax.default_backend(),
+        "interpret": default_interpret(),
+        "iters": iters,
+        "rows": [dict(r, us=round(r["us"], 1)) for r in rows],
+        "summary": summary,
+    }
+
+
+def run() -> list[tuple[str, float, str]]:
+    """Row contract for ``benchmarks/run.py``."""
+    payload = collect()
+    return [(r["name"], r["us"], r["info"]) for r in payload["rows"]]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    payload = collect(args.iters)
+    for r in payload["rows"]:
+        print(f"{r['name']:36s} {r['us']:10.1f} us  {r['info']}")
+    print(f"summary: {payload['summary']}")
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"-> {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,13 @@ Measures, per architecture family (dense / moe / ssm by default):
     overhead vs L separate array sets),
   - the engine plan stats behind the served tables (P-LUT cost, saved
     fraction, dedupe hit-rate),
+  - a **kernel axis** on every Pallas cell (``kernel=isolated|fused``):
+    the per-site ``lut_act_stacked`` launches vs the fused hot path —
+    matmul-epilogue LUT fusion under ``cfg.lut_fuse``, served from the
+    multi-site super-slab on stacked exec — with the winning kernel and
+    the per-cell gather-vs-pallas ``winner`` recorded explicitly, plus
+    the bit-packed Pallas ``table_bytes_packed`` next to the int32
+    gather baseline (asserted strictly smaller),
   - a **plan-source axis** (``plan_src=default|tuned``): the untuned
     per-site default plans vs an autotuned selection (:mod:`repro.tune`,
     quick grid, paper accuracy budget) — the committed footprint win of
@@ -25,7 +32,7 @@ prices the registry-extended sites — softmax exp, rmsnorm rsqrt, logit
 softcap, rotary sine — next to the activation-only scope: served P-LUT
 totals, table bytes and decode tok/s per scope.
 
-Writes the trajectory file ``BENCH_serve.json`` (schema: serve_bench/v5).
+Writes the trajectory file ``BENCH_serve.json`` (schema: serve_bench/v6).
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke
   PYTHONPATH=src python benchmarks/serve_bench.py \
@@ -70,8 +77,15 @@ def _make_batch(cfg, rng, b, t):
             model_batch(cfg, rng, b, t).items()}
 
 
-def _time_mode(cfg, params, batch, *, max_seq, n_new, lut_tables):
-    """One serving mode: returns prefill/decode timings + greedy tokens."""
+def _time_mode(cfg, params, batch, *, max_seq, n_new, lut_tables,
+               repeats=3):
+    """One serving mode: returns prefill/decode timings + greedy tokens.
+
+    Decode is timed best-of-``repeats`` (each repeat re-runs the already
+    compiled prefill and a fresh ``n_new``-step greedy loop): single-pass
+    decode means on a shared host wander by tens of percent, which is
+    larger than any backend delta this bench prices.
+    """
     b, t = batch["tokens"].shape
     if cfg.family == "vlm":
         t += cfg.n_patches
@@ -94,22 +108,31 @@ def _time_mode(cfg, params, batch, *, max_seq, n_new, lut_tables):
     lg_w, cache = step(params, cache, tok, jnp.asarray(t))
     jax.block_until_ready(lg_w)
     decode_compile_s = time.perf_counter() - t0
-    logits = lg_w
-    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-    outs = []
-    t0 = time.perf_counter()
-    for i in range(n_new):
-        outs.append(np.asarray(tok)[:, 0].tolist())
-        logits, cache = step(params, cache, tok, jnp.asarray(t + 1 + i))
+
+    outs, best = [], float("inf")
+    for rep in range(repeats):
+        logits, cache = pf(params, batch)
+        logits, cache = step(params, cache,
+                             jnp.argmax(logits[:, -1], -1)
+                             .astype(jnp.int32)[:, None], jnp.asarray(t))
         tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-    jax.block_until_ready(logits)
-    dt = time.perf_counter() - t0
+        rep_outs = []
+        t0 = time.perf_counter()
+        for i in range(n_new):
+            rep_outs.append(np.asarray(tok)[:, 0].tolist())
+            logits, cache = step(params, cache, tok,
+                                 jnp.asarray(t + 1 + i))
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        jax.block_until_ready(logits)
+        best = min(best, time.perf_counter() - t0)
+        if rep == 0:
+            outs = rep_outs
     return {
         "prefill_compile_s": round(prefill_compile_s, 4),
         "prefill_s": round(prefill_s, 4),
         "decode_compile_s": round(decode_compile_s, 4),
-        "decode_s": round(dt, 4),
-        "decode_tok_s": round(n_new * b / dt, 2),
+        "decode_s": round(best, 4),
+        "decode_tok_s": round(n_new * b / best, 2),
         "tokens_req0": [o[0] for o in outs],
     }
 
@@ -154,22 +177,49 @@ def _time_calib_mode(cfg, params, bt, plans, *, max_seq, n_new) -> dict:
     exec_grids = {}
     for exec_ in execs:
         pe = None if exec_ == "shared" else exec_
-        tabs = {
-            "lut_gather": plans.tables_for_model(backend="gather",
-                                                 plan_exec=pe),
-            "lut_pallas": plans.tables_for_model(backend="pallas",
-                                                 plan_exec=pe),
+        gather_tabs = plans.tables_for_model(backend="gather", plan_exec=pe)
+        # Pallas kernel candidates for this cell: the isolated per-site
+        # launches, and the fused hot path (matmul-epilogue fusion under
+        # cfg.lut_fuse — over the multi-site super-slab for stacked exec,
+        # over the isolated packed entries otherwise).  The served
+        # ``lut_pallas`` number is the winning kernel, recorded
+        # explicitly — kernel choice is part of the serving config.
+        fused_kernel = "fused" if exec_ == "stacked" else "isolated"
+        pallas = {
+            "isolated": (lut_cfg, plans.tables_for_model(
+                backend="pallas", plan_exec=pe)),
+            "fused": (dataclasses.replace(lut_cfg, lut_fuse=True),
+                      plans.tables_for_model(backend="pallas", plan_exec=pe,
+                                             kernel=fused_kernel)),
         }
-        entry = {"table_bytes": tables_nbytes(tabs["lut_gather"])}
-        for name, tables in tabs.items():
-            r = _time_mode(lut_cfg, params, bt, max_seq=max_seq,
-                           n_new=n_new, lut_tables=tables)
-            entry[name] = r
-        assert (entry["lut_gather"]["tokens_req0"]
-                == entry["lut_pallas"]["tokens_req0"]), (
-            f"gather/pallas decode diverged [{exec_}]: "
-            f"{entry['lut_gather']['tokens_req0']} vs "
-            f"{entry['lut_pallas']['tokens_req0']}")
+        entry = {
+            # int32 baseline (gather) vs the bit-packed Pallas slabs
+            "table_bytes": tables_nbytes(gather_tabs),
+            "table_bytes_packed": tables_nbytes(pallas["isolated"][1]),
+        }
+        assert entry["table_bytes_packed"] < entry["table_bytes"], (
+            f"packed slabs not below the int32 baseline [{exec_}]: "
+            f"{entry['table_bytes_packed']} >= {entry['table_bytes']}")
+        entry["lut_gather"] = _time_mode(
+            lut_cfg, params, bt, max_seq=max_seq, n_new=n_new,
+            lut_tables=gather_tabs)
+        kernels = {}
+        for kname, (kcfg, tables) in pallas.items():
+            r = _time_mode(kcfg, params, bt, max_seq=max_seq, n_new=n_new,
+                           lut_tables=tables)
+            r["table_bytes"] = tables_nbytes(tables)
+            assert (r["tokens_req0"]
+                    == entry["lut_gather"]["tokens_req0"]), (
+                f"gather/pallas decode diverged [{exec_}/{kname}]: "
+                f"{entry['lut_gather']['tokens_req0']} vs "
+                f"{r['tokens_req0']}")
+            kernels[kname] = r
+        best = max(kernels, key=lambda k: kernels[k]["decode_tok_s"])
+        entry["pallas_kernels"] = kernels
+        entry["lut_pallas"] = dict(kernels[best], kernel=best)
+        entry["winner"] = (
+            "pallas" if entry["lut_pallas"]["decode_tok_s"]
+            >= entry["lut_gather"]["decode_tok_s"] else "gather")
         exec_grids[exec_] = entry["lut_gather"]["tokens_req0"]
         res["exec"][exec_] = entry
     if len(exec_grids) > 1:
@@ -283,6 +333,8 @@ def bench_plan_src(cfg, bt, *, max_seq, n_new, workers,
         "tuned": {
             "cost": outcome.cost,
             "table_bytes": outcome.plans.table_bytes(),
+            "table_bytes_packed": outcome.plans.table_bytes(
+                backend="pallas", packed=True),
             "decode_tok_s": timing["decode_tok_s"],
             "decode_compile_s": timing["decode_compile_s"],
             "budget": outcome.budget,
@@ -324,6 +376,8 @@ def bench_depth_sweep(arch: str, *, depth: int, batch: int, prompt_len: int,
                       ("prefill_compile_s", "decode_compile_s",
                        "prefill_s", "decode_tok_s")}
         row[exec_]["table_bytes"] = tables_nbytes(tables)
+        row[exec_]["table_bytes_packed"] = plans.table_bytes(
+            plan_exec=exec_, backend="pallas", packed=True)
     return row
 
 
@@ -366,6 +420,8 @@ def bench_sites_coverage(arch: str, *, batch: int, prompt_len: int,
             "plain_cost": plans.report.total_plain_cost,
             "saved_frac": round(plans.report.saved_frac, 4),
             "table_bytes": tables_nbytes(tables),
+            "table_bytes_packed": plans.table_bytes(backend="pallas",
+                                                    packed=True),
             "decode_tok_s": r["decode_tok_s"],
             "decode_compile_s": r["decode_compile_s"],
         }
@@ -399,7 +455,7 @@ def main() -> None:
             raise SystemExit(f"unknown arch {a!r}; have {sorted(ARCH_NAMES)}")
 
     results = {
-        "schema": "serve_bench/v5",
+        "schema": "serve_bench/v6",
         "scale": "full" if args.full else "smoke",
         "batch": args.batch,
         "prompt_len": args.prompt_len,
@@ -421,9 +477,11 @@ def main() -> None:
                 print(f"{arch} [{fam}] calib={mode} exec={exec_}: "
                       f"plain {res['plain']['decode_tok_s']} tok/s | "
                       f"lut-gather {e['lut_gather']['decode_tok_s']} tok/s "
-                      f"(compile {e['lut_gather']['decode_compile_s']}s) | "
-                      f"lut-pallas {e['lut_pallas']['decode_tok_s']} tok/s "
-                      f"| {e['table_bytes']} table bytes | "
+                      f"| lut-pallas {e['lut_pallas']['decode_tok_s']} "
+                      f"tok/s [{e['lut_pallas']['kernel']}] "
+                      f"-> {e['winner']} | "
+                      f"{e['table_bytes']} B int32 / "
+                      f"{e['table_bytes_packed']} B packed | "
                       f"dedupe {r['plans']['dedup_rate']:.0%} | "
                       f"plan cost {r['plans']['served_cost']}")
         ps = res["plan_src"]
@@ -456,6 +514,26 @@ def main() -> None:
               f"{len(s['sites'])} site kinds, plan cost {s['served_cost']} "
               f"({s['saved_frac']:.0%} saved, {s['table_bytes']} table "
               f"bytes), {s['decode_tok_s']} tok/s")
+
+    # Acceptance gate rollup: the Pallas hot path must win (or tie) every
+    # family/exec cell and the packed slabs must undercut int32 everywhere.
+    cells = [
+        (a, m, x, e)
+        for a, res in results["archs"].items()
+        for m, r in res["calib"].items()
+        for x, e in r["exec"].items()]
+    losing = [f"{a}/{m}/{x}" for a, m, x, e in cells
+              if e["winner"] != "pallas"]
+    results["gate"] = {
+        "pallas_ge_gather_all_cells": not losing,
+        "losing_cells": losing,
+        "packed_lt_int32_all_cells": all(
+            e["table_bytes_packed"] < e["table_bytes"]
+            for _, _, _, e in cells),
+    }
+    print(f"gate: pallas>=gather on {len(cells) - len(losing)}/"
+          f"{len(cells)} cells"
+          + (f" (losing: {', '.join(losing)})" if losing else ""))
 
     families = {r["family"] for r in results["archs"].values()}
     print(f"{len(results['archs'])} archs over {len(families)} families "

@@ -59,6 +59,11 @@ class ArchConfig:
     # (activation sites only — the default, pre-registry behavior),
     # "all", or an explicit tuple of site keys
     lut_sites: str | tuple = "act"
+    # fuse the LUT activation into the surrounding matmul epilogue (one
+    # Pallas kernel: GEMM -> quantize -> Eq.(1) -> dequantize while the
+    # tile is in VMEM); Pallas backend, single-device serving only —
+    # under a mesh or an active capture the unfused path runs instead
+    lut_fuse: bool = False
     # tanh soft-capping scale applied to the final logits (None = off);
     # when set, the softcap tanh is itself a registered LUT site
     logit_softcap: float | None = None

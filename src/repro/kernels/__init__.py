@@ -8,6 +8,7 @@ from .ops import (
     PlanArrays,
     default_interpret,
     lut_act,
+    lut_act_multi,
     lut_act_stacked,
     lut_reconstruct,
     lutnn_layer,
@@ -19,5 +20,6 @@ __all__ = [
     "lut_reconstruct",
     "lutnn_layer",
     "lut_act",
+    "lut_act_multi",
     "lut_act_stacked",
 ]

@@ -6,7 +6,7 @@ table output via Eq. (1), dequantize — one VMEM round-trip instead of
 quantize/gather/dequant as three HBM-bound ops.  The compressed component
 tables stay resident in VMEM across the whole grid.
 
-Two variants:
+Three variants:
 
 * :func:`lut_act_pallas` — one plan's tables closed over as whole-array
   inputs (the shared-table / unrolled-per-layer form; ``l``/``w_lb``/
@@ -19,6 +19,19 @@ Two variants:
   tables every block), and the per-layer scalar metas (``l``, ``w_lb``,
   ``w_hb``, output dequant range) are read from ``(L, k)`` side tables.
   Bit-identical to running :func:`lut_act_pallas` with layer i's arrays.
+* :func:`lut_act_multisite_pallas` — the single-grid **multi-site** form:
+  all of a model's per-layer site families ride in one ``(S, L, n)``
+  super-slab, the grid iterates row-blocks whose site id is a second
+  scalar-prefetch side table, and *every* per-site scalar (quantizer
+  levels, domain, pack widths) is traced from ``(S, …)`` meta tables —
+  one compiled kernel serves every site instead of S isolated launches
+  re-staging their own slabs.
+
+Every variant accepts bit-packed component slabs (``pack`` —
+:mod:`repro.kernels.packing`): sub-int32 codes share int32 words and are
+unpacked in-kernel with one extra take + shift/mask, which keeps the
+VMEM-resident table bytes at the width the autotuner actually picked
+instead of 4 bytes per entry.
 """
 from __future__ import annotations
 
@@ -29,11 +42,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .packing import unpack_take, unpack_take_traced
 from .runtime import resolve_interpret
 
 
+def _take(ref0, comp: str, idx, pack):
+    """Component gather: direct take on raw int32 slabs, shift/mask unpack
+    on bit-packed ones (``pack`` maps component -> static pack meta)."""
+    if not pack or comp not in pack:
+        return jnp.take(ref0, idx, axis=0)
+    p = pack[comp]
+    return unpack_take(ref0, idx, width=p["width"], offset=p["offset"],
+                       per_word=p["per_word"])
+
+
 def _kernel(x_ref, ust_ref, idx_ref, rsh_ref, bias_ref, lb_ref, out_ref, *,
-            l, w_lb, w_hb, w_in, w_out, x_lo, x_hi, y_lo, y_hi):
+            l, w_lb, w_hb, w_in, w_out, x_lo, x_hi, y_lo, y_hi, pack):
     x = x_ref[...]
     levels_in = (1 << w_in) - 1
     levels_out = (1 << w_out) - 1
@@ -43,13 +67,13 @@ def _kernel(x_ref, ust_ref, idx_ref, rsh_ref, bias_ref, lb_ref, out_ref, *,
     m = 1 << l
     c_hb = code >> l
     c_lb = code & (m - 1)
-    idx = jnp.take(idx_ref[...], c_hb, axis=0)
-    val = jnp.take(ust_ref[...], idx * m + c_lb, axis=0)
-    val = val >> jnp.take(rsh_ref[...], c_hb, axis=0)
-    val = val + jnp.take(bias_ref[...], c_hb, axis=0)
+    idx = _take(idx_ref[...], "t_idx", c_hb, pack)
+    val = _take(ust_ref[...], "t_ust", idx * m + c_lb, pack)
+    val = val >> _take(rsh_ref[...], "t_rsh", c_hb, pack)
+    val = val + _take(bias_ref[...], "t_bias", c_hb, pack)
     val = val & ((1 << max(w_hb, 1)) - 1)
     if w_lb > 0:
-        val = (val << w_lb) | jnp.take(lb_ref[...], code, axis=0)
+        val = (val << w_lb) | _take(lb_ref[...], "t_lb", code, pack)
 
     y = val.astype(jnp.float32) / levels_out * (y_hi - y_lo) + y_lo
     out_ref[...] = y.astype(out_ref.dtype)
@@ -72,6 +96,7 @@ def lut_act_pallas(
     x_hi: float,
     y_lo: float,
     y_hi: float,
+    pack: dict | None = None,
     block_rows: int = 8,
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -86,7 +111,7 @@ def lut_act_pallas(
     return pl.pallas_call(
         functools.partial(
             _kernel, l=l, w_lb=w_lb, w_hb=w_hb, w_in=w_in, w_out=w_out,
-            x_lo=x_lo, x_hi=x_hi, y_lo=y_lo, y_hi=y_hi,
+            x_lo=x_lo, x_hi=x_hi, y_lo=y_lo, y_hi=y_hi, pack=pack,
         ),
         grid=(rows // block_rows,),
         in_specs=[
@@ -99,21 +124,15 @@ def lut_act_pallas(
     )(x, t_ust, t_idx, t_rsh, t_bias, t_lb)
 
 
-def _stacked_kernel(lid_ref, x_ref, ust_ref, idx_ref, rsh_ref, bias_ref,
-                    lb_ref, mi_ref, mf_ref, out_ref, *,
-                    any_lb, w_in, w_out, x_lo, x_hi):
-    """Layer-indexed body: the table refs hold ONE layer's slab (selected
-    by the scalar-prefetch layer id through the BlockSpec index maps) and
-    the per-layer scalars are traced values read from the meta rows —
-    same integer reconstruction math as :func:`_kernel`."""
-    del lid_ref  # consumed by the index maps
-    l = mi_ref[0, 0]
-    w_lb = mi_ref[0, 1]
-    w_hb = mi_ref[0, 2]
-    y_lo = mf_ref[0, 0]
-    y_span = mf_ref[0, 1]
-
-    x = x_ref[...]
+def lut_eval_traced(x, ust, idx_t, rsh, bias, lb, l, w_lb, w_hb,
+                    y_lo, y_span, *, any_lb, w_in, w_out, x_lo, x_hi, pack,
+                    out_dtype):
+    """Shared layer-indexed LUT evaluation body: quantize ``x`` onto the
+    input grid, reconstruct via Eq. (1) with **traced** per-layer scalars
+    (``l``/``w_lb``/``w_hb`` int32, dequant range float32) over one
+    layer's component slabs, dequantize.  Used by the stacked kernel and
+    by the fused matmul epilogue (kernels/fused_matmul_lut.py) so both
+    run literally the same math."""
     levels_in = (1 << w_in) - 1
     levels_out = (1 << w_out) - 1
     xn = jnp.clip((x.astype(jnp.float32) - x_lo) / (x_hi - x_lo), 0.0, 1.0)
@@ -122,18 +141,34 @@ def _stacked_kernel(lid_ref, x_ref, ust_ref, idx_ref, rsh_ref, bias_ref,
     m = jnp.left_shift(jnp.int32(1), l)
     c_hb = jnp.right_shift(code, l)
     c_lb = code & (m - 1)
-    idx = jnp.take(idx_ref[0], c_hb, axis=0)
-    val = jnp.take(ust_ref[0], idx * m + c_lb, axis=0)
-    val = jnp.right_shift(val, jnp.take(rsh_ref[0], c_hb, axis=0))
-    val = val + jnp.take(bias_ref[0], c_hb, axis=0)
+    idx = _take(idx_t, "t_idx", c_hb, pack)
+    val = _take(ust, "t_ust", idx * m + c_lb, pack)
+    val = jnp.right_shift(val, _take(rsh, "t_rsh", c_hb, pack))
+    val = val + _take(bias, "t_bias", c_hb, pack)
     val = val & (jnp.left_shift(jnp.int32(1), jnp.maximum(w_hb, 1)) - 1)
     if any_lb:
-        lb_val = jnp.take(lb_ref[0], code, axis=0)
+        lb_val = _take(lb, "t_lb", code, pack)
         val = jnp.where(w_lb > 0,
                         jnp.left_shift(val, w_lb) | lb_val, val)
 
     y = val.astype(jnp.float32) / levels_out * y_span + y_lo
-    out_ref[...] = y.astype(out_ref.dtype)
+    return y.astype(out_dtype)
+
+
+def _stacked_kernel(lid_ref, x_ref, ust_ref, idx_ref, rsh_ref, bias_ref,
+                    lb_ref, mi_ref, mf_ref, out_ref, *,
+                    any_lb, w_in, w_out, x_lo, x_hi, pack):
+    """Layer-indexed body: the table refs hold ONE layer's slab (selected
+    by the scalar-prefetch layer id through the BlockSpec index maps) and
+    the per-layer scalars are traced values read from the meta rows —
+    same integer reconstruction math as :func:`_kernel`."""
+    del lid_ref  # consumed by the index maps
+    out_ref[...] = lut_eval_traced(
+        x_ref[...], ust_ref[0], idx_ref[0], rsh_ref[0], bias_ref[0],
+        lb_ref[0], mi_ref[0, 0], mi_ref[0, 1], mi_ref[0, 2],
+        mf_ref[0, 0], mf_ref[0, 1],
+        any_lb=any_lb, w_in=w_in, w_out=w_out, x_lo=x_lo, x_hi=x_hi,
+        pack=pack, out_dtype=out_ref.dtype)
 
 
 def lut_act_stacked_pallas(
@@ -152,6 +187,7 @@ def lut_act_stacked_pallas(
     w_out: int,
     x_lo: float,
     x_hi: float,
+    pack: dict | None = None,
     block_rows: int = 8,
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -176,9 +212,125 @@ def lut_act_stacked_pallas(
     return pl.pallas_call(
         functools.partial(
             _stacked_kernel, any_lb=any_lb, w_in=w_in, w_out=w_out,
-            x_lo=x_lo, x_hi=x_hi,
+            x_lo=x_lo, x_hi=x_hi, pack=pack,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((rows, lanes), x.dtype),
         interpret=interpret,
     )(layer, x, t_ust, t_idx, t_rsh, t_bias, t_lb, meta_i, meta_f)
+
+
+def _multisite_kernel(sid_ref, lid_ref, x_ref, ust_ref, idx_ref, rsh_ref,
+                      bias_ref, lb_ref, mi_ref, mf_ref, mq_ref, mp_ref,
+                      out_ref, *, any_lb):
+    """Single-grid multi-site body.  The slab refs hold ONE (site, layer)
+    row — the site picked per row-block from the scalar-prefetch side
+    table, the layer from the scalar-prefetch layer id — and *every*
+    scalar is traced: per-(site, layer) plan meta from ``mi``/``mf``,
+    per-site quantizer levels from ``mq``, per-(site, component) pack
+    parameters from ``mp``.  The packed unpack runs with traced
+    width/offset (``unpack_take_traced``), so one compiled kernel serves
+    every site family."""
+    del sid_ref, lid_ref  # consumed by the index maps
+    l = mi_ref[0, 0, 0]
+    w_lb = mi_ref[0, 0, 1]
+    w_hb = mi_ref[0, 0, 2]
+    y_lo = mf_ref[0, 0, 0]
+    y_span = mf_ref[0, 0, 1]
+    x_lo = mf_ref[0, 0, 2]
+    # reciprocals, not divisors: the static kernels' constant divisions
+    # are strength-reduced by XLA into multiplies by the f32 reciprocal,
+    # so the traced math multiplies by the same host-rounded reciprocals
+    # (serve/stacked.py MultiSiteSlabs) to stay bit-identical
+    x_inv_span = mf_ref[0, 0, 3]
+    levels_in = mq_ref[0, 0]
+    inv_levels_out = mq_ref[0, 1]
+
+    # component order matches packing.COMPONENTS
+    take = lambda ci, ref, idx: unpack_take_traced(
+        ref[0, 0], idx, mp_ref[0, ci, 0], mp_ref[0, ci, 1],
+        mp_ref[0, ci, 2])
+
+    x = x_ref[...]
+    xn = jnp.clip((x.astype(jnp.float32) - x_lo) * x_inv_span, 0.0, 1.0)
+    code = jnp.round(xn * levels_in).astype(jnp.int32)
+
+    m = jnp.left_shift(jnp.int32(1), l)
+    c_hb = jnp.right_shift(code, l)
+    c_lb = code & (m - 1)
+    idx = take(1, idx_ref, c_hb)
+    val = take(0, ust_ref, idx * m + c_lb)
+    val = jnp.right_shift(val, take(2, rsh_ref, c_hb))
+    val = val + take(3, bias_ref, c_hb)
+    val = val & (jnp.left_shift(jnp.int32(1), jnp.maximum(w_hb, 1)) - 1)
+    if any_lb:
+        lb_val = take(4, lb_ref, code)
+        val = jnp.where(w_lb > 0,
+                        jnp.left_shift(val, w_lb) | lb_val, val)
+
+    # coefficient product FIRST: XLA rewrites the static kernels'
+    # `val / levels * y_span + y_lo` into `fma(val, f32(1/levels *
+    # y_span), y_lo)` — one scalar product, one fused multiply-add — so
+    # the traced math must associate the same way to stay bit-identical
+    y = val.astype(jnp.float32) * (inv_levels_out * y_span) + y_lo
+    out_ref[...] = y.astype(out_ref.dtype)
+
+
+def lut_act_multisite_pallas(
+    x: jax.Array,         # (rows, lanes) float — concatenated site blocks
+    block_sites: jax.Array,  # (rows // block_rows,) int32 site id per block
+    layer: jax.Array,     # (1,) int32 — in-scan layer id
+    t_ust: jax.Array,     # (S, L, n_ust_words) int32, bit-packed
+    t_idx: jax.Array,     # (S, L, n_sub_words) int32
+    t_rsh: jax.Array,
+    t_bias: jax.Array,
+    t_lb: jax.Array,
+    meta_i: jax.Array,    # (S, L, 3) int32   [l, w_lb, w_hb]
+    meta_f: jax.Array,    # (S, L, 4) float32 [y_lo, y_span, x_lo, 1/x_span]
+    meta_q: jax.Array,    # (S, 2) float32    [levels_in, 1/levels_out]
+    meta_p: jax.Array,    # (S, C, 3) int32   [width, offset, per_word]
+    *,
+    any_lb: bool,
+    block_rows: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One grid over every site's row-blocks: grid step ``i`` stages the
+    ``(block_sites[i], layer)`` slab row of each component through the
+    scalar-prefetch index maps, so S sites × L layers of tables live in
+    one kernel launch with exactly one (site, layer) slab in VMEM per
+    step."""
+    interpret = resolve_interpret(interpret)
+    rows, lanes = x.shape
+    if rows % block_rows != 0:
+        raise ValueError(
+            f"lut_act_multisite_pallas: rows={rows} not a multiple of "
+            f"block_rows={block_rows} (ops.lut_act_multi pads per site)")
+    n_blocks = rows // block_rows
+    if block_sites.shape != (n_blocks,):
+        raise ValueError(
+            f"lut_act_multisite_pallas: block_sites {block_sites.shape} "
+            f"must be ({n_blocks},) — one site id per row-block")
+    slab = lambda a: pl.BlockSpec(
+        (1, 1, a.shape[2]), lambda i, bs, lid: (bs[i], lid[0], 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_rows, lanes), lambda i, bs, lid: (i, 0)),
+            slab(t_ust), slab(t_idx), slab(t_rsh), slab(t_bias), slab(t_lb),
+            slab(meta_i), slab(meta_f),
+            pl.BlockSpec((1, meta_q.shape[1]),
+                         lambda i, bs, lid: (bs[i], 0)),
+            pl.BlockSpec((1,) + meta_p.shape[1:],
+                         lambda i, bs, lid: (bs[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, lanes),
+                               lambda i, bs, lid: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_multisite_kernel, any_lb=any_lb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), x.dtype),
+        interpret=interpret,
+    )(block_sites, layer, x, t_ust, t_idx, t_rsh, t_bias, t_lb,
+      meta_i, meta_f, meta_q, meta_p)

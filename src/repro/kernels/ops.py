@@ -16,9 +16,14 @@ import numpy as np
 from repro.core.plan import DecomposedPlan, Plan, PlainPlan
 
 from . import ref
-from .lut_act import lut_act_pallas, lut_act_stacked_pallas
+from .lut_act import (
+    lut_act_multisite_pallas,
+    lut_act_pallas,
+    lut_act_stacked_pallas,
+)
 from .lut_gather import lut_reconstruct_pallas, plain_lookup_pallas
 from .lutnn_layer import lutnn_layer_pallas
+from .packing import COMPONENTS, pack_component_dict
 from .runtime import default_interpret, resolve_interpret
 
 LANES = 128
@@ -34,7 +39,12 @@ def _pad_to(a: np.ndarray, mult: int) -> np.ndarray:
 
 @dataclasses.dataclass
 class PlanArrays:
-    """Device-ready, lane-padded arrays for one compression plan."""
+    """Device-ready, lane-padded arrays for one compression plan.
+
+    ``pack`` (component -> static unpack meta, :mod:`.packing`) marks the
+    arrays as bit-packed int32 words; ``None`` means raw int32 lanes (the
+    gather backend's form).
+    """
 
     kind: str
     w_in: int
@@ -43,9 +53,25 @@ class PlanArrays:
     w_lb: int = 0
     w_hb: int = 0
     arrays: dict = dataclasses.field(default_factory=dict)
+    pack: dict | None = None
 
     @staticmethod
-    def from_plan(plan: Plan) -> "PlanArrays":
+    def from_plan(plan: Plan, packed: bool = False) -> "PlanArrays":
+        """Device slabs for ``plan``, memoized by plan *content* so
+        repeated builds (every ``tables_for_model`` call used to re-pad
+        and re-upload the same numpy arrays) reuse one device copy — the
+        ``PlanCache`` content-key idiom from ``core/engine.py`` applied
+        to the materialization layer."""
+        key = _plan_key(plan) + (packed,)
+        hit = _FROM_PLAN_CACHE.get(key)
+        if hit is not None:
+            return hit
+        pa = PlanArrays._build(plan, packed)
+        _FROM_PLAN_CACHE[key] = pa
+        return pa
+
+    @staticmethod
+    def _build(plan: Plan, packed: bool) -> "PlanArrays":
         if isinstance(plan, PlainPlan):
             return PlanArrays(
                 kind="plain", w_in=plan.w_in, w_out=plan.w_out,
@@ -54,17 +80,36 @@ class PlanArrays:
             )
         assert isinstance(plan, DecomposedPlan)
         lb = plan.t_lb if plan.t_lb is not None else np.zeros(1, np.int64)
+        host = {
+            "t_ust": _pad_to(plan.t_ust.astype(np.int32), LANES),
+            "t_idx": _pad_to(plan.t_idx.astype(np.int32), LANES),
+            "t_rsh": _pad_to(plan.t_rsh.astype(np.int32), LANES),
+            "t_bias": _pad_to(plan.t_bias.astype(np.int32), LANES),
+            "t_lb": _pad_to(lb.astype(np.int32), LANES),
+        }
+        pack = None
+        if packed:
+            host, pack = pack_component_dict(host)
         return PlanArrays(
             kind="decomposed", w_in=plan.w_in, w_out=plan.w_out,
             l=plan.l, w_lb=plan.w_lb, w_hb=plan.w_hb,
-            arrays={
-                "t_ust": jnp.asarray(_pad_to(plan.t_ust.astype(np.int32), LANES)),
-                "t_idx": jnp.asarray(_pad_to(plan.t_idx.astype(np.int32), LANES)),
-                "t_rsh": jnp.asarray(_pad_to(plan.t_rsh.astype(np.int32), LANES)),
-                "t_bias": jnp.asarray(_pad_to(plan.t_bias.astype(np.int32), LANES)),
-                "t_lb": jnp.asarray(_pad_to(lb.astype(np.int32), LANES)),
-            },
+            arrays={c: jnp.asarray(a) for c, a in host.items()},
+            pack=pack,
         )
+
+
+def _plan_key(plan: Plan) -> tuple:
+    """Content identity of a plan's device slabs (cf. engine._spec_key):
+    two plans with the same key materialize bit-identical arrays."""
+    if isinstance(plan, PlainPlan):
+        return ("plain", plan.w_in, plan.w_out, plan.values.tobytes())
+    lb = plan.t_lb.tobytes() if plan.t_lb is not None else b""
+    return ("decomposed", plan.w_in, plan.w_out, plan.l, plan.w_lb,
+            plan.w_hb, plan.t_ust.tobytes(), plan.t_idx.tobytes(),
+            plan.t_rsh.tobytes(), plan.t_bias.tobytes(), lb)
+
+
+_FROM_PLAN_CACHE: dict[tuple, PlanArrays] = {}
 
 
 def _shape_2d(n: int, block_rows: int) -> tuple[int, int]:
@@ -167,7 +212,7 @@ def lut_act(
         pa.arrays["t_ust"], pa.arrays["t_idx"], pa.arrays["t_rsh"],
         pa.arrays["t_bias"], pa.arrays["t_lb"],
         l=pa.l, w_lb=pa.w_lb, w_hb=pa.w_hb, w_in=pa.w_in, w_out=pa.w_out,
-        x_lo=x_lo, x_hi=x_hi, y_lo=y_lo, y_hi=y_hi,
+        x_lo=x_lo, x_hi=x_hi, y_lo=y_lo, y_hi=y_hi, pack=pa.pack,
         block_rows=block_rows, interpret=interpret,
     )
     return out.reshape(-1)[:n].reshape(shape)
@@ -213,10 +258,58 @@ def lut_act_stacked(
         a["t_ust"], a["t_idx"], a["t_rsh"], a["t_bias"], a["t_lb"],
         stacked["meta_i"], stacked["meta_f"],
         any_lb=meta["any_lb"], w_in=meta["w_in"], w_out=meta["w_out"],
-        x_lo=meta["x_lo"], x_hi=meta["x_hi"],
+        x_lo=meta["x_lo"], x_hi=meta["x_hi"], pack=meta.get("pack"),
         block_rows=block_rows, interpret=interpret,
     )
     return out.reshape(-1)[:n].reshape(shape)
+
+
+def lut_act_multi(
+    xs: dict,             # site key -> float tensor (any shape)
+    entry: dict,          # a MultiSiteSlabs.entry() (serve/stacked.py)
+    layer: jax.Array | int,
+    *,
+    block_rows: int = 8,
+    interpret: bool | None = None,
+) -> dict:
+    """Evaluate several sites' stacked LUT activations in ONE kernel
+    launch: each tensor is flattened to ``block_rows``-aligned row blocks,
+    the blocks are concatenated into one grid, and a per-block site-id
+    side table (scalar prefetch) steers every grid step to its site's
+    ``(S, L, n)`` super-slab row.  Returns ``{site: y}`` with each output
+    bit-identical to the isolated per-site stacked kernel on the same
+    tensor (asserted in tests/test_kernels_fused.py).
+
+    A single-site dict is the serving form: every ``apply_lut_act`` call
+    under ``kernel="fused"`` tables runs through this one compiled kernel
+    against the shared super-slab instead of per-site programs with
+    per-site table uploads.
+    """
+    interpret = resolve_interpret(interpret)
+    meta = entry["meta"]
+    site_order = meta["sites"]
+    a = entry["arrays"]
+    parts, sids, dims = [], [], []
+    for site, x in xs.items():
+        sid = site_order.index(site)
+        x2d, n = _to_2d(x, block_rows)
+        parts.append(x2d)
+        sids.extend([sid] * (x2d.shape[0] // block_rows))
+        dims.append((site, x.shape, n, x2d.shape[0]))
+    big = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+    block_sites = jnp.asarray(np.asarray(sids, np.int32))
+    out = lut_act_multisite_pallas(
+        big, block_sites, jnp.asarray(layer, jnp.int32).reshape(1),
+        a["t_ust"], a["t_idx"], a["t_rsh"], a["t_bias"], a["t_lb"],
+        entry["meta_i"], entry["meta_f"], entry["meta_q"], entry["meta_p"],
+        any_lb=meta["any_lb"], block_rows=block_rows, interpret=interpret,
+    )
+    ys, start = {}, 0
+    for site, shape, n, rows in dims:
+        y = out[start:start + rows]
+        ys[site] = y.reshape(-1)[:n].reshape(shape)
+        start += rows
+    return ys
 
 
 def wkv(q, k, v, log_w, u, *, chunk: int = 16, interpret: bool | None = None):

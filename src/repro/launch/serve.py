@@ -73,6 +73,13 @@ def main() -> None:
                     help="per-layer table execution: stacked (L, ...) "
                          "arrays inside lax.scan (default) or the "
                          "python-unrolled reference")
+    ap.add_argument("--lut-fuse", action="store_true",
+                    help="fuse the LUT hot path (pallas backend, single "
+                         "device): bit-packed multi-site table slabs, "
+                         "single-grid multi-site kernel, and the LUT "
+                         "activation applied in the MLP/FFN matmul "
+                         "epilogue (cfg.lut_fuse) — token-identical to "
+                         "the unfused path by the bit-identity contract")
     ap.add_argument("--lut-sites", choices=("act", "all"), default="act",
                     help="LUT site scope: act (the activation sites only, "
                          "the default) or all (every registered site — "
@@ -125,14 +132,27 @@ def main() -> None:
             ap.error("--kv-int8 prefill replay is served in gspmd mesh "
                      "mode only (drop --kv-int8 or use --mesh-mode gspmd)")
 
+    if args.lut_fuse:
+        if args.lut_backend != "pallas":
+            ap.error("--lut-fuse needs --lut-backend pallas (the fused "
+                     "hot path is a Pallas kernel)")
+        if mesh is not None:
+            ap.error("--lut-fuse is the single-device fast path — drop "
+                     "--mesh (the sharded program keeps the gather-"
+                     "shardable unfused form)")
+    lut_kernel = "fused" if (args.lut_fuse
+                             and args.plan_exec == "stacked") else None
+
     cfg = get_config(args.arch)
     if not args.full:
         cfg = smoke_config(cfg)
-    if args.lut_sites != "act" or args.logit_softcap is not None:
+    if (args.lut_sites != "act" or args.logit_softcap is not None
+            or args.lut_fuse):
         import dataclasses
 
         cfg = dataclasses.replace(cfg, lut_sites=args.lut_sites,
-                                  logit_softcap=args.logit_softcap)
+                                  logit_softcap=args.logit_softcap,
+                                  lut_fuse=args.lut_fuse)
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     b, t = args.batch, args.prompt_len
@@ -146,7 +166,8 @@ def main() -> None:
         tp = load_tuned_plan(args.tuned_plan)
         cfg = tp.patched_config(cfg)   # binds artifact to this arch/depth
         lut_tables = tp.tables_for_model(backend=args.lut_backend,
-                                         plan_exec=args.plan_exec)
+                                         plan_exec=args.plan_exec,
+                                         kernel=lut_kernel)
         print(tp.summary())
         from repro.serve import tables_nbytes
 
@@ -182,7 +203,7 @@ def main() -> None:
         plans = build_serving_plans(cfg, calib, backend=args.lut_backend,
                                     plan_exec=args.plan_exec)
         cfg = plans.patched_config(cfg)
-        lut_tables = plans.tables_for_model()
+        lut_tables = plans.tables_for_model(kernel=lut_kernel)
         print(plans.summary())
         if plans.per_layer:
             from repro.serve import tables_nbytes

@@ -92,13 +92,14 @@ def tables_per_layer(lut_tables: dict | None) -> bool:
 
 
 def tables_stacked(lut_tables: dict | None) -> bool:
-    """True when any site entry carries stacked per-layer tables (the
-    ``"stacked"`` ``(L, …)`` form, :mod:`repro.serve.stacked`) — the layer
-    stack keeps ``lax.scan`` and resolves each layer's table slab with the
-    traced in-scan layer id."""
+    """True when any site entry carries stacked per-layer tables — the
+    ``"stacked"`` ``(L, …)`` form (:mod:`repro.serve.stacked`) or a
+    ``"multi"`` marker into the shared multi-site super-slab — so the
+    layer stack keeps ``lax.scan`` and resolves each layer's table slab
+    with the traced in-scan layer id."""
     if not lut_tables or "sites" not in lut_tables:
         return False
-    return any(isinstance(e, dict) and "stacked" in e
+    return any(isinstance(e, dict) and ("stacked" in e or "multi" in e)
                for e in lut_tables["sites"].values())
 
 
@@ -163,13 +164,17 @@ def site_tables(lut_tables: dict | None, site: str | None = None,
         return None
     site = sites.MLP if site is None else site
     entry = lut_tables["sites"].get(site)
-    if entry is None or ("layers" not in entry and "stacked" not in entry):
+    if entry is None or not any(
+            k in entry for k in ("layers", "stacked", "multi")):
         return entry
     if layer is None:
         raise ValueError(
             f"per-layer LUT tables for site {site!r} need a layer index — "
             f"run the forward through run_layers (this family's loop may "
             f"not support per-layer tables)")
+    if "multi" in entry:
+        return {"multi_entry": lut_tables["multi"], "site": entry["multi"],
+                "layer": layer}
     if "stacked" in entry:
         return {"stacked": entry["stacked"], "layer": layer}
     return entry["layers"][layer]
@@ -186,6 +191,10 @@ def entry_operands(tab: dict):
     recreates the entry the evaluators consume from that pytree inside
     the region (the python-scalar meta is closed over — it is static).
     """
+    if "multi_entry" in tab:
+        raise ValueError(
+            "entry_operands: multi-site fused tables are the single-device "
+            "fast path — build mesh tables with kernel='isolated'")
     if "stacked" in tab:
         st = tab["stacked"]
         meta = st["meta"]
@@ -220,6 +229,17 @@ def apply_lut_act(x, tab: dict, backend: str = "gather"):
     per-plan form and the layer-indexed stacked form alike
     (tests/test_stacked.py).
     """
+    if "multi_entry" in tab:
+        if backend != "pallas":
+            raise ValueError(
+                "apply_lut_act: multi-site super-slab entries are "
+                "Pallas-only (bit-packed, traced-meta kernel); build "
+                "gather tables with kernel='isolated'")
+        from repro.kernels.ops import lut_act_multi
+
+        site = tab["site"]
+        return lut_act_multi({site: x}, tab["multi_entry"],
+                             tab["layer"])[site]
     if "stacked" in tab:
         if backend == "pallas":
             from repro.kernels.ops import lut_act_stacked
@@ -234,13 +254,43 @@ def apply_lut_act(x, tab: dict, backend: str = "gather"):
         pa = PlanArrays(
             kind="decomposed", w_in=meta["w_in"], w_out=meta["w_out"],
             l=meta["l"], w_lb=meta["w_lb"], w_hb=meta["w_hb"],
-            arrays=arrays,
+            arrays=arrays, pack=meta.get("pack"),
         )
         return lut_act_fused(
             x, pa, x_lo=meta["x_lo"], x_hi=meta["x_hi"],
             y_lo=meta["y_lo"], y_hi=meta["y_hi"],
         )
     return lut_act_jnp(x, arrays, **meta)
+
+
+def fused_matmul_tab(cfg, lut_tables: dict | None, site: str,
+                     layer=None) -> dict | None:
+    """Resolve the site entry for the matmul-epilogue fused path, or
+    ``None`` when the unfused composition must run.
+
+    The fused kernel (:mod:`repro.kernels.fused_matmul_lut`) is the
+    single-device Pallas serving fast path: it requires ``cfg.lut_fuse``,
+    the Pallas backend, an active site with served tables, no GSPMD mesh
+    (the gather backend's sharding constraints must shape the distributed
+    program) and no activation capture (the capture wrapper must see the
+    pre-activation tensor).  Every ``None`` here falls back to a path
+    already asserted bit-identical, so flipping ``lut_fuse`` never
+    changes served tokens."""
+    if not (getattr(cfg, "lut_fuse", False) and cfg.lut_activation
+            and lut_tables is not None):
+        return None
+    if lut_tables.get("backend") != "pallas":
+        return None
+    if calib_capture.capture_active():
+        return None
+    from .sharding import current_mesh
+
+    if current_mesh() is not None:
+        return None
+    spec = sites.site_spec(site)
+    if not spec.active(cfg):
+        return None
+    return site_tables(lut_tables, site, layer if spec.per_layer else None)
 
 
 def make_activation(cfg, lut_tables: dict | None, site: str | None = None,
@@ -327,7 +377,20 @@ def project_logits(x, lm_head, cfg, lut_tables: dict | None = None):
 
 def mlp_block(params: dict, x: jax.Array, cfg, lut_tables=None,
               layer: int | None = None) -> jax.Array:
-    """(B, T, d) -> (B, T, d). swiglu uses fused [gate|up] in w_in."""
+    """(B, T, d) -> (B, T, d). swiglu uses fused [gate|up] in w_in.
+
+    Under ``cfg.lut_fuse`` (Pallas backend, single device, no capture)
+    the up-projection GEMM and the LUT activation run as ONE Pallas
+    kernel — the gated form multiplies ``act(gate) * up`` before the
+    tile leaves VMEM (:mod:`repro.kernels.fused_matmul_lut`)."""
+    ftab = fused_matmul_tab(cfg, lut_tables, sites.MLP, layer)
+    if ftab is not None:
+        from repro.kernels.fused_matmul_lut import fused_matmul_lut
+
+        h = fused_matmul_lut(x, params["w_in"], ftab,
+                             gated=is_gated(cfg.activation))
+        out = jnp.einsum("btf,fd->btd", h, params["w_out"])
+        return shard(out, "dp", "sp", None)
     act = make_activation(cfg, lut_tables, layer=layer)
     if is_gated(cfg.activation):
         gate_up = jnp.einsum("btd,df->btf", x, params["w_in"])

@@ -191,7 +191,7 @@ def rwkv_channel_mix(params, x, cfg, x_last=None, lut_tables=None,
     """
     from repro import sites
 
-    from .mlp import make_activation
+    from .mlp import fused_matmul_tab, make_activation
 
     b, t, d = x.shape
     if x_last is None:
@@ -199,10 +199,18 @@ def rwkv_channel_mix(params, x, cfg, x_last=None, lut_tables=None,
     x_prev = jnp.concatenate([x_last, x[:, :-1]], axis=1)
     xk = x + (x_prev - x) * params["mu_ffn_k"]
     xr = x + (x_prev - x) * params["mu_ffn_r"]
-    kk = jnp.einsum("btd,df->btf", xk, params["w_ffn_k"])
-    kk = shard(kk, "dp", None, "tp")
-    act = make_activation(cfg, lut_tables, site=sites.FFN, fallback="relu2",
-                          layer=layer)
-    vv = jnp.einsum("btf,fd->btd", act(kk), params["w_ffn_v"])
+    ftab = fused_matmul_tab(cfg, lut_tables, sites.FFN, layer)
+    if ftab is not None:
+        from repro.kernels.fused_matmul_lut import fused_matmul_lut
+
+        # key GEMM + squared-ReLU table in one kernel (epilogue fusion)
+        akk = fused_matmul_lut(xk, params["w_ffn_k"], ftab, gated=False)
+    else:
+        kk = jnp.einsum("btd,df->btf", xk, params["w_ffn_k"])
+        kk = shard(kk, "dp", None, "tp")
+        act = make_activation(cfg, lut_tables, site=sites.FFN,
+                              fallback="relu2", layer=layer)
+        akk = act(kk)
+    vv = jnp.einsum("btf,fd->btd", akk, params["w_ffn_v"])
     rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, params["w_ffn_r"]))
     return shard(rr * vv, "dp", None, None), x[:, -1:]

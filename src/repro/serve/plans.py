@@ -131,27 +131,57 @@ class SitePlan:
         """Mean don't-care fraction over this kind's served tables."""
         return float(np.mean([l.dontcare_frac for l in self.luts]))
 
-    def entry(self, form: str = "stacked") -> dict:
+    def entry(self, form: str = "stacked", packed: bool = False) -> dict:
         """The site entry the nn layer consumes: ``{"meta", "arrays"}``
         (shared), ``{"layers": [...]}`` (per layer, unrolled execution)
         or ``{"stacked": {...}}`` (per layer, padded ``(L, …)`` stacks
-        scanned with the in-loop layer id)."""
-        def one(lut: LUTActivation) -> dict:
-            return {"meta": lut.meta(),
-                    "arrays": PlanArrays.from_plan(lut.plan).arrays}
-        if not self.per_layer:
-            return one(self.lut)
-        entries = [one(l) for l in self.luts]
-        if form == "stacked":
-            from .stacked import StackedPlanArrays
+        scanned with the in-loop layer id).
 
-            return {"stacked": StackedPlanArrays.from_entries(entries)
-                    .entry()}
-        if form != "layers":
+        ``packed=True`` returns the bit-packed slab form (Pallas backend
+        only — the gather evaluators consume raw int32).  Entries are
+        memoized per ``(form, packed)``: repeated ``tables_for_model``
+        calls reuse one set of device slabs instead of re-stacking and
+        re-uploading (the `PlanCache` content-key idiom one level up —
+        `PlanArrays.from_plan` is itself content-memoized)."""
+        key = (form, packed)
+        cache = self.__dict__.setdefault("_entry_cache", {})
+        if key in cache:
+            return cache[key]
+
+        def one(lut: LUTActivation, pk: bool = packed) -> dict:
+            pa = PlanArrays.from_plan(lut.plan, packed=pk)
+            meta = lut.meta()
+            if pa.pack is not None:
+                meta = dict(meta, pack=pa.pack)
+            return {"meta": meta, "arrays": pa.arrays}
+        if not self.per_layer:
+            out = one(self.lut)
+        elif form == "stacked":
+            out = {"stacked": self.stacked().entry(packed=packed)}
+        elif form == "layers":
+            out = {"layers": [one(l) for l in self.luts]}
+        else:
             raise ValueError(
                 f"SitePlan.entry: unknown form {form!r} "
                 f"(expected 'stacked' or 'layers')")
-        return {"layers": entries}
+        cache[key] = out
+        return out
+
+    def stacked(self):
+        """This site's :class:`~repro.serve.stacked.StackedPlanArrays`
+        (per-layer plans only), memoized — the packed/raw serving forms
+        and the multi-site super-slab all derive from the one instance."""
+        from .stacked import StackedPlanArrays
+
+        st = self.__dict__.get("_stacked")
+        if st is None:
+            entries = [
+                {"meta": l.meta(),
+                 "arrays": PlanArrays.from_plan(l.plan).arrays}
+                for l in self.luts]
+            st = StackedPlanArrays.from_entries(entries)
+            self.__dict__["_stacked"] = st
+        return st
 
 
 @dataclasses.dataclass
@@ -171,13 +201,29 @@ class ServingPlans:
 
     def tables_for_model(self, backend: str | None = None,
                          plan_exec: str | None = None, mesh=None,
-                         policy=None) -> dict:
+                         policy=None, packed: bool | None = None,
+                         kernel: str | None = None) -> dict:
         """The ``lut_tables`` dict threaded through decode/prefill/batcher.
 
         ``plan_exec`` picks the per-layer execution form: ``"stacked"``
         (default — ``(L, …)`` padded stacks, layer stacks keep
         ``lax.scan``) or ``"unrolled"`` (one entry per layer, stacks
         python-unroll).  Shared plans are unaffected.
+
+        ``packed`` selects bit-packed table slabs
+        (:mod:`repro.kernels.packing`); the default packs exactly when
+        the backend is ``"pallas"`` — the gather evaluators always get
+        raw int32.
+
+        ``kernel`` picks the Pallas launch strategy for per-layer stacked
+        sites: ``"isolated"`` (default — one ``lut_act_stacked`` launch
+        per site) or ``"fused"`` — all per-layer site families are built
+        into one bit-packed ``(S, L, n)``
+        :class:`~repro.serve.stacked.MultiSiteSlabs` super-slab served by
+        the single-grid multi-site kernel (and statically sliced by the
+        matmul-epilogue fusion under ``cfg.lut_fuse``).  ``"fused"``
+        requires the Pallas backend, stacked execution, and no mesh (the
+        fused hot path is the single-device serving fast path).
 
         With a ``mesh`` (argument, or the one the plans were built
         against), the arrays come back *placed*: committed per the
@@ -189,25 +235,68 @@ class ServingPlans:
             raise ValueError(
                 f"tables_for_model: unknown plan_exec {exec_!r} "
                 f"(expected 'stacked' or 'unrolled')")
+        backend = backend or self.backend
+        kernel = kernel or "isolated"
+        if kernel not in ("isolated", "fused"):
+            raise ValueError(
+                f"tables_for_model: unknown kernel {kernel!r} "
+                f"(expected 'isolated' or 'fused')")
+        if packed is None:
+            packed = backend == "pallas"
+        if packed and backend != "pallas":
+            raise ValueError(
+                "tables_for_model: packed slabs are Pallas-only — the "
+                "gather evaluators consume raw int32 arrays")
+        mesh = mesh if mesh is not None else self.mesh
+        if kernel == "fused":
+            if backend != "pallas":
+                raise ValueError(
+                    "tables_for_model: kernel='fused' needs the Pallas "
+                    "backend (the multi-site grid is a Pallas kernel)")
+            if exec_ != "stacked":
+                raise ValueError(
+                    "tables_for_model: kernel='fused' needs "
+                    "plan_exec='stacked' (the super-slab is layer-indexed "
+                    "inside lax.scan)")
+            if mesh:
+                raise ValueError(
+                    "tables_for_model: kernel='fused' is the single-device "
+                    "fast path — build with mesh=False")
         form = self._FORMS[exec_]
         tables = {
-            "backend": backend or self.backend,
-            "sites": {k: sp.entry(form=form)
+            "backend": backend,
+            "kernel": kernel,
+            "sites": {k: sp.entry(form=form, packed=packed)
                       for k, sp in self.sites.items()},
         }
-        mesh = mesh if mesh is not None else self.mesh
+        if kernel == "fused":
+            from .stacked import MultiSiteSlabs
+
+            grouped = {k: sp.stacked() for k, sp in self.sites.items()
+                       if sp.per_layer}
+            if grouped:
+                multi = MultiSiteSlabs.from_stacks(grouped)
+                tables["multi"] = multi.entry()
+                for k in grouped:
+                    tables["sites"][k] = {"multi": k}
         if mesh:   # pass mesh=False to force unplaced single-device arrays
             from .sharded import place_tables
 
             tables, _ = place_tables(tables, mesh, policy)
         return tables
 
-    def table_bytes(self, plan_exec: str | None = None) -> int:
+    def table_bytes(self, plan_exec: str | None = None,
+                    backend: str | None = None,
+                    packed: bool | None = None) -> int:
         """Device bytes of the serving tables in one execution form —
-        prices the stacked padding overhead against the unrolled layout."""
+        prices the stacked padding overhead against the unrolled layout,
+        and (``backend="pallas"``) the bit-packed slabs against the raw
+        int32 baseline."""
         from .stacked import tables_nbytes
 
-        return tables_nbytes(self.tables_for_model(plan_exec=plan_exec))
+        return tables_nbytes(self.tables_for_model(
+            backend=backend, plan_exec=plan_exec, mesh=False,
+            packed=packed))
 
     def patched_config(self, cfg: ArchConfig) -> ArchConfig:
         return dataclasses.replace(cfg, lut_activation=True)
@@ -551,7 +640,23 @@ def verify_backend_equivalence(
                     f"sharded {backend} logits diverge from the "
                     f"single-device reference at step {i} beyond ulp "
                     f"tolerance (max |diff| {np.max(np.abs(ref - got))})")
+    # Fused hot path: matmul-epilogue LUT fusion (cfg.lut_fuse) over the
+    # multi-site super-slab (kernel="fused", stacked exec) or the isolated
+    # packed entries (unrolled exec) — asserted token-for-token
+    # bit-identical to the gather reference like any other backend.
+    exec_ = plan_exec or plans.plan_exec
+    fused_kernel = "fused" if exec_ == "stacked" else "isolated"
+    f_tables = plans.tables_for_model(backend="pallas", plan_exec=plan_exec,
+                                      mesh=False, kernel=fused_kernel)
+    f_cfg = dataclasses.replace(cfg, lut_fuse=True)
+    f_toks, _ = _greedy_decode(f_cfg, params, batch, t, n_new, max_seq,
+                               f_tables)
+    f_out = [[f_toks[i][r] for i in range(n_new)] for r in range(b)]
     for r, (a, bb) in enumerate(zip(outs["gather"], outs["pallas"])):
         assert a == bb, (
             f"backend divergence on request {r}: gather={a} pallas={bb}")
+    for r, (a, bb) in enumerate(zip(outs["gather"], f_out)):
+        assert a == bb, (
+            f"fused-kernel divergence on request {r}: gather={a} "
+            f"fused={bb}")
     return outs["gather"]

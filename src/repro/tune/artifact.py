@@ -46,27 +46,62 @@ class TunedPlan:
     meta: dict = dataclasses.field(default_factory=dict)
 
     def tables_for_model(self, backend: str | None = None,
-                         plan_exec: str | None = None) -> dict:
+                         plan_exec: str | None = None,
+                         packed: bool | None = None,
+                         kernel: str | None = None) -> dict:
         """Rebuild the ``lut_tables`` dict straight from the stored
-        entries — no capture, no engine."""
+        entries — no capture, no engine.  ``packed``/``kernel`` mirror
+        :meth:`repro.serve.plans.ServingPlans.tables_for_model`: packed
+        bit-packed slabs default on for the Pallas backend, and
+        ``kernel="fused"`` builds the per-layer sites into one multi-site
+        super-slab (Pallas + stacked execution only)."""
         exec_ = plan_exec or self.plan_exec
         if exec_ not in ("stacked", "unrolled"):
             raise ValueError(
                 f"TunedPlan.tables_for_model: unknown plan_exec {exec_!r} "
                 f"(expected 'stacked' or 'unrolled')")
+        backend = backend or self.backend
+        kernel = kernel or "isolated"
+        if packed is None:
+            packed = backend == "pallas"
+        if packed and backend != "pallas":
+            raise ValueError(
+                "TunedPlan.tables_for_model: packed slabs are Pallas-only")
+        if kernel == "fused" and (backend != "pallas"
+                                  or exec_ != "stacked"):
+            raise ValueError(
+                "TunedPlan.tables_for_model: kernel='fused' needs the "
+                "Pallas backend and plan_exec='stacked'")
+
+        def one(e: dict) -> dict:
+            if not packed:
+                return dict(e)
+            from repro.kernels.packing import pack_component_dict
+
+            arrays, pack = pack_component_dict(e["arrays"])
+            return {"meta": dict(e["meta"], pack=pack), "arrays": arrays}
+
+        from repro.serve.stacked import StackedPlanArrays
+
         sites: dict[str, dict] = {}
+        stacks: dict[str, StackedPlanArrays] = {}
         for site, entries in self.sites.items():
             if not self.per_layer.get(site, True):
-                sites[site] = dict(entries[0])
+                sites[site] = one(entries[0])
             elif exec_ == "stacked":
-                from repro.serve.stacked import StackedPlanArrays
-
-                sites[site] = {
-                    "stacked": StackedPlanArrays.from_entries(entries)
-                    .entry()}
+                st = StackedPlanArrays.from_entries(entries)
+                stacks[site] = st
+                sites[site] = {"stacked": st.entry(packed=packed)}
             else:
-                sites[site] = {"layers": [dict(e) for e in entries]}
-        return {"backend": backend or self.backend, "sites": sites}
+                sites[site] = {"layers": [one(e) for e in entries]}
+        tables = {"backend": backend, "kernel": kernel, "sites": sites}
+        if kernel == "fused" and stacks:
+            from repro.serve.stacked import MultiSiteSlabs
+
+            tables["multi"] = MultiSiteSlabs.from_stacks(stacks).entry()
+            for site in stacks:
+                tables["sites"][site] = {"multi": site}
+        return tables
 
     def patched_config(self, cfg: ArchConfig) -> ArchConfig:
         if cfg.name != self.arch:

@@ -1,0 +1,371 @@
+"""Fused LUT hot path: bit-packed slabs, the single-grid multi-site
+kernel, and matmul-epilogue fusion.
+
+Three contracts, each asserted bit-exactly:
+
+* packing is lossless — ``pack_array``/``unpack_array`` round-trip every
+  component width 1..16 (hypothesis property, including the ``w_hb``
+  mask edge where values fill the full width and the signed-offset case),
+  and a packed entry evaluates identically to its raw-int32 twin;
+* the multi-site kernel is the per-site kernel — one
+  ``lut_act_multi`` launch over the super-slab returns, per site, the
+  same bits as the isolated ``lut_act_stacked`` call on that site's own
+  stack;
+* the fused matmul epilogue is the unfused pipeline —
+  ``fused_matmul_lut(x, w, tab)`` equals ``einsum`` + ``apply_lut_act``
+  on the same entry, and end-to-end decode under ``cfg.lut_fuse`` is
+  token-for-token identical to the gather reference across all six
+  families and both plan-execution forms (the family sweep carries the
+  ``kernels`` marker: run with ``pytest -m kernels``).
+
+Runs under real hypothesis when installed, or the deterministic stub in
+conftest.py.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.calib import capture_calibration, model_batch, synthetic_batches
+from repro.configs import get_config, smoke_config
+from repro.kernels import PlanArrays, lut_act, lut_act_multi, lut_act_stacked
+from repro.kernels.packing import (
+    COMPONENTS,
+    MAX_PACK_WIDTH,
+    needed_width,
+    pack_array,
+    pack_component_dict,
+    packed_nbytes,
+    unpack_array,
+)
+from repro.nn import init_params
+from repro.serve import build_serving_plans, tables_nbytes
+from repro.serve.plans import verify_backend_equivalence
+from repro.serve.stacked import MultiSiteSlabs, StackedPlanArrays
+
+RNG = np.random.default_rng(0)
+
+FAMILY_ARCHS = [
+    "qwen3-0.6b",          # dense
+    "deepseek-moe-16b",    # moe
+    "phi-3-vision-4.2b",   # vlm
+    "rwkv6-3b",            # ssm
+    "recurrentgemma-9b",   # hybrid
+    "whisper-small",       # encdec
+]
+
+
+def _per_site_plans(arch, backend="pallas", plan_exec="stacked"):
+    # float32 for cross-exec comparisons: see tests/test_stacked.py — in
+    # bf16 XLA fuses scan vs unrolled bodies differently (pre-existing
+    # model-math noise, shows up with lut_tables=None too).
+    cfg = dataclasses.replace(smoke_config(get_config(arch)),
+                              dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batches = synthetic_batches(cfg, 1, batch_size=2, seq_len=8, seed=1)
+    calib = capture_calibration(params, cfg, batches, w_in=8)
+    plans = build_serving_plans(cfg, calib, w_out=8, backend=backend,
+                                plan_exec=plan_exec)
+    return cfg, params, plans
+
+
+# =========================================================================
+# bit-packing: lossless round-trip
+# =========================================================================
+@settings(max_examples=40, deadline=None)
+@given(width=st.integers(2, MAX_PACK_WIDTH),
+       n=st.integers(1, 200),
+       signed=st.booleans(),
+       seed=st.integers(0, 2**31 - 1))
+def test_pack_roundtrip_lossless(width, n, signed, seed):
+    """Every width 2..16, ragged tails, signed offsets: unpack(pack(a))
+    returns the exact int32 input."""
+    rng = np.random.default_rng(seed)
+    hi = (1 << width) - 1
+    lo = -(hi // 2) if signed else 0
+    a = rng.integers(lo, lo + hi + 1, size=(3, n),
+                     dtype=np.int64).astype(np.int32)
+    # pin the extremes so the chosen width is exactly `width`
+    a[0, 0], a[-1, -1] = lo, lo + hi
+    w, off = needed_width(a)
+    assert w == width and off == lo
+    words, meta = pack_array(a, w, off)
+    assert words.dtype == np.int32
+    assert meta["per_word"] == 32 // width
+    back = unpack_array(words, meta)
+    assert back.dtype == np.int32 and back.shape == a.shape
+    np.testing.assert_array_equal(back, a)
+
+
+def test_pack_whb_mask_edge():
+    """The w_hb mask edge: a component whose values span the full
+    ``(1 << w) - 1`` range at every packable width — the top code must
+    survive the shift/mask unpack unmangled (sign-extension of the packed
+    word must not leak into neighbor codes)."""
+    for width in range(1, MAX_PACK_WIDTH + 1):
+        hi = (1 << width) - 1
+        a = np.array([[0, hi] * 37], np.int32)  # alternating extremes
+        words, meta = pack_array(a, width, 0)
+        np.testing.assert_array_equal(unpack_array(words, meta), a)
+        # packed words go negative exactly when the top slot's high bit
+        # lands on bit 31 — the masked unpack must not care
+        if 32 % width == 0:
+            assert (words < 0).any(), f"width {width}: no sign-bit words"
+
+
+def test_pack_width_one_and_raw_fallback():
+    """Constant arrays pack at width 1 (never 0); width-32 components fall
+    back to the raw representation untouched."""
+    const = np.full((2, 40), 7, np.int32)
+    w, off = needed_width(const)
+    assert (w, off) == (1, 7)
+    words, meta = pack_array(const, w, off)
+    assert words.shape[-1] == 2  # ceil(40/32)
+    np.testing.assert_array_equal(unpack_array(words, meta), const)
+
+    wide = np.array([[0, -(2**31), 2**31 - 1]], np.int32)
+    w, off = needed_width(wide)
+    assert w == 32
+    words, meta = pack_array(wide, w, off)
+    np.testing.assert_array_equal(words, wide)
+    np.testing.assert_array_equal(unpack_array(words, meta), wide)
+
+
+def test_packed_entry_strictly_smaller():
+    """The accounting satellite: every component of a real plan packs to
+    strictly fewer bytes than its raw int32 slab (codes are <= 16 bit by
+    construction, so >= 2x is guaranteed)."""
+    _, _, plans = _per_site_plans("qwen3-0.6b")
+    st_ = plans.sites["mlp"].stacked()
+    raw = {c: a for c, a in st_.entry()["arrays"].items()}
+    packed, pack = pack_component_dict(raw)
+    assert packed_nbytes(packed) < sum(a.nbytes for a in raw.values())
+    for c in COMPONENTS:
+        assert pack[c]["width"] <= MAX_PACK_WIDTH
+    # and the serving accounting agrees
+    packed_b = plans.table_bytes(backend="pallas", packed=True)
+    raw_b = plans.table_bytes(backend="pallas", packed=False)
+    assert packed_b < raw_b
+
+
+# =========================================================================
+# packed slabs evaluate bit-identically to raw slabs
+# =========================================================================
+def test_packed_kernel_matches_raw():
+    """Isolated pallas kernel, packed vs raw arrays of the same plan:
+    identical output bits."""
+    _, _, plans = _per_site_plans("qwen3-0.6b")
+    lut = plans.sites["mlp"].luts[0]
+    raw = PlanArrays.from_plan(lut.plan, packed=False)
+    packed = PlanArrays.from_plan(lut.plan, packed=True)
+    assert packed.pack is not None and raw.pack is None
+    x = jnp.asarray(RNG.normal(size=(4, 96)).astype(np.float32))
+    meta = lut.meta()
+    kw = dict(x_lo=meta["x_lo"], x_hi=meta["x_hi"],
+              y_lo=meta["y_lo"], y_hi=meta["y_hi"])
+    y_raw = lut_act(x, raw, **kw)
+    y_packed = lut_act(x, packed, **kw)
+    np.testing.assert_array_equal(np.asarray(y_raw), np.asarray(y_packed))
+
+
+def test_stacked_packed_matches_raw():
+    """Stacked pallas kernel on packed (L, n_words) slabs equals the raw
+    (L, n) slabs for every layer."""
+    _, _, plans = _per_site_plans("qwen3-0.6b")
+    st_ = plans.sites["mlp"].stacked()
+    raw_e = st_.entry(packed=False)
+    packed_e = st_.entry(packed=True)
+    assert "pack" in packed_e["meta"] and "pack" not in raw_e["meta"]
+    x = jnp.asarray(RNG.normal(size=(4, 96)).astype(np.float32))
+    for layer in range(st_.n_layers):
+        y_raw = lut_act_stacked(x, raw_e, layer)
+        y_packed = lut_act_stacked(x, packed_e, layer)
+        np.testing.assert_array_equal(np.asarray(y_raw),
+                                      np.asarray(y_packed))
+
+
+# =========================================================================
+# multi-site single-grid kernel == per-site kernels
+# =========================================================================
+def test_multisite_kernel_matches_per_site():
+    """One lut_act_multi launch over the super-slab returns, per site,
+    the exact bits of the isolated stacked kernel on that site's own
+    stack — for every layer, with different row counts per site."""
+    cfg = dataclasses.replace(smoke_config(get_config("qwen3-0.6b")),
+                              dtype="float32", lut_sites="all")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batches = synthetic_batches(cfg, 1, batch_size=2, seq_len=8, seed=1)
+    calib = capture_calibration(params, cfg, batches, w_in=8)
+    plans = build_serving_plans(cfg, calib, w_out=8, backend="pallas")
+    stacks = {k: sp.stacked() for k, sp in plans.sites.items()
+              if sp.per_layer}
+    assert len(stacks) >= 2, "need several per-layer sites for this test"
+    ms = MultiSiteSlabs.from_stacks(stacks)
+    entry = ms.entry()
+    shapes = [(2, 96), (3, 64), (5, 32), (2, 128)]
+    xs = {site: jnp.asarray(
+            RNG.normal(size=shapes[i % len(shapes)]).astype(np.float32))
+          for i, site in enumerate(stacks)}
+    for layer in range(ms.n_layers):
+        ys = lut_act_multi(xs, entry, layer)
+        assert set(ys) == set(xs)
+        for site, x in xs.items():
+            ref = lut_act_stacked(x, stacks[site].entry(packed=True),
+                                  layer)
+            np.testing.assert_array_equal(
+                np.asarray(ys[site]), np.asarray(ref),
+                err_msg=f"site {site} layer {layer}")
+
+
+def test_multisite_slab_validation():
+    """from_stacks refuses mixed depths and >16-bit components with an
+    actionable message."""
+    _, _, plans = _per_site_plans("qwen3-0.6b")
+    st_ = plans.sites["mlp"].stacked()
+    short = StackedPlanArrays.from_entries(
+        [e for e in plans.sites["mlp"].entry("layers",
+                                             packed=False)["layers"]][:1])
+    with pytest.raises(ValueError, match="n_layers"):
+        MultiSiteSlabs.from_stacks({"a": st_, "b": short})
+
+
+def test_multisite_entry_slices_back_to_stacked():
+    """multi_site_stacked_entry(entry, site) reproduces the site's own
+    packed stacked entry (modulo word-padding, which unpack ignores)."""
+    from repro.serve.stacked import multi_site_stacked_entry
+
+    _, _, plans = _per_site_plans("qwen3-0.6b")
+    stacks = {k: sp.stacked() for k, sp in plans.sites.items()
+              if sp.per_layer}
+    entry = MultiSiteSlabs.from_stacks(stacks).entry()
+    for site, st_ in stacks.items():
+        sliced = multi_site_stacked_entry(entry, site)
+        own = st_.entry(packed=True)
+        assert sliced["meta"]["pack"] == own["meta"]["pack"]
+        for c in COMPONENTS:
+            n = own["arrays"][c].shape[-1]
+            np.testing.assert_array_equal(
+                np.asarray(sliced["arrays"][c])[..., :n],
+                np.asarray(own["arrays"][c]))
+
+
+# =========================================================================
+# fused matmul epilogue == einsum + LUT activation
+# =========================================================================
+@pytest.mark.parametrize("gated", [False, True])
+def test_fused_matmul_matches_unfused(gated):
+    """fused_matmul_lut on a stacked entry == einsum then the stacked
+    kernel, bit for bit, gated and ungated, including the M-padding
+    path (b*t not a multiple of 8)."""
+    from repro.kernels.fused_matmul_lut import fused_matmul_lut
+
+    _, _, plans = _per_site_plans("qwen3-0.6b")
+    sp = plans.sites["mlp"]
+    entry = sp.entry("stacked", packed=True)["stacked"]
+    b, t, k, f = 2, 5, 24, 32      # m = 10: exercises pad-to-block
+    n = 2 * f if gated else f
+    x = jnp.asarray(RNG.normal(size=(b, t, k)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32) * 0.2)
+    for layer in range(min(2, len(sp.luts))):
+        tab = {"stacked": entry, "layer": layer}
+        got = fused_matmul_lut(x, w, tab, gated=gated)
+        h = jnp.einsum("btd,df->btf", x, w)
+        if gated:
+            gate, up = h[..., :f], h[..., f:]
+        else:
+            gate, up = h, None
+        act = lut_act_stacked(gate.reshape(b * t, -1), entry,
+                              layer).reshape(b, t, -1)
+        want = act * up if gated else act
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_matmul_shared_entry():
+    """The shared (non-per-layer) entry form wraps as a 1-layer stack and
+    still matches the unfused pipeline."""
+    from repro.kernels.fused_matmul_lut import fused_matmul_lut
+    from repro.nn.mlp import lut_act_jnp
+
+    _, _, plans = _per_site_plans("qwen3-0.6b")
+    lut = plans.sites["mlp"].luts[0]
+    pa = PlanArrays.from_plan(lut.plan, packed=True)
+    meta = dict(lut.meta(), pack=pa.pack)
+    tab = {"meta": meta, "arrays": pa.arrays}
+    x = jnp.asarray(RNG.normal(size=(2, 4, 16)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(16, 32)).astype(np.float32) * 0.3)
+    got = fused_matmul_lut(x, w, tab, gated=False)
+    raw = PlanArrays.from_plan(lut.plan)
+    # jit the reference: the bit-identity contract holds under XLA's
+    # whole-program simplification (as in decode), not per-op eager math
+    want = jax.jit(lambda x, w: lut_act_jnp(
+        jnp.einsum("btd,df->btf", x, w), raw.arrays, **lut.meta()))(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tables_for_model_fused_validation():
+    """kernel='fused' is pallas+stacked only; packed is pallas-only."""
+    _, _, plans = _per_site_plans("qwen3-0.6b")
+    with pytest.raises(ValueError):
+        plans.tables_for_model(backend="gather", kernel="fused")
+    with pytest.raises(ValueError):
+        plans.tables_for_model(backend="pallas", plan_exec="unrolled",
+                               kernel="fused")
+    with pytest.raises(ValueError):
+        plans.tables_for_model(backend="gather", packed=True)
+    tables = plans.tables_for_model(backend="pallas", kernel="fused")
+    assert tables["kernel"] == "fused" and "multi" in tables
+    assert all("multi" in e for e in tables["sites"].values())
+    # packed super-slab bytes stay below the raw-table accounting
+    assert tables_nbytes(tables) < plans.table_bytes(backend="pallas",
+                                                     packed=False)
+
+
+def test_from_plan_memoized():
+    """PlanArrays.from_plan returns the cached instance for an identical
+    plan (content-keyed, per packed flag) — the PlanCache satellite."""
+    _, _, plans = _per_site_plans("qwen3-0.6b")
+    lut = plans.sites["mlp"].luts[0]
+    a = PlanArrays.from_plan(lut.plan)
+    b = PlanArrays.from_plan(lut.plan)
+    assert a is b
+    p = PlanArrays.from_plan(lut.plan, packed=True)
+    assert p is not a and p.pack is not None
+    assert PlanArrays.from_plan(lut.plan, packed=True) is p
+
+
+# =========================================================================
+# end-to-end: decode under cfg.lut_fuse == gather reference
+# (family sweep; kernels marker keeps it out of tier-1)
+# =========================================================================
+@pytest.mark.kernels
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+@pytest.mark.parametrize("plan_exec", ["stacked", "unrolled"])
+def test_fused_decode_matches_gather_all_families(arch, plan_exec):
+    """verify_backend_equivalence's fused pass: greedy decode with
+    cfg.lut_fuse over the fused/packed tables is token-for-token
+    bit-identical to the gather reference — every family, both
+    execution forms."""
+    cfg, params, plans = _per_site_plans(arch, plan_exec=plan_exec)
+    rng = np.random.default_rng(3)
+    batch = model_batch(cfg, rng, 2, 8)
+    verify_backend_equivalence(cfg, params, plans, batch, n_new=3)
+
+
+@pytest.mark.kernels
+def test_fused_multisite_decode_all_sites():
+    """kernel='fused' tables with lut_sites='all': every per-layer site
+    routes through the ONE multi-site super-slab during decode, and the
+    tokens still bit-match gather."""
+    cfg = dataclasses.replace(smoke_config(get_config("qwen3-0.6b")),
+                              dtype="float32", lut_sites="all")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batches = synthetic_batches(cfg, 1, batch_size=2, seq_len=8, seed=1)
+    calib = capture_calibration(params, cfg, batches, w_in=8)
+    plans = build_serving_plans(cfg, calib, w_out=8, backend="pallas")
+    rng = np.random.default_rng(3)
+    batch = model_batch(cfg, rng, 2, 8)
+    verify_backend_equivalence(cfg, params, plans, batch, n_new=3)
