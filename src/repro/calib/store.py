@@ -5,14 +5,19 @@ Serve restarts (and CI smoke jobs) should not pay recapture: a captured
 ``.npz`` holding every mask (bit-exact bool vectors), the histograms
 behind them (so masks can be re-derived with different knobs without
 recapturing), and a JSON header with the quantizer parameters.  The
-round trip is bit-exact (asserted in ``tests/test_calib.py``).
+round trip is bit-exact (asserted in ``tests/test_calib.py``), the write
+is atomic, and the payload is content-checksummed on save and verified
+on load (:mod:`repro.ioutil`) — a truncated or bit-flipped artifact
+raises a clear :class:`~repro.ioutil.ArtifactError` naming the file
+instead of deserializing garbage masks.
 """
 from __future__ import annotations
 
-import json
 import os
 
 import numpy as np
+
+from repro.ioutil import ArtifactError, load_checked_npz, save_checked_npz
 
 from .masks import CalibrationSet
 
@@ -27,8 +32,6 @@ _RANGE = "range:"
 
 def save_calibration(path: str, calib: CalibrationSet) -> str:
     """Write ``calib`` to ``path`` (``.npz`` appended if missing)."""
-    if not path.endswith(".npz"):
-        path = path + ".npz"
     header = {
         "format": _FORMAT,
         "w_in": calib.w_in,
@@ -36,10 +39,7 @@ def save_calibration(path: str, calib: CalibrationSet) -> str:
         "x_hi": calib.x_hi,
         "meta": calib.meta,
     }
-    payload: dict[str, np.ndarray] = {
-        "__header__": np.frombuffer(
-            json.dumps(header).encode("utf-8"), dtype=np.uint8),
-    }
+    payload: dict[str, np.ndarray] = {}
     for key, mask in calib.masks.items():
         payload[_MASK + key] = np.asarray(mask, dtype=bool)
     if calib.hists is not None:
@@ -48,32 +48,24 @@ def save_calibration(path: str, calib: CalibrationSet) -> str:
     if calib.ranges is not None:
         for key, rng in calib.ranges.items():
             payload[_RANGE + key] = np.asarray(rng, dtype=np.float64)
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        np.savez_compressed(f, **payload)
-    os.replace(tmp, path)
-    return path
+    return save_checked_npz(path, header, payload, kind="calibration")
 
 
 def load_calibration(path: str) -> CalibrationSet:
     """Read a :func:`save_calibration` artifact back, bit-exactly."""
     if not path.endswith(".npz") and not os.path.exists(path):
         path = path + ".npz"
-    with np.load(path) as data:
-        if "__header__" not in data:
-            raise ValueError(
-                f"{path}: not a calibration artifact (missing header)")
-        header = json.loads(bytes(data["__header__"]).decode("utf-8"))
-        if header.get("format") not in _FORMATS:
-            raise ValueError(
-                f"{path}: unknown calibration format "
-                f"{header.get('format')!r} (expected one of {_FORMATS})")
-        masks = {k[len(_MASK):]: np.asarray(data[k], dtype=bool)
-                 for k in data.files if k.startswith(_MASK)}
-        hists = {k[len(_HIST):]: np.asarray(data[k], dtype=np.int64)
-                 for k in data.files if k.startswith(_HIST)}
-        ranges = {k[len(_RANGE):]: np.asarray(data[k], dtype=np.float64)
-                  for k in data.files if k.startswith(_RANGE)}
+    header, data = load_checked_npz(path, kind="calibration")
+    if header.get("format") not in _FORMATS:
+        raise ArtifactError(
+            f"{path}: unknown calibration format "
+            f"{header.get('format')!r} (expected one of {_FORMATS})")
+    masks = {k[len(_MASK):]: np.asarray(v, dtype=bool)
+             for k, v in data.items() if k.startswith(_MASK)}
+    hists = {k[len(_HIST):]: np.asarray(v, dtype=np.int64)
+             for k, v in data.items() if k.startswith(_HIST)}
+    ranges = {k[len(_RANGE):]: np.asarray(v, dtype=np.float64)
+              for k, v in data.items() if k.startswith(_RANGE)}
     return CalibrationSet(
         masks=masks,
         w_in=header["w_in"],

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,18 @@ from .packing import COMPONENTS, pack_component_dict
 from .runtime import default_interpret, resolve_interpret
 
 LANES = 128
+
+
+def _fault_point(point: str) -> None:
+    """Serving-control-plane fault injection (repro.serve.faults): the
+    wrapper bodies run at trace time inside jitted steps — exactly where
+    real lowering/launch failures surface — so armed injectors can stage
+    kernel faults deterministically.  Resolved lazily through
+    ``sys.modules`` so the kernels package never imports the serving
+    layer, and free when no injector is active."""
+    faults = sys.modules.get("repro.serve.faults")
+    if faults is not None and faults._ACTIVE:
+        faults.fault_point(point)
 
 
 def _pad_to(a: np.ndarray, mult: int) -> np.ndarray:
@@ -154,6 +167,7 @@ def lut_reconstruct(
     x: jax.Array, pa: PlanArrays, interpret: bool | None = None
 ) -> jax.Array:
     """Evaluate the compressed table at int addresses ``x`` (any shape)."""
+    _fault_point("pallas:lut_reconstruct")
     interpret = resolve_interpret(interpret)
     shape = x.shape
     x2d, n = _to_2d(x.reshape(-1).astype(jnp.int32), 8)
@@ -202,6 +216,7 @@ def lut_act(
     interpret: bool | None = None,
 ) -> jax.Array:
     """Fused LUT-approximated activation over a float tensor of any shape."""
+    _fault_point("pallas:lut_act")
     interpret = resolve_interpret(interpret)
     assert pa.kind == "decomposed", "lut_act expects a decomposed plan"
     shape = x.shape
@@ -229,6 +244,7 @@ def lut_act_stacked(
     inside ``lax.scan``: ``layer`` may be a traced in-scan layer id; it is
     fed to the kernel as a scalar-prefetch operand so only that layer's
     table slab is staged into VMEM per grid step."""
+    _fault_point("pallas:lut_act_stacked")
     interpret = resolve_interpret(interpret)
     meta = stacked["meta"]
     a = stacked["arrays"]
@@ -285,6 +301,7 @@ def lut_act_multi(
     against the shared super-slab instead of per-site programs with
     per-site table uploads.
     """
+    _fault_point("pallas:lut_act_multi")
     interpret = resolve_interpret(interpret)
     meta = entry["meta"]
     site_order = meta["sites"]

@@ -10,10 +10,28 @@ Offline-scale implementation of the scheduling logic (per-slot position
 tracking, admission, eviction-on-EOS/length, utilization accounting) —
 the part that is identical at cluster scale; the step function underneath
 is the same one the 512-chip dry-run lowers.
+
+Control-plane hooks (serve/reload.py, serve/degrade.py):
+
+* :meth:`ContinuousBatcher.swap_tables` atomically replaces the served
+  plan between ticks — in-flight slots keep their cache rows and
+  positions, only the step closures are rebuilt (gated hot reload,
+  ladder demotion/promotion; all LUT rungs are bit-identical, so a swap
+  above the float rung never changes served tokens);
+* a ``supervisor`` object (``on_tick(batcher)`` / ``on_fault(batcher,
+  exc) -> bool``) observes every tick and may handle step faults by
+  swapping tables and requesting a retry;
+* :meth:`run` detects no-progress ticks (a request that can never be
+  admitted or advanced) and raises naming the stuck request instead of
+  spinning to ``max_ticks``;
+* per-request latency stamps (submit/first-token/done) feed
+  :meth:`metrics` — dropped-request accounting, latency/TTFT
+  percentiles, SLO violations.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import jax
@@ -33,6 +51,22 @@ class Request:
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    slo_ms: float | None = None    # per-request latency objective
+    t_submit: float | None = None  # stamped by submit()
+    t_first: float | None = None   # first output token
+    t_done: float | None = None    # eviction
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.t_submit is None or self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+    @property
+    def ttft_s(self) -> float | None:
+        if self.t_submit is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
 
 
 @dataclasses.dataclass
@@ -48,7 +82,7 @@ class ContinuousBatcher:
     def __init__(self, cfg: ArchConfig, params, batch_size: int,
                  max_seq: int, eos_token: int = 0,
                  kv_dtype: str = "bfloat16", lut_tables: dict | None = None,
-                 prefill: str = "step", mesh=None):
+                 prefill: str = "step", mesh=None, supervisor=None):
         if prefill not in ("step", "replay"):
             raise ValueError(
                 f"prefill must be 'step' or 'replay', got {prefill!r}")
@@ -58,8 +92,24 @@ class ContinuousBatcher:
         self.eos = eos_token
         self.prefill = prefill
         self.mesh = mesh
+        self.kv_dtype = kv_dtype
+        self.supervisor = supervisor
+        self.lut_tables = lut_tables
+        self.params = params
         self.cache = init_cache(cfg, batch_size, max_seq, kv_dtype)
-        if mesh is not None:
+        self._build_step_fns(first=True)
+        self.slots = [_Slot() for _ in range(batch_size)]
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self.steps = 0
+        self.active_slot_steps = 0
+        self.replayed_tokens = 0
+        self.submitted = 0
+        self.table_swaps = 0
+
+    def _build_step_fns(self, first: bool = False) -> None:
+        cfg = self.cfg
+        if self.mesh is not None:
             # Sharded serving: data-parallel batch pool x (bit-exact)
             # tensor-parallel model, tables placed per the mesh policy.
             # The scheduler logic above this line is unchanged — slot
@@ -67,22 +117,22 @@ class ContinuousBatcher:
             # keep their placement.
             from .sharded import ShardedServe
 
-            self._serve = ShardedServe(cfg, mesh, lut_tables,
-                                       kv_dtype=kv_dtype)
+            self._serve = ShardedServe(cfg, self.mesh, self.lut_tables,
+                                       kv_dtype=self.kv_dtype)
             self.lut_tables = self._serve.tables
-            self.params = self._serve.place_params(params)
-            self.cache = self._serve.place_cache(self.cache)
+            if first:
+                self.params = self._serve.place_params(self.params)
+                self.cache = self._serve.place_cache(self.cache)
             self._replay = lambda p, c, toks: self._serve.replay(
                 p, c, toks, 0)
             self._step = self._serve.decode
         else:
             self._serve = None
-            self.lut_tables = lut_tables
-            self.params = params
+            tables = self.lut_tables
             # one wrapper; jit shape-specializes per prompt length
             # internally
             self._replay = jax.jit(lambda p, c, toks: prefill_replay(
-                p, cfg, c, toks, 0, lut_tables=lut_tables))
+                p, cfg, c, toks, 0, lut_tables=tables))
             # per-slot positions differ => decode_step takes a (B,) pos
             # vector?  the shared step uses a scalar pos; we instead track
             # per-slot pos and run the step with per-slot token + per-slot
@@ -92,16 +142,59 @@ class ContinuousBatcher:
             # through masked writes.
             self._step = jax.jit(
                 lambda p, c, t, pos: decode_step(p, cfg, c, t, pos,
-                                                 lut_tables=lut_tables))
-        self.slots = [_Slot() for _ in range(batch_size)]
-        self.queue: deque[Request] = deque()
-        self.finished: list[Request] = []
-        self.steps = 0
-        self.active_slot_steps = 0
-        self.replayed_tokens = 0
+                                                 lut_tables=tables))
+
+    def swap_tables(self, lut_tables: dict | None,
+                    cfg: ArchConfig | None = None) -> None:
+        """Atomically swap the served plan (and optionally the patched
+        config) between scheduler ticks: in-flight slots keep their cache
+        rows and positions; only the jitted step closures are rebuilt.
+        The hot-reload cutover and every ladder demotion/promotion go
+        through here — above the float rung all plans are bit-identical,
+        so a swap never changes served tokens."""
+        if cfg is not None:
+            self.cfg = cfg
+        self.lut_tables = lut_tables
+        self._build_step_fns()
+        self.table_swaps += 1
+
+    def _guarded(self, thunk):
+        """Run one jitted serving call under the supervisor's fault
+        policy: on an exception the supervisor may swap tables (ladder
+        demotion, reload rollback) and have the call retried with the
+        rebuilt closures.  Bounded so an unhandled repeated fault still
+        surfaces — the ladder demotes at most to the float rung in one
+        pass, so real recoveries converge in one or two retries."""
+        for _ in range(6):
+            try:
+                return thunk()
+            except Exception as e:
+                if (self.supervisor is None
+                        or not self.supervisor.on_fault(self, e)):
+                    raise
+        raise RuntimeError(
+            "serving fault persisted after 6 supervised retries")
 
     def submit(self, req: Request) -> None:
+        if not req.prompt:
+            raise ValueError(
+                f"request {req.rid}: empty prompt cannot be scheduled")
+        req.t_submit = time.monotonic()
+        self.submitted += 1
         self.queue.append(req)
+
+    def _emit(self, req: Request, tok: int) -> None:
+        req.out.append(tok)
+        if req.t_first is None:
+            req.t_first = time.monotonic()
+
+    def _finish(self, slot: _Slot) -> None:
+        req = slot.req
+        req.done = True
+        req.t_done = time.monotonic()
+        self.finished.append(req)
+        slot.req = None
+        slot.pending = None
 
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
@@ -138,8 +231,8 @@ class ContinuousBatcher:
         snap = {name: self.cache[name][:, others, :n]
                 for name in self.cache if name in
                 ("k", "v", "k_scale", "v_scale")}
-        logits, self.cache = self._replay(
-            self.params, self.cache, jnp.asarray(tokens))
+        logits, self.cache = self._guarded(lambda: self._replay(
+            self.params, self.cache, jnp.asarray(tokens)))
         if others:
             oth = jnp.asarray(others)
             for name, before in snap.items():
@@ -152,18 +245,12 @@ class ContinuousBatcher:
             # step-path semantics: the prompt never finished ingesting, so
             # no output token is produced; the slot is evicted at the
             # cache boundary.
-            req.done = True
-            self.finished.append(req)
-            slot.req = None
-            slot.pending = None
+            self._finish(slot)
             return
-        req.out.append(int(jnp.argmax(logits[i, -1])))
+        self._emit(req, int(jnp.argmax(logits[i, -1])))
         if (slot.pos >= self.max_seq or len(req.out) >= req.max_new
                 or req.out[-1] == self.eos):
-            req.done = True
-            self.finished.append(req)
-            slot.req = None
-            slot.pending = None
+            self._finish(slot)
 
     @property
     def n_active(self) -> int:
@@ -209,9 +296,9 @@ class ContinuousBatcher:
             snap = {name: self.cache[name][:, :, pos]
                     for name in self.cache if name in
                     ("k", "v", "k_scale", "v_scale")}
-            logits, self.cache = self._step(
+            logits, self.cache = self._guarded(lambda: self._step(
                 self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(pos))
+                jnp.asarray(pos)))
             if others:
                 oth = jnp.asarray(others)
                 for name, before in snap.items():
@@ -226,9 +313,9 @@ class ContinuousBatcher:
                 if slot.pending:
                     slot.pending.pop(0)
                     if not slot.pending:  # prompt done: first output token
-                        req.out.append(int(nxt[i]))
+                        self._emit(req, int(nxt[i]))
                 else:
-                    req.out.append(int(nxt[i]))
+                    self._emit(req, int(nxt[i]))
                 # Evict when finished (max_new / EOS) or when the cache is
                 # exactly full: ``slot.pos`` is the *next* write index, so
                 # the slot may keep decoding until pos == max_seq — the
@@ -239,15 +326,41 @@ class ContinuousBatcher:
                         or (not slot.pending
                             and (len(req.out) >= req.max_new
                                  or req.out[-1] == self.eos))):
-                    req.done = True
-                    self.finished.append(req)
-                    slot.req = None
-                    slot.pending = None
+                    self._finish(slot)
         self.steps += 1
 
-    def run(self, max_ticks: int = 10000) -> list[Request]:
+    def run(self, max_ticks: int = 10000,
+            stall_ticks: int = 4) -> list[Request]:
+        """Drive the scheduler until the queue drains (or ``max_ticks``).
+
+        The supervisor's ``on_tick`` runs *between* ticks — reload
+        cutovers and ladder promotions land here, never mid-step.  A
+        tick that neither finishes a request, advances a slot, nor
+        replays prompt tokens makes no progress; ``stall_ticks``
+        consecutive ones mean some request can never be admitted or
+        advanced (e.g. a zero-slot pool) — raise naming it instead of
+        spinning to ``max_ticks``."""
+        stalled = 0
         while (self.queue or self.n_active) and self.steps < max_ticks:
+            if (self.supervisor is not None
+                    and hasattr(self.supervisor, "on_tick")):
+                self.supervisor.on_tick(self)
+            before = (len(self.finished), self.active_slot_steps,
+                      self.replayed_tokens)
             self.step()
+            after = (len(self.finished), self.active_slot_steps,
+                     self.replayed_tokens)
+            stalled = stalled + 1 if after == before else 0
+            if stalled >= stall_ticks:
+                stuck = sorted(
+                    [s.req.rid for s in self.slots if s.req is not None]
+                    + [r.rid for r in self.queue])
+                raise RuntimeError(
+                    f"ContinuousBatcher stalled: no progress for "
+                    f"{stalled} consecutive ticks with request id(s) "
+                    f"{stuck} still unserved (batch_size={self.b}, "
+                    f"max_seq={self.max_seq}) — the scheduler can never "
+                    f"admit or advance them")
         return self.finished
 
     @property
@@ -256,3 +369,37 @@ class ContinuousBatcher:
         if self.steps == 0:
             return 0.0
         return self.active_slot_steps / (self.steps * self.b)
+
+    def metrics(self) -> dict:
+        """Control-plane observability snapshot: request accounting
+        (anything submitted but neither finished, queued, nor in-flight
+        counts as dropped — asserted zero in the robustness suite),
+        latency/TTFT percentiles over finished requests, and SLO
+        violations for requests that carried a target."""
+        lats = sorted(r.latency_s for r in self.finished
+                      if r.latency_s is not None)
+        ttfts = sorted(r.ttft_s for r in self.finished
+                       if r.ttft_s is not None)
+        pct = lambda xs, q: (
+            float(xs[min(len(xs) - 1, int(q * len(xs)))]) if xs else None)
+        slo = [r for r in self.finished if r.slo_ms is not None
+               and r.latency_s is not None]
+        return {
+            "submitted": self.submitted,
+            "finished": len(self.finished),
+            "queued": len(self.queue),
+            "active": self.n_active,
+            "dropped": (self.submitted - len(self.finished)
+                        - len(self.queue) - self.n_active),
+            "ticks": self.steps,
+            "utilization": self.utilization,
+            "replayed_tokens": self.replayed_tokens,
+            "table_swaps": self.table_swaps,
+            "latency_p50_s": pct(lats, 0.50),
+            "latency_p95_s": pct(lats, 0.95),
+            "latency_max_s": float(lats[-1]) if lats else None,
+            "ttft_p50_s": pct(ttfts, 0.50),
+            "slo_violations": sum(
+                1 for r in slo if r.latency_s * 1e3 > r.slo_ms),
+            "slo_tracked": len(slo),
+        }

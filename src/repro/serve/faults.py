@@ -1,0 +1,192 @@
+"""Fault injection for the serving control plane.
+
+The control plane's whole job is surviving failures that never happen in
+a clean CI run — corrupt plan artifacts, Pallas lowering/launch faults,
+a retune pipeline that hangs mid-upload.  This module makes those
+failures *schedulable*: a :class:`FaultInjector` is a context manager
+that arms named fault points, and instrumented call sites (the public
+Pallas wrappers in :mod:`repro.kernels.ops`, the reloader's artifact
+load) consult the active injectors on every python-level call — which
+for jitted code means trace time, exactly where real lowering failures
+surface.
+
+    with FaultInjector() as inj:
+        inj.inject("pallas:lut_act_stacked", times=2)
+        batcher.run()          # ladder demotes, re-probes, re-promotes
+
+Instrumentation is zero-cost when no injector is active, and the kernels
+package never imports this module — it discovers it through
+``sys.modules`` only if a test (or the launcher's drill mode) already
+imported it.
+
+Fault points armed today:
+
+* ``pallas:lut_act`` / ``pallas:lut_act_stacked`` / ``pallas:lut_act_multi``
+  / ``pallas:lut_reconstruct`` — the Pallas wrapper entry, standing in
+  for kernel lowering/launch failures;
+* ``reload:load`` — the reloader's artifact read, for slow/stuck-reload
+  drills (``delay=...`` with ``exc=None`` models slow-but-successful).
+
+The byte-level corruption helpers (:func:`corrupt_file`,
+:func:`corrupt_rung`) stage the *data* faults: truncated/bit-flipped
+artifacts on disk and corrupted served table slabs in memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+_ACTIVE: list["FaultInjector"] = []
+
+
+@dataclasses.dataclass
+class _Rule:
+    point: str
+    exc: type | None
+    message: str | None
+    times: int | None          # fire at most this many times (None = always)
+    after: int                 # skip the first `after` hits
+    delay: float               # sleep before raising (slow-path faults)
+    hits: int = 0
+    fired: int = 0
+
+
+class FaultInjector:
+    """Arms fault points while entered; rules fire on matching hits."""
+
+    def __init__(self):
+        self.rules: dict[str, _Rule] = {}
+        self.log: list[tuple[str, int]] = []
+
+    def inject(self, point: str, exc: type | None = RuntimeError,
+               message: str | None = None, times: int | None = None,
+               after: int = 0, delay: float = 0.0) -> "FaultInjector":
+        """Arm ``point``: after skipping ``after`` hits, the next
+        ``times`` hits sleep ``delay`` seconds and raise ``exc``
+        (``exc=None`` = delay only, the slow-but-successful fault)."""
+        self.rules[point] = _Rule(point, exc, message, times, after, delay)
+        return self
+
+    def clear(self, point: str | None = None) -> None:
+        if point is None:
+            self.rules.clear()
+        else:
+            self.rules.pop(point, None)
+
+    def fire(self, point: str) -> None:
+        rule = self.rules.get(point)
+        if rule is None:
+            return
+        rule.hits += 1
+        if rule.hits <= rule.after:
+            return
+        if rule.times is not None and rule.fired >= rule.times:
+            return
+        rule.fired += 1
+        self.log.append((point, rule.hits))
+        if rule.delay:
+            time.sleep(rule.delay)
+        if rule.exc is not None:
+            raise rule.exc(
+                rule.message or f"injected fault at {point}")
+
+    def __enter__(self) -> "FaultInjector":
+        _ACTIVE.append(self)
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        _ACTIVE.remove(self)
+        return False
+
+
+def fault_point(point: str) -> None:
+    """Instrumentation hook: fire every active injector's rule for
+    ``point`` (no-op unless a :class:`FaultInjector` is entered)."""
+    for inj in list(_ACTIVE):
+        inj.fire(point)
+
+
+def injection_active() -> bool:
+    return bool(_ACTIVE)
+
+
+# ---------------------------------------------------------------------------
+# Data faults: corrupt artifacts on disk, corrupt table slabs in memory
+# ---------------------------------------------------------------------------
+def corrupt_file(src: str, dst: str, mode: str = "bitflip",
+                 seed: int = 0, n_flips: int = 16) -> str:
+    """Write a corrupted copy of ``src`` to ``dst``.
+
+    ``mode="truncate"`` keeps the first 60% of the bytes (a torn write /
+    interrupted upload); ``mode="bitflip"`` flips ``n_flips`` random bits
+    in the back three quarters (radiation-style payload damage that the
+    zip directory may survive)."""
+    with open(src, "rb") as f:
+        data = bytearray(f.read())
+    if mode == "truncate":
+        data = data[:max(1, int(len(data) * 0.6))]
+    elif mode == "bitflip":
+        rng = np.random.default_rng(seed)
+        for _ in range(n_flips):
+            i = int(rng.integers(len(data) // 4, len(data)))
+            data[i] ^= 1 << int(rng.integers(8))
+    else:
+        raise ValueError(f"corrupt_file: unknown mode {mode!r}")
+    with open(dst, "wb") as f:
+        f.write(bytes(data))
+    return dst
+
+
+def _corrupt_arrays(arrays: dict, component: str, seed: int) -> dict:
+    import jax.numpy as jnp
+
+    a = np.asarray(arrays[component])
+    rng = np.random.default_rng(seed)
+    flat = a.reshape(-1).copy()
+    idx = rng.integers(0, flat.size, size=max(8, flat.size // 8))
+    flat[idx] ^= np.int32(1) << 7
+    out = dict(arrays)
+    out[component] = jnp.asarray(flat.reshape(a.shape))
+    return out
+
+
+def corrupt_tables(tables: dict, site: str, component: str = "t_ust",
+                   seed: int = 0) -> dict:
+    """Return a copy of a served ``lut_tables`` dict with one site's
+    ``component`` slab bit-flipped: shapes/dtypes stay valid, the served
+    *values* change — the silent-corruption fault only a value-level
+    probe (the ladder's bit-identity validation vs gather) can catch."""
+    tables = dict(tables)
+    sites_d = dict(tables["sites"])
+    entry = dict(sites_d[site])
+    if "stacked" in entry:
+        st = dict(entry["stacked"])
+        st["arrays"] = _corrupt_arrays(st["arrays"], component, seed)
+        entry["stacked"] = st
+    elif "multi" in entry:
+        multi = dict(tables["multi"])
+        multi["arrays"] = _corrupt_arrays(multi["arrays"], component, seed)
+        tables["multi"] = multi
+    elif "layers" in entry:
+        layers = [dict(e) for e in entry["layers"]]
+        layers[0]["arrays"] = _corrupt_arrays(
+            layers[0]["arrays"], component, seed)
+        entry["layers"] = layers
+    else:
+        entry["arrays"] = _corrupt_arrays(entry["arrays"], component, seed)
+    sites_d[site] = entry
+    tables["sites"] = sites_d
+    return tables
+
+
+def corrupt_rung(ladder, rung: str, site: str, component: str = "t_ust",
+                 seed: int = 0) -> None:
+    """Corrupt one site's slab inside a
+    :class:`~repro.serve.degrade.DegradationLadder` rung cache — the
+    in-memory analogue of a flipped DMA: the ladder's next revalidation
+    probe must catch it by bit-identity against the gather rung."""
+    ladder.set_rung_tables(
+        rung, corrupt_tables(ladder.rung_tables(rung), site,
+                             component=component, seed=seed))

@@ -301,6 +301,13 @@ class ServingPlans:
     def patched_config(self, cfg: ArchConfig) -> ArchConfig:
         return dataclasses.replace(cfg, lut_activation=True)
 
+    def fused_available(self, plan_exec: str | None = None) -> bool:
+        """True when these plans can serve the fused multi-site kernel
+        (Pallas + stacked execution + per-layer sites, single device) —
+        the top rung of the serving degradation ladder."""
+        exec_ = plan_exec or self.plan_exec
+        return exec_ == "stacked" and self.per_layer and not self.mesh
+
     @property
     def per_layer(self) -> bool:
         return any(sp.per_layer for sp in self.sites.values())

@@ -21,6 +21,7 @@ from .artifact import (
     load_tuned_plan,
     save_tuned_plan,
     tuned_plan_from_outcome,
+    tuned_plan_from_serving,
 )
 from .parity import (
     ParityHarness,
@@ -69,5 +70,6 @@ __all__ = [
     "served_parity",
     "trained_params",
     "tuned_plan_from_outcome",
+    "tuned_plan_from_serving",
     "w_out_from_ranges",
 ]

@@ -13,16 +13,20 @@ itself).
 One compressed ``.npz`` holds a JSON header (knobs, frontier, metrics,
 per-entry metas — floats round-trip exactly through JSON's double
 representation) plus one array entry per ``plan:{site}:{layer}:{field}``.
+Writes are atomic and the payload is content-checksummed on save and
+verified on load (:mod:`repro.ioutil`): a truncated or bit-flipped
+artifact raises a clear :class:`~repro.ioutil.ArtifactError` naming the
+file, instead of deserializing garbage tables into a running server.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.ioutil import ArtifactError, load_checked_npz, save_checked_npz
 from repro.serve.stacked import COMPONENTS as _FIELDS
 
 _FORMAT = "repro-tuned-plan/v1"
@@ -115,6 +119,13 @@ class TunedPlan:
                 f"site, config expects {cfg.n_layers}")
         return dataclasses.replace(cfg, lut_activation=True)
 
+    def fused_available(self, plan_exec: str | None = None) -> bool:
+        """True when these plans can serve the fused multi-site kernel
+        (Pallas + stacked execution + at least one per-layer site) — the
+        top rung of the serving degradation ladder."""
+        exec_ = plan_exec or self.plan_exec
+        return exec_ == "stacked" and any(self.per_layer.values())
+
     @property
     def total_cost(self) -> int:
         return int(self.meta.get("cost", 0))
@@ -170,10 +181,39 @@ def tuned_plan_from_outcome(cfg: ArchConfig, outcome,
         metrics=outcome.metrics.to_dict(), meta=meta)
 
 
+def tuned_plan_from_serving(cfg: ArchConfig, plans,
+                            extra_meta: dict | None = None) -> TunedPlan:
+    """Freeze built :class:`~repro.serve.plans.ServingPlans` into an
+    artifact without an autotune sweep — the ``launch/serve --save-plan``
+    path.  The stored entries are the exact device arrays the plans
+    serve, so a hot reload of a frozen plan is parity-gate-trivial
+    (token-identical to the serving that produced it)."""
+    from repro.kernels import PlanArrays
+
+    sites: dict[str, list[dict]] = {}
+    per_layer: dict[str, bool] = {}
+    for kind, sp in plans.sites.items():
+        entries = []
+        for lut in sp.luts:
+            pa = PlanArrays.from_plan(lut.plan)
+            entries.append({
+                "meta": dict(lut.meta()),
+                "arrays": {f: np.asarray(pa.arrays[f], dtype=np.int32)
+                           for f in _FIELDS},
+            })
+        sites[kind] = entries
+        per_layer[kind] = sp.per_layer
+    meta = {"cost": plans.total_cost, "source": "serving_plans",
+            "calib": plans.calib, **(extra_meta or {})}
+    return TunedPlan(
+        arch=cfg.name, family=cfg.family, n_layers=cfg.n_layers,
+        backend=plans.backend, plan_exec=plans.plan_exec,
+        sites=sites, per_layer=per_layer, knobs={}, frontier=[],
+        metrics={}, meta=meta)
+
+
 def save_tuned_plan(path: str, tp: TunedPlan) -> str:
     """Write ``tp`` to ``path`` (``.npz`` appended if missing)."""
-    if not path.endswith(".npz"):
-        path = path + ".npz"
     header = {
         "format": _FORMAT,
         "arch": tp.arch,
@@ -189,47 +229,36 @@ def save_tuned_plan(path: str, tp: TunedPlan) -> str:
         "site_metas": {site: [e["meta"] for e in entries]
                        for site, entries in tp.sites.items()},
     }
-    payload: dict[str, np.ndarray] = {
-        "__header__": np.frombuffer(
-            json.dumps(header).encode("utf-8"), dtype=np.uint8),
-    }
+    payload: dict[str, np.ndarray] = {}
     for site, entries in tp.sites.items():
         for layer, e in enumerate(entries):
             for field in _FIELDS:
                 payload[f"{_PLAN}{site}:{layer}:{field}"] = np.asarray(
                     e["arrays"][field], dtype=np.int32)
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        np.savez_compressed(f, **payload)
-    os.replace(tmp, path)
-    return path
+    return save_checked_npz(path, header, payload, kind="tuned-plan")
 
 
 def load_tuned_plan(path: str) -> TunedPlan:
     """Read a :func:`save_tuned_plan` artifact back, bit-exactly."""
     if not path.endswith(".npz") and not os.path.exists(path):
         path = path + ".npz"
-    with np.load(path) as data:
-        if "__header__" not in data:
-            raise ValueError(
-                f"{path}: not a tuned-plan artifact (missing header)")
-        header = json.loads(bytes(data["__header__"]).decode("utf-8"))
-        if header.get("format") != _FORMAT:
-            raise ValueError(
-                f"{path}: unknown tuned-plan format "
-                f"{header.get('format')!r} (expected {_FORMAT!r})")
-        sites: dict[str, list[dict]] = {}
-        for site, metas in header["site_metas"].items():
-            entries = []
-            for layer, meta in enumerate(metas):
-                entries.append({
-                    "meta": dict(meta),
-                    "arrays": {
-                        f: np.asarray(data[f"{_PLAN}{site}:{layer}:{f}"],
-                                      dtype=np.int32)
-                        for f in _FIELDS},
-                })
-            sites[site] = entries
+    header, data = load_checked_npz(path, kind="tuned-plan")
+    if header.get("format") != _FORMAT:
+        raise ArtifactError(
+            f"{path}: unknown tuned-plan format "
+            f"{header.get('format')!r} (expected {_FORMAT!r})")
+    sites: dict[str, list[dict]] = {}
+    for site, metas in header["site_metas"].items():
+        entries = []
+        for layer, meta in enumerate(metas):
+            entries.append({
+                "meta": dict(meta),
+                "arrays": {
+                    f: np.asarray(data[f"{_PLAN}{site}:{layer}:{f}"],
+                                  dtype=np.int32)
+                    for f in _FIELDS},
+            })
+        sites[site] = entries
     return TunedPlan(
         arch=header["arch"], family=header["family"],
         n_layers=header["n_layers"], backend=header["backend"],

@@ -157,3 +157,43 @@ def test_batcher_matches_single_request_decode(model):
     done = sorted(b.run(), key=lambda r: r.rid)
     for r, want in zip(done, refs):
         assert r.out == want, (r.rid, r.out, want)
+
+
+def test_empty_prompt_rejected_at_submit(model):
+    cfg, params = model
+    b = ContinuousBatcher(cfg, params, batch_size=1, max_seq=8,
+                          eos_token=-1)
+    with pytest.raises(ValueError, match="request 7: empty prompt"):
+        b.submit(Request(rid=7, prompt=[], max_new=2))
+    assert b.submitted == 0 and not b.queue
+
+
+def test_stall_detection_names_stuck_request(model):
+    """A request that can never be admitted (zero-slot pool) must raise
+    naming its rid instead of spinning to max_ticks."""
+    cfg, params = model
+    b = ContinuousBatcher(cfg, params, batch_size=0, max_seq=8,
+                          eos_token=-1)
+    b.submit(Request(rid=42, prompt=[1, 2], max_new=2))
+    with pytest.raises(RuntimeError, match=r"stalled.*\[42\]"):
+        b.run(stall_ticks=3)
+
+
+def test_metrics_accounting_and_slo(model):
+    cfg, params = model
+    rng = np.random.default_rng(3)
+    b = ContinuousBatcher(cfg, params, batch_size=2, max_seq=16,
+                          eos_token=-1)
+    for i in range(3):
+        b.submit(Request(rid=i, prompt=list(rng.integers(1, cfg.vocab_size,
+                                                         4)),
+                         max_new=3, slo_ms=0.001 if i == 0 else 1e9))
+    b.run()
+    m = b.metrics()
+    assert m["submitted"] == m["finished"] == 3
+    assert m["dropped"] == 0 and m["queued"] == 0 and m["active"] == 0
+    assert m["latency_p50_s"] > 0 and m["latency_max_s"] >= m["latency_p50_s"]
+    assert m["ttft_p50_s"] is not None
+    # rid 0 carried an impossible 1us SLO, the others an absurdly lax one
+    assert m["slo_tracked"] == 3 and m["slo_violations"] == 1
+    assert m["table_swaps"] == 0

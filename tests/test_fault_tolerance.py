@@ -1,0 +1,122 @@
+"""Unit tests for the training fault-tolerance layer
+(train/fault_tolerance.py): straggler detection and the supervised
+checkpoint/restart loop."""
+import numpy as np
+import pytest
+
+from repro.train.fault_tolerance import StragglerMonitor, Supervisor
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor
+# ---------------------------------------------------------------------------
+
+def test_straggler_warmup_never_flags():
+    """The first 8 observations build the baseline — even wild latencies
+    must not flag before the window can support a robust estimate."""
+    mon = StragglerMonitor()
+    assert not any(mon.observe(v) for v in
+                   [0.1, 100.0, 0.1, 50.0, 0.1, 0.1, 0.1, 0.1])
+
+
+def test_straggler_outlier_flagged_inliers_pass():
+    mon = StragglerMonitor(threshold=4.0)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        assert not mon.observe(0.1 + 0.01 * rng.random())
+    assert mon.observe(10.0)       # ~100x the median
+    assert not mon.observe(0.105)  # back to normal
+
+
+def test_straggler_window_trims():
+    mon = StragglerMonitor(window=10)
+    for _ in range(50):
+        mon.observe(0.1)
+    assert len(mon._lat) == 10
+
+
+def test_straggler_constant_latency_is_stable():
+    """Zero MAD (perfectly constant latency) must not divide by zero or
+    flag the identical next step."""
+    mon = StragglerMonitor()
+    for _ in range(20):
+        assert not mon.observe(0.5)
+    assert mon.observe(0.6)   # any deviation is infinite z under MAD~0
+
+
+# ---------------------------------------------------------------------------
+# Supervisor
+# ---------------------------------------------------------------------------
+
+def _counting_step(fail_at=(), raised=None):
+    """step_fn that increments state['x'] by the batch and fails once per
+    step index listed in ``fail_at``."""
+    raised = set() if raised is None else raised
+
+    def step_fn(state, batch):
+        step = batch["step"]
+        if step in fail_at and step not in raised:
+            raised.add(step)
+            raise RuntimeError(f"injected failure at step {step}")
+        return {"x": state["x"] + batch["inc"]}, {"step": step}
+
+    return step_fn
+
+
+def _batch_fn(step):
+    return {"step": step, "inc": np.ones((2,), np.float32)}
+
+
+def test_supervisor_clean_run(tmp_path):
+    sup = Supervisor(str(tmp_path / "ck"), ckpt_every=2, max_restarts=0)
+    state, stats = sup.run({"x": np.zeros((2,), np.float32)},
+                           _counting_step(), _batch_fn, n_steps=5)
+    assert state["x"].tolist() == [5.0, 5.0]
+    assert stats["restarts"] == 0
+    assert [s for s, _ in stats["heartbeat"]] == [0, 1, 2, 3, 4]
+
+
+def test_supervisor_restarts_from_checkpoint(tmp_path):
+    """A mid-run failure resumes from the latest checkpoint and replays
+    only the uncheckpointed steps — the final state is identical to a
+    clean run (batches are pure functions of the step)."""
+    sup = Supervisor(str(tmp_path / "ck"), ckpt_every=2, max_restarts=3)
+    state, stats = sup.run({"x": np.zeros((2,), np.float32)},
+                           _counting_step(fail_at={3}), _batch_fn,
+                           n_steps=6)
+    assert stats["restarts"] == 1
+    assert state["x"].tolist() == [6.0, 6.0]
+
+
+def test_supervisor_cold_restart_before_first_checkpoint(tmp_path):
+    """A failure before any checkpoint exists retries the same step with
+    the caller's state (cold restart) instead of crashing."""
+    sup = Supervisor(str(tmp_path / "ck"), ckpt_every=100, max_restarts=3)
+    state, stats = sup.run({"x": np.zeros((2,), np.float32)},
+                           _counting_step(fail_at={0}), _batch_fn,
+                           n_steps=3)
+    assert stats["restarts"] == 1
+    assert state["x"].tolist() == [3.0, 3.0]
+
+
+def test_supervisor_exhausted_restarts_raises(tmp_path):
+    def always_fail(state, batch):
+        raise RuntimeError("persistent device loss")
+
+    sup = Supervisor(str(tmp_path / "ck"), ckpt_every=2, max_restarts=2)
+    with pytest.raises(RuntimeError, match="persistent device loss"):
+        sup.run({"x": np.zeros((2,), np.float32)}, always_fail,
+                _batch_fn, n_steps=4)
+
+
+def test_supervisor_heartbeat_uses_injected_clock(tmp_path):
+    ticks = iter(range(1000))
+    sup = Supervisor(str(tmp_path / "ck"), ckpt_every=10,
+                     clock=lambda: float(next(ticks)))
+    seen = []
+    _, stats = sup.run({"x": np.zeros((1,), np.float32)},
+                       _counting_step(), _batch_fn, n_steps=4,
+                       on_metrics=lambda step, m: seen.append(step))
+    assert seen == [0, 1, 2, 3]
+    # the fake clock advances once per reading: every step takes 1 tick
+    assert all(dt == 1.0 for _, dt in stats["heartbeat"])

@@ -1,0 +1,434 @@
+"""Fault-injection suite for the serving control plane (``-m robust``).
+
+Drives the :class:`~repro.serve.batching.ContinuousBatcher` through
+injected faults — corrupt/truncated artifacts, raising Pallas kernels,
+silently corrupted packed slabs, slow reloads, post-cutover faults — and
+asserts the control-plane invariants:
+
+* no request is ever dropped (``metrics()["dropped"] == 0``);
+* a reload rejected by the parity gate (or by artifact integrity) never
+  serves a single token;
+* backend demotion above the float rung is output-invariant: served
+  tokens stay bit-identical to the gather reference;
+* demoted sites re-promote once the fault clears;
+* a post-cutover fault inside the probation window rolls back to the
+  previous plan and schedules a bounded retry.
+
+Marked ``robust`` and excluded from the default (tier-1) run — CI's
+``robust-smoke`` job runs it explicitly.
+"""
+import dataclasses
+import os
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.ioutil import ArtifactError, load_checked_npz, save_checked_npz
+from repro.nn import init_params
+from repro.serve import (
+    CompositeSupervisor,
+    ContinuousBatcher,
+    DegradationLadder,
+    PlanReloader,
+    Request,
+    build_serving_plans,
+)
+from repro.serve.faults import FaultInjector, corrupt_file, corrupt_rung
+from repro.tune import (
+    load_tuned_plan,
+    save_tuned_plan,
+    tuned_plan_from_serving,
+)
+
+pytestmark = pytest.mark.robust
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_config(get_config("qwen3-0.6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def plans(model):
+    """Serving plans (shared synthetic calibration) + patched config.
+    Backend/rung variants are rebuilt per test via tables_for_model."""
+    cfg, _ = model
+    rng = np.random.default_rng(0)
+    p = build_serving_plans(cfg, rng.normal(size=50000) * 3,
+                            backend="gather", plan_exec="stacked")
+    return p, p.patched_config(cfg)
+
+
+@pytest.fixture(scope="module")
+def plan_path(tmp_path_factory, model, plans):
+    """A frozen, reload-ready tuned-plan artifact of the active plans —
+    its hot reload is parity-gate-trivial (token-identical by
+    construction)."""
+    p, cfg2 = plans
+    path = str(tmp_path_factory.mktemp("plans") / "plan.npz")
+    return save_tuned_plan(path, tuned_plan_from_serving(cfg2, p))
+
+
+def _mk(model, plans, *, sup=None, lut="gather", seed=9, max_new=8,
+        n_req=3, batch_size=2):
+    """A loaded batcher: more requests than slots, staggered admission."""
+    _, params = model
+    p, cfg2 = plans
+    if isinstance(lut, str):
+        lut = p.tables_for_model(backend=lut)
+    r = np.random.default_rng(seed)
+    b = ContinuousBatcher(cfg2, params, batch_size=batch_size,
+                          max_seq=24, eos_token=-1, lut_tables=lut,
+                          prefill="replay", supervisor=sup)
+    for i in range(n_req):
+        b.submit(Request(rid=i,
+                         prompt=list(r.integers(1, cfg2.vocab_size, 6)),
+                         max_new=max_new))
+    return b
+
+
+def _toks(reqs):
+    return {r.rid: r.out for r in reqs}
+
+
+# ---------------------------------------------------------------------------
+# artifact integrity (satellite: checksummed npz I/O)
+# ---------------------------------------------------------------------------
+
+def test_checked_npz_roundtrip_and_corruption(tmp_path):
+    path = str(tmp_path / "art.npz")
+    payload = {"a": np.arange(12, dtype=np.int32).reshape(3, 4),
+               "b": np.linspace(0, 1, 7, dtype=np.float32)}
+    save_checked_npz(path, {"format": "x/v1"}, payload, kind="unit")
+    header, arrays = load_checked_npz(path, kind="unit")
+    assert header["format"] == "x/v1" and "checksum" in header
+    assert np.array_equal(arrays["a"], payload["a"])
+
+    for mode in ("truncate", "bitflip"):
+        bad = corrupt_file(path, str(tmp_path / f"bad_{mode}.npz"),
+                           mode=mode)
+        with pytest.raises(ArtifactError, match=os.path.basename(bad)):
+            load_checked_npz(bad, kind="unit")
+
+
+def test_calibration_artifact_corruption_rejected(tmp_path, model):
+    from repro.calib import (capture_calibration, load_calibration,
+                             save_calibration, synthetic_batches)
+
+    cfg, params = model
+    calib = capture_calibration(params, cfg,
+                                synthetic_batches(cfg, 1, batch_size=1,
+                                                  seq_len=8, seed=3))
+    path = save_calibration(str(tmp_path / "calib"), calib)
+    assert load_calibration(path).summary() == calib.summary()
+    bad = corrupt_file(path, str(tmp_path / "calib_bad.npz"),
+                       mode="bitflip")
+    with pytest.raises((ArtifactError, ValueError),
+                       match="calib_bad"):
+        load_calibration(bad)
+
+
+def test_tuned_plan_checksum_catches_bitflip(tmp_path, plan_path):
+    bad = corrupt_file(plan_path, str(tmp_path / "plan_bad.npz"),
+                       mode="bitflip")
+    with pytest.raises(ArtifactError, match="plan_bad"):
+        load_tuned_plan(bad)
+
+
+# ---------------------------------------------------------------------------
+# gated hot reload
+# ---------------------------------------------------------------------------
+
+def test_hot_reload_mid_decode_token_identity(model, plans, plan_path):
+    """The tentpole invariant: a gated cutover mid-decode drops no
+    request and changes no served token (the frozen plan is the active
+    plan, bit-exactly)."""
+    _, params = model
+    _, cfg2 = plans
+    ref = _toks(_mk(model, plans).run())
+
+    bat = _mk(model, plans)
+    rel = PlanReloader(bat, cfg2, params, backend="gather",
+                       plan_exec="stacked")
+    bat.supervisor = CompositeSupervisor(rel)
+    rel.schedule(plan_path, 3)
+    done = bat.run()
+    assert rel.counters["reloads_ok"] == 1, rel.records
+    assert rel.records[-1].ok and rel.records[-1].stage == "cutover"
+    assert bat.table_swaps == 1
+    assert _toks(done) == ref
+    m = bat.metrics()
+    assert m["dropped"] == 0 and m["finished"] == 3
+
+
+@pytest.mark.parametrize("mode", ["truncate", "bitflip"])
+def test_corrupt_artifact_reload_rejected(tmp_path, model, plans,
+                                          plan_path, mode):
+    """A corrupt artifact is rejected at the load stage and never serves:
+    no table swap, no drop, and the run completes on the active plan."""
+    _, params = model
+    _, cfg2 = plans
+    bad = corrupt_file(plan_path, str(tmp_path / f"p_{mode}.npz"),
+                       mode=mode)
+    bat = _mk(model, plans, seed=13)
+    rel = PlanReloader(bat, cfg2, params, backend="gather",
+                       plan_exec="stacked")
+    bat.supervisor = CompositeSupervisor(rel)
+    rel.schedule(bad, 2)
+    done = bat.run()
+    rec = rel.records[-1]
+    assert not rec.ok and rec.stage == "load"
+    assert os.path.basename(bad) in rec.reason
+    assert bat.table_swaps == 0
+    assert bat.metrics()["dropped"] == 0 and len(done) == 3
+
+
+def test_missing_artifact_reload_rejected(model, plans):
+    _, params = model
+    _, cfg2 = plans
+    bat = _mk(model, plans, seed=13, max_new=4)
+    rel = PlanReloader(bat, cfg2, params, backend="gather",
+                       plan_exec="stacked")
+    bat.supervisor = CompositeSupervisor(rel)
+    rel.schedule("/nonexistent/plan.npz", 1)
+    bat.run()
+    rec = rel.records[-1]
+    assert not rec.ok and rec.stage == "load"
+    assert rel.counters["rejected_load"] == 1 and bat.table_swaps == 0
+
+
+def test_wrong_arch_artifact_rejected(model, plans, plan_path):
+    """Arch binding: reloading a qwen3 artifact into a phi4 server is
+    rejected at load (patched_config refuses), not served."""
+    _, params = model
+    bat = _mk(model, plans, max_new=4)
+    other = smoke_config(get_config("phi4-mini-3.8b"))
+    rel = PlanReloader(bat, other, params, backend="gather",
+                       plan_exec="stacked")
+    rec = rel.reload(plan_path)
+    assert not rec.ok and rec.stage == "load"
+    assert "qwen3-0.6b" in rec.reason and bat.table_swaps == 0
+
+
+def test_garbage_plan_rejected_by_parity_gate(tmp_path, model, plans,
+                                              plan_path):
+    """A structurally valid artifact with garbage *values* (checksum
+    fine, dequant range shifted) must be caught by the parity gate —
+    integrity checks cannot see it."""
+    _, params = model
+    _, cfg2 = plans
+    tp = load_tuned_plan(plan_path)
+    for entries in tp.sites.values():
+        for e in entries:
+            e["meta"] = dict(e["meta"], y_lo=e["meta"]["y_lo"] + 10.0,
+                             y_hi=e["meta"]["y_hi"] + 10.0)
+    garbage = save_tuned_plan(str(tmp_path / "garbage.npz"), tp)
+    load_tuned_plan(garbage)   # integrity passes — values are the problem
+
+    bat = _mk(model, plans)
+    rel = PlanReloader(bat, cfg2, params, backend="gather",
+                       plan_exec="stacked")
+    bat.supervisor = CompositeSupervisor(rel)
+    rel.schedule(garbage, 2)
+    done = bat.run()
+    rec = rel.records[-1]
+    assert not rec.ok and rec.stage == "gate", rec
+    assert "parity gate failed" in rec.reason
+    assert rel.counters["rejected_gate"] == 1
+    assert bat.table_swaps == 0
+    # the active plan kept serving, token-identically
+    assert _toks(done) == _toks(_mk(model, plans).run())
+
+
+def test_slow_reload_times_out(model, plans, plan_path):
+    """A stuck/slow artifact load aborts at the timeout instead of
+    blocking the tick loop forever; serving continues on the active
+    plan."""
+    _, params = model
+    _, cfg2 = plans
+    bat = _mk(model, plans, max_new=4)
+    rel = PlanReloader(bat, cfg2, params, backend="gather",
+                       plan_exec="stacked", timeout_s=0.05)
+    with FaultInjector() as fi:
+        fi.inject("reload:load", exc=None, delay=0.2)   # slow, not dead
+        rec = rel.reload(plan_path)
+    assert not rec.ok and rec.stage == "timeout"
+    assert "timeout" in rec.reason and bat.table_swaps == 0
+    assert rel.counters["rejected_timeout"] == 1
+
+
+def test_watch_mode_reloads_on_mtime_change(model, plans, plan_path):
+    """--watch semantics: the reloader polls the artifact path between
+    ticks and cuts over when its mtime changes mid-run."""
+    _, params = model
+    _, cfg2 = plans
+
+    bat = _mk(model, plans)
+    rel = PlanReloader(bat, cfg2, params, backend="gather",
+                       plan_exec="stacked")
+
+    class Toucher:   # models the retune pipeline dropping a fresh artifact
+        def on_tick(self, b):
+            if b.steps == 3:
+                os.utime(plan_path,
+                         (time.time() + 5, time.time() + 5))
+
+    bat.supervisor = CompositeSupervisor(Toucher(), rel)
+    rel.watch(plan_path)
+    done = bat.run()
+    assert rel.counters["reloads_ok"] == 1, rel.records
+    assert _toks(done) == _toks(_mk(model, plans).run())
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+def test_kernel_fault_demotes_to_gather_bit_identical(model, plans):
+    """A raising Pallas kernel demotes the site to the gather rung and
+    the served tokens stay bit-identical to a gather-only run (demotion
+    above float is output-invariant)."""
+    ref = _toks(_mk(model, plans, lut="gather").run())
+    p, _ = plans
+    lad = DegradationLadder(p, plan_exec="stacked", top_rung="pallas")
+    with FaultInjector() as fi:
+        fi.inject("pallas:lut_act", message="injected kernel fault")
+        bat = _mk(model, plans, sup=CompositeSupervisor(lad),
+                  lut=lad.tables())
+        done = bat.run()
+    assert lad.status() == {"mlp": "gather"} and lad.demotions == 1
+    assert lad.faults and lad.faults[0][0] == "mlp"
+    assert _toks(done) == ref
+    assert bat.metrics()["dropped"] == 0
+
+
+def test_transient_fault_repromotes_after_backoff(model, plans):
+    """Once the injected fault stops firing, the backoff re-probe climbs
+    the site back to the pallas rung within the run."""
+    p, _ = plans
+    lad = DegradationLadder(p, plan_exec="stacked", top_rung="pallas",
+                            backoff_ticks=2)
+    with FaultInjector() as fi:
+        fi.inject("pallas:lut_act", times=2, message="transient")
+        bat = _mk(model, plans, sup=CompositeSupervisor(lad),
+                  lut=lad.tables())
+        done = bat.run()
+    assert lad.status() == {"mlp": "pallas"}
+    assert lad.demotions == 1 and lad.promotions == 1
+    assert all(len(r.out) == 8 for r in done)
+    assert bat.metrics()["dropped"] == 0
+
+
+def test_corrupt_slab_demotes_via_revalidation(model, plans):
+    """A silently corrupted packed slab (no exception — wrong values)
+    is caught by the ladder's gather-reference validation sweep and the
+    site serves the gather rung, bit-identical to the reference."""
+    ref = _toks(_mk(model, plans, lut="gather", seed=11).run())
+    p, _ = plans
+    lad = DegradationLadder(p, plan_exec="stacked", top_rung="pallas",
+                            revalidate_every=1)
+    lad.tables()
+    corrupt_rung(lad, "pallas", "mlp")
+    bat = _mk(model, plans, sup=CompositeSupervisor(lad),
+              lut=lad.tables(), seed=11)
+    done = bat.run()
+    assert lad.status() == {"mlp": "gather"}
+    assert "validation vs gather failed" in lad.health["mlp"].last_fault
+    assert _toks(done) == ref
+    assert bat.metrics()["dropped"] == 0
+
+
+# ---------------------------------------------------------------------------
+# probation rollback
+# ---------------------------------------------------------------------------
+
+def test_post_cutover_fault_rolls_back(model, plans, plan_path):
+    """The gate passes on gather values, but the artifact's pallas
+    lowering faults post-cutover: probation rolls back to the previous
+    (gather) plan, the run finishes token-identical to it, and nothing
+    is dropped."""
+    _, params = model
+    _, cfg2 = plans
+    ref = _toks(_mk(model, plans).run())
+
+    bat = _mk(model, plans)
+    rel = PlanReloader(bat, cfg2, params, backend="pallas",
+                       plan_exec="stacked", max_retries=0,
+                       probation_ticks=8)
+    bat.supervisor = CompositeSupervisor(rel)
+    rel.schedule(plan_path, 2)
+    with FaultInjector() as fi:
+        fi.inject("pallas:lut_act", message="bad lowering")
+        done = bat.run()
+    assert rel.counters["reloads_ok"] == 1
+    assert rel.counters["rollbacks"] == 1
+    assert rel.records[-1].stage == "rollback"
+    assert _toks(done) == ref
+    assert bat.metrics()["dropped"] == 0
+
+
+def test_rollback_schedules_bounded_retry(model, plans, plan_path):
+    """With max_retries=1 the rollback arms exactly one delayed retry;
+    a persistent fault rolls that back too and then stops retrying."""
+    _, params = model
+    _, cfg2 = plans
+    bat = _mk(model, plans, max_new=16)
+    rel = PlanReloader(bat, cfg2, params, backend="pallas",
+                       plan_exec="stacked", max_retries=1,
+                       probation_ticks=4, retry_backoff_ticks=2)
+    bat.supervisor = CompositeSupervisor(rel)
+    rel.schedule(plan_path, 2)
+    with FaultInjector() as fi:
+        fi.inject("pallas:lut_act", message="persistent bad lowering")
+        done = bat.run()
+    assert rel.counters["reloads_ok"] == 2       # original + retry cutover
+    assert rel.counters["rollbacks"] == 2        # both rolled back
+    assert rel.counters["retries_scheduled"] == 1
+    assert rel._pending is None                  # budget exhausted
+    assert all(len(r.out) == 16 for r in done)
+    assert bat.metrics()["dropped"] == 0
+
+
+# ---------------------------------------------------------------------------
+# combined chaos
+# ---------------------------------------------------------------------------
+
+def test_combined_faults_drop_nothing(tmp_path, model, plans, plan_path):
+    """Everything at once: a corrupt reload attempt, then a good reload,
+    plus a transient kernel fault — reloader and ladder chained.  Zero
+    drops, every request completes."""
+    _, params = model
+    _, cfg2 = plans
+    p, _ = plans
+    bad = corrupt_file(plan_path, str(tmp_path / "chaos.npz"),
+                       mode="truncate")
+    lad = DegradationLadder(p, plan_exec="stacked", top_rung="pallas",
+                            backoff_ticks=2)
+    bat = _mk(model, plans, lut=lad.tables(), max_new=12)
+    rel = PlanReloader(bat, cfg2, params, backend="pallas",
+                       plan_exec="stacked", ladder=lad)
+    bat.supervisor = CompositeSupervisor(rel, lad)
+    rel.schedule(bad, 2)       # rejected at load
+
+    class Second:              # then a good reload later in the run
+        fired = False
+
+        def on_tick(self, b):
+            if b.steps == 6 and not self.fired:
+                self.fired = True
+                rel.schedule(plan_path, 6)
+
+    bat.supervisor = CompositeSupervisor(Second(), rel, lad)
+    with FaultInjector() as fi:
+        fi.inject("pallas:lut_act", times=2, after=1, message="flaky")
+        done = bat.run()
+    m = bat.metrics()
+    assert m["dropped"] == 0 and m["finished"] == 3
+    assert all(len(r.out) == 12 for r in done)
+    assert rel.counters["rejected_load"] == 1
+    assert rel.counters["reloads_ok"] >= 1
