@@ -33,11 +33,14 @@ from __future__ import annotations
 import argparse
 import os
 import time
+from contextlib import nullcontext
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+from repro.obs.log import log
 from repro.calib import (
     capture_calibration,
     load_calibration,
@@ -59,6 +62,20 @@ from repro.serve import (
 
 
 def main() -> None:
+    ap = _build_parser()
+    args = ap.parse_args()
+    tel = None
+    if args.obs_log:
+        tel = obs.Telemetry(
+            events=obs.EventLog(args.obs_log, sample=args.obs_sample),
+            prom_path=args.obs_log + ".prom")
+    # the with-block guarantees the JSONL footer + Prometheus dump land
+    # even on sys.exit/ap.error paths inside _main
+    with tel if tel is not None else nullcontext():
+        _main(ap, args, tel)
+
+
+def _build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="phi4-mini-3.8b")
     ap.add_argument("--batch", type=int, default=4)
@@ -140,9 +157,31 @@ def main() -> None:
                          "(default; layer-sharded table slabs) or a "
                          "fully-manual top-level shard_map (replicated "
                          "tables, lax.scan kept inside the region)")
+    ap.add_argument("--obs-log", default=None, metavar="PATH",
+                    help="write the structured telemetry event log "
+                         "(repro-obs/v1 JSONL) to PATH; a Prometheus "
+                         "text dump lands at PATH.prom on exit; with "
+                         "calibrated LUT serving the don't-care drift "
+                         "monitor is attached (token-identical output)")
+    ap.add_argument("--obs-sample", type=int, default=1, metavar="N",
+                    help="keep every Nth high-frequency tick event in "
+                         "the obs log (counters and gauges are never "
+                         "sampled; drops are accounted on the surviving "
+                         "records)")
+    ap.add_argument("--obs-drift-every", type=int, default=128,
+                    metavar="N",
+                    help="run the drift-monitored decode step on every "
+                         "Nth batcher tick only (1 = count every step); "
+                         "the monitor's callbacks are optimization "
+                         "barriers in the jitted step, so sampling is "
+                         "what keeps enabled-mode serving within the "
+                         "5%% decode-overhead budget — the drift "
+                         "fraction is a ratio and stays unbiased")
     ap.add_argument("--full", action="store_true")
-    args = ap.parse_args()
+    return ap
 
+
+def _main(ap, args, tel) -> None:
     mesh = None
     if args.mesh:
         try:
@@ -151,9 +190,11 @@ def main() -> None:
             ap.error(f"--mesh expects DP,TP (e.g. 2,2), got {args.mesh!r}")
         mesh = mesh_or_none(dp, tp)
         if mesh is None and dp * tp > 1:
-            print(f"mesh {dp}x{tp} unavailable "
-                  f"({len(jax.devices())} visible devices) — "
-                  f"serving single-device (bit-identical by contract)")
+            log.warn("mesh_unavailable",
+                     f"mesh {dp}x{tp} unavailable "
+                     f"({len(jax.devices())} visible devices) — "
+                     f"serving single-device (bit-identical by contract)",
+                     dp=dp, tp=tp, devices=len(jax.devices()))
         if mesh is not None and args.kv_int8 and args.mesh_mode == "shard_map":
             ap.error("--kv-int8 prefill replay is served in gspmd mesh "
                      "mode only (drop --kv-int8 or use --mesh-mode gspmd)")
@@ -204,12 +245,15 @@ def main() -> None:
         lut_tables = tp.tables_for_model(backend=args.lut_backend,
                                          plan_exec=args.plan_exec,
                                          kernel=lut_kernel)
-        print(tp.summary())
+        log.info("tuned_plan", tp.summary(), path=args.tuned_plan)
         from repro.serve import tables_nbytes
 
-        print(f"plan exec: {args.plan_exec} "
-              f"({tables_nbytes(lut_tables)} table bytes, loaded from "
-              f"{args.tuned_plan} — no recapture/recompression)")
+        log.info("plan_exec",
+                 f"plan exec: {args.plan_exec} "
+                 f"({tables_nbytes(lut_tables)} table bytes, loaded from "
+                 f"{args.tuned_plan} — no recapture/recompression)",
+                 plan_exec=args.plan_exec,
+                 table_bytes=tables_nbytes(lut_tables))
     elif args.lut_act:
         if args.calib_steps > 0 or args.calib_path:
             calib = None
@@ -219,7 +263,8 @@ def main() -> None:
                                     or os.path.exists(args.calib_path
                                                       + ".npz")):
                 calib = load_calibration(args.calib_path)
-                print(f"loaded calibration: {calib.summary()}")
+                log.info("calib_loaded",
+                         f"loaded calibration: {calib.summary()}")
             if calib is None:
                 steps = max(1, args.calib_steps)
                 batches = synthetic_batches(cfg, steps, batch_size=b,
@@ -229,24 +274,36 @@ def main() -> None:
                     params, cfg, batches,
                     min_count=args.calib_min_count,
                     smoothing=args.calib_smoothing)
-                print(f"captured {steps} calibration batches in "
-                      f"{time.time() - t0:.2f}s: {calib.summary()}")
+                log.info("calib_captured",
+                         f"captured {steps} calibration batches in "
+                         f"{time.time() - t0:.2f}s: {calib.summary()}",
+                         steps=steps, seconds=round(time.time() - t0, 3))
                 if args.calib_path:
-                    print("saved calibration ->",
-                          save_calibration(args.calib_path, calib))
+                    saved = save_calibration(args.calib_path, calib)
+                    log.info("calib_saved",
+                             f"saved calibration -> {saved}", path=saved)
+            if tel is not None and calib.w_in is not None:
+                tel.attach_monitor(obs.DontCareMonitor(
+                    calib, sample_every=args.obs_drift_every))
         else:
             calib = rng.normal(size=100000) * 3
-        plans = build_serving_plans(cfg, calib, backend=args.lut_backend,
-                                    plan_exec=args.plan_exec)
+        with obs.span("build_plans", backend=args.lut_backend,
+                      plan_exec=args.plan_exec):
+            plans = build_serving_plans(cfg, calib,
+                                        backend=args.lut_backend,
+                                        plan_exec=args.plan_exec)
         plan_source = plans
         cfg = plans.patched_config(cfg)
         lut_tables = plans.tables_for_model(kernel=lut_kernel)
-        print(plans.summary())
+        log.info("plans_built", plans.summary())
         if plans.per_layer:
             from repro.serve import tables_nbytes
 
-            print(f"plan exec: {args.plan_exec} "
-                  f"({tables_nbytes(lut_tables)} table bytes)")
+            log.info("plan_exec",
+                     f"plan exec: {args.plan_exec} "
+                     f"({tables_nbytes(lut_tables)} table bytes)",
+                     plan_exec=args.plan_exec,
+                     table_bytes=tables_nbytes(lut_tables))
 
     if args.save_plan:
         if plan_source is None or args.tuned_plan:
@@ -256,14 +313,15 @@ def main() -> None:
 
         frozen = save_tuned_plan(args.save_plan,
                                  tuned_plan_from_serving(cfg, plan_source))
-        print(f"saved tuned plan -> {frozen} (reload-ready)")
+        log.info("plan_saved", f"saved tuned plan -> {frozen} "
+                 f"(reload-ready)", path=frozen)
 
     if args.reload_plan:
         if mesh is not None:
             ap.error("--reload-plan is single-device — the control plane "
                      "swaps jitted closures, not placed tables")
         _serve_with_reload(args, cfg, params, lut_tables, plan_source,
-                           batch, lut_kernel)
+                           batch, lut_kernel, tel)
         return
 
     max_seq = t + args.new_tokens
@@ -273,26 +331,34 @@ def main() -> None:
         params = serve.place_params(params)
         batch = serve.place_batch(batch)
         lut_tables = serve.tables
-        print(f"mesh {dict(mesh.shape)} mode={args.mesh_mode}; "
-              f"table placement:")
+        log.info("mesh_serving",
+                 f"mesh {dict(mesh.shape)} mode={args.mesh_mode}; "
+                 f"table placement:", mode=args.mesh_mode)
         for site, info in serve.placement.items():
-            print(f"  {site}: {info['placement']} "
-                  f"({info['bytes']} B, {info['per_device_bytes']} B/dev)")
+            log.info("table_placement",
+                     f"  {site}: {info['placement']} "
+                     f"({info['bytes']} B, "
+                     f"{info['per_device_bytes']} B/dev)",
+                     site=site, placement=info["placement"],
+                     bytes=info["bytes"])
 
     t0 = time.time()
-    if serve is not None:
-        logits, cache = serve.prefill(params, batch, max_seq)
-    else:
-        logits, cache = jax.jit(
-            lambda p, x: prefill(p, cfg, x, max_seq=max_seq,
-                                 lut_tables=lut_tables))(params, batch)
-    print(f"prefill {b}x{t}: {time.time() - t0:.2f}s")
+    with obs.span("prefill", batch=b, prompt_len=t):
+        if serve is not None:
+            logits, cache = serve.prefill(params, batch, max_seq)
+        else:
+            logits, cache = jax.jit(
+                lambda p, x: prefill(p, cfg, x, max_seq=max_seq,
+                                     lut_tables=lut_tables))(params, batch)
+    log.info("prefill", f"prefill {b}x{t}: {time.time() - t0:.2f}s",
+             seconds=round(time.time() - t0, 3))
 
     if args.kv_int8 and cfg.family in ("dense", "moe", "vlm"):
         # re-home the prefill cache into int8 (write path quantizes) via
         # one compiled replay scan instead of t python-level step calls
         cache_q = init_cache(cfg, b, max_seq, kv_dtype="int8")
-        print("int8 KV cache enabled (decode writes quantized entries)")
+        log.info("kv_int8",
+                 "int8 KV cache enabled (decode writes quantized entries)")
         if serve is not None:
             cache_q = serve.place_cache(cache_q)
             logits, cache = serve.replay(params, cache_q, batch["tokens"])
@@ -309,18 +375,24 @@ def main() -> None:
     tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
     outs = []
     t0 = time.time()
-    for i in range(args.new_tokens):
-        outs.append(np.asarray(tok)[:, 0])
-        logits, cache = step(params, cache, tok, jnp.asarray(t + i))
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    with obs.span("decode", batch=b, new_tokens=args.new_tokens):
+        for i in range(args.new_tokens):
+            outs.append(np.asarray(tok)[:, 0])
+            logits, cache = step(params, cache, tok, jnp.asarray(t + i))
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
     dt = time.time() - t0
-    print(f"decode {args.new_tokens} tokens x {b} requests: {dt:.2f}s "
-          f"({args.new_tokens * b / dt:.1f} tok/s)")
-    print("request 0:", [int(o[0]) for o in outs])
+    log.info("decode",
+             f"decode {args.new_tokens} tokens x {b} requests: {dt:.2f}s "
+             f"({args.new_tokens * b / dt:.1f} tok/s)",
+             seconds=round(dt, 3),
+             tok_s=round(args.new_tokens * b / dt, 2))
+    log.info("request_tokens",
+             f"request 0: {[int(o[0]) for o in outs]}",
+             rid=0, tokens=[int(o[0]) for o in outs])
 
 
 def _serve_with_reload(args, cfg, params, lut_tables, plan_source, batch,
-                       lut_kernel) -> None:
+                       lut_kernel, tel=None) -> None:
     """Serve through the continuous batcher with the resilience control
     plane attached: a :class:`~repro.serve.reload.PlanReloader` hot-loads
     ``--reload-plan`` mid-decode behind the parity gate (one-shot at the
@@ -347,8 +419,9 @@ def _serve_with_reload(args, cfg, params, lut_tables, plan_source, batch,
     ladder = None
     if args.degrade:
         if plan_source is None:
-            print("--degrade: no LUT plans in this serving config — "
-                  "ladder not attached (float path only)")
+            log.warn("ladder_skipped",
+                     "--degrade: no LUT plans in this serving config — "
+                     "ladder not attached (float path only)")
         else:
             if lut_kernel == "fused":
                 top = "pallas_fused"
@@ -368,12 +441,15 @@ def _serve_with_reload(args, cfg, params, lut_tables, plan_source, batch,
     batcher.supervisor = CompositeSupervisor(reloader, ladder)
     if args.watch:
         reloader.watch(args.reload_plan)
-        print(f"watching {args.reload_plan} for plan updates")
+        log.info("reload_watch",
+                 f"watching {args.reload_plan} for plan updates",
+                 path=args.reload_plan)
     else:
         at_tick = max(1, args.new_tokens // 2)
         reloader.schedule(args.reload_plan, at_tick)
-        print(f"hot reload of {args.reload_plan} scheduled at decode "
-              f"tick {at_tick}")
+        log.info("reload_scheduled",
+                 f"hot reload of {args.reload_plan} scheduled at decode "
+                 f"tick {at_tick}", path=args.reload_plan, at_tick=at_tick)
 
     prompts = np.asarray(batch["tokens"])
     for i in range(b):
@@ -385,27 +461,43 @@ def _serve_with_reload(args, cfg, params, lut_tables, plan_source, batch,
     dt = time.time() - t0
 
     for rec in reloader.records:
-        print(rec.summary())
+        log.info("reload_record", rec.summary())
     if ladder is not None:
-        print("ladder:", " ".join(f"{s}={r}"
-                                  for s, r in ladder.status().items()))
+        log.info("ladder_status",
+                 "ladder: " + " ".join(f"{s}={r}" for s, r
+                                       in ladder.status().items()),
+                 **ladder.status())
     m = batcher.metrics()
-    print(f"served {m['finished']}/{m['submitted']} requests in {dt:.2f}s "
-          f"({m['ticks']} ticks, utilization {m['utilization']:.2f}, "
-          f"{m['table_swaps']} table swaps)")
-    print(f"latency p50 {m['latency_p50_s']:.3f}s p95 "
-          f"{m['latency_p95_s']:.3f}s; "
-          f"SLO violations {m['slo_violations']}/{m['slo_tracked']}")
-    print("reload counters:", reloader.counters)
+    log.info("serve_summary",
+             f"served {m['finished']}/{m['submitted']} requests in "
+             f"{dt:.2f}s ({m['ticks']} ticks, utilization "
+             f"{m['utilization']:.2f}, {m['table_swaps']} table swaps)",
+             finished=m["finished"], submitted=m["submitted"],
+             seconds=round(dt, 3), ticks=m["ticks"],
+             utilization=round(m["utilization"], 4),
+             table_swaps=m["table_swaps"])
+    log.info("serve_latency",
+             f"latency p50 {m['latency_p50_s']:.3f}s p95 "
+             f"{m['latency_p95_s']:.3f}s; "
+             f"SLO violations {m['slo_violations']}/{m['slo_tracked']}",
+             latency_p50_s=m["latency_p50_s"],
+             latency_p95_s=m["latency_p95_s"],
+             slo_violations=m["slo_violations"],
+             slo_tracked=m["slo_tracked"])
+    log.info("reload_counters", f"reload counters: {reloader.counters}",
+             **reloader.counters)
     req0 = next(r for r in finished if r.rid == 0)
-    print("request 0:", req0.out)
+    log.info("request_tokens", f"request 0: {req0.out}",
+             rid=0, tokens=req0.out)
     if m["dropped"]:
-        print(f"ERROR: {m['dropped']} request(s) dropped across the "
-              f"reload", file=sys.stderr)
+        log.error("requests_dropped",
+                  f"ERROR: {m['dropped']} request(s) dropped across the "
+                  f"reload", dropped=m["dropped"])
         sys.exit(2)
     if not args.watch and not reloader.counters["reloads_ok"]:
-        print("ERROR: scheduled hot reload never cut over — see the "
-              "rejection records above", file=sys.stderr)
+        log.error("reload_never_cutover",
+                  "ERROR: scheduled hot reload never cut over — see the "
+                  "rejection records above")
         sys.exit(1)
 
 

@@ -32,6 +32,7 @@ import time
 
 import numpy as np
 
+from repro.obs.log import log
 from repro.calib import capture_model, synthetic_batches
 from repro.configs import ARCH_NAMES, get_config, smoke_config
 from repro.serve import verify_backend_equivalence
@@ -126,13 +127,13 @@ def main() -> None:
     params, info = trained_params(
         cfg, ckpt_dir=args.ckpt_dir, train_steps=args.train_steps,
         batch=args.train_batch, seq=args.train_seq)
-    print(f"params: {info}")
+    log.info("tune_params", f"params: {info}")
 
     cap = capture_model(
         params, cfg, synthetic_batches(cfg, args.calib_steps,
                                        batch_size=args.batch,
                                        seq_len=args.seq, seed=1))
-    print(f"capture: {cap.summary()}")
+    log.info("tune_capture", f"capture: {cap.summary()}")
 
     batches = heldout_batches(cfg, args.eval_steps, batch_size=args.batch,
                               seq_len=args.seq)
@@ -141,12 +142,16 @@ def main() -> None:
                        budget=args.budget, workers=args.workers,
                        backend=args.backend, plan_exec=args.plan_exec,
                        verbose=True)
-    print(outcome.summary())
-    print("frontier:")
+    log.info("tune_outcome", outcome.summary())
+    log.info("tune_frontier", "frontier:")
     for r in outcome.frontier:
-        print(f"  {r.point.label()}: cost={r.cost} "
-              f"bytes={r.table_bytes} drop={r.metrics.top1_drop:.4f} "
-              f"ppl_delta={r.metrics.ppl_delta:+.4f}")
+        log.info("frontier_point",
+                 f"  {r.point.label()}: cost={r.cost} "
+                 f"bytes={r.table_bytes} drop={r.metrics.top1_drop:.4f} "
+                 f"ppl_delta={r.metrics.ppl_delta:+.4f}",
+                 label=r.point.label(), cost=r.cost,
+                 table_bytes=r.table_bytes,
+                 top1_drop=round(r.metrics.top1_drop, 6))
 
     # gather/pallas must bit-match on the final plans before we freeze them
     from repro.calib import model_batch
@@ -154,12 +159,13 @@ def main() -> None:
     rng = np.random.default_rng(0)
     batch = model_batch(cfg, rng, args.batch, min(args.seq, 8))
     verify_backend_equivalence(cfg, params, outcome.plans, batch, 3)
-    print("backend equivalence: gather == pallas on the tuned plans")
+    log.info("backend_equivalence",
+             "backend equivalence: gather == pallas on the tuned plans")
 
     tp = tuned_plan_from_outcome(cfg, outcome, extra_meta={
         "trained": info, "arch_cli": args.arch})
     path = save_tuned_plan(args.out, tp)
-    print(f"saved tuned plan -> {path}")
+    log.info("plan_saved", f"saved tuned plan -> {path}", path=path)
 
     # round-trip identity: the loaded artifact must decode token-for-token
     # what the in-process plans decode, on both runtime backends
@@ -175,14 +181,15 @@ def main() -> None:
             lut_tables=loaded.tables_for_model(backend=backend))
         assert got == live, (
             f"tuned-plan round trip diverged [{backend}]: {got} vs {live}")
-    print(f"artifact round trip: token-identical on gather and pallas "
-          f"({n_new} tokens x {args.batch} requests)")
+    log.info("round_trip",
+             f"artifact round trip: token-identical on gather and pallas "
+             f"({n_new} tokens x {args.batch} requests)")
 
     if args.bench_out:
         payload = bench_payload(args, cfg, info, outcome, time.time() - t0)
         with open(args.bench_out, "w") as f:
             json.dump(payload, f, indent=1)
-        print(f"wrote {args.bench_out}")
+        log.info("bench_written", f"wrote {args.bench_out}", path=args.bench_out)
 
     failures = []
     if not outcome.budget_met:
@@ -198,7 +205,10 @@ def main() -> None:
             f"degenerate frontier: {len(outcome.frontier)} non-dominated "
             f"points (expected >= 3) — widen the grid or the eval set")
     for msg in failures:
-        print(f"{'WARNING' if args.no_strict else 'FAIL'}: {msg}")
+        if args.no_strict:
+            log.warn("tune_warning", f"WARNING: {msg}")
+        else:
+            log.error("tune_failure", f"FAIL: {msg}")
     if failures and not args.no_strict:
         sys.exit(1)
 

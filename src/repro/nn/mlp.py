@@ -14,6 +14,8 @@ import jax.numpy as jnp
 
 from repro import sites
 from repro.calib import capture as calib_capture
+from repro.obs import drift as obs_drift
+from repro.obs import telemetry as obs_telemetry
 
 from .layers import activation_fn, is_gated, logits_projection
 from .sharding import layer_scan, shard
@@ -247,6 +249,12 @@ def apply_lut_act(x, tab: dict, backend: str = "gather"):
     identical outputs by the bit-identity contract.
     """
     backend = tab.get("backend", backend)
+    if backend != "pallas" and obs_telemetry.telemetry_active():
+        # Pallas entries count in kernels/ops.py at the launch wrappers;
+        # the gather evaluators count here (same trace-time semantics).
+        obs_telemetry.kernel_launch(
+            "gather:lut_act_stacked" if "stacked" in tab
+            else "gather:lut_act")
     if "multi_entry" in tab:
         if backend != "pallas":
             raise ValueError(
@@ -301,6 +309,12 @@ def fused_matmul_tab(cfg, lut_tables: dict | None, site: str,
         return None
     if calib_capture.capture_active():
         return None
+    if obs_drift.monitor_active():
+        # The drift monitor's wrapper must see the pre-activation tensor
+        # (make_activation), which the matmul-epilogue kernel consumes
+        # in-VMEM; the unfused composition it falls back to is
+        # bit-identical, so monitoring never changes served tokens.
+        return None
     from .sharding import current_mesh
 
     if current_mesh() is not None:
@@ -342,6 +356,13 @@ def make_activation(cfg, lut_tables: dict | None, site: str | None = None,
         cap = calib_capture.current()
     if act is None:
         act = activation_fn(fallback or cfg.activation)
+    mon = obs_drift.current()
+    if mon is not None and spec.active(cfg):
+        # Drift monitor: counts this site's don't-care lookups on device
+        # and ships one scalar per call through a debug callback — the
+        # traced in-scan ``layer`` is a callback operand, so (unlike
+        # capture) monitoring never forces the layer stack to unroll.
+        act = mon.wrap(site, layer, act)
     if cap is not None:
         act = cap.wrap(site, layer, act, domain=spec.domain())
     return act
@@ -369,10 +390,17 @@ def site_act(cfg, lut_tables: dict | None, site: str, layer=None):
             backend = lut_tables.get("backend", "gather")
             fn = lambda x: apply_lut_act(x, tab, backend)
     cap = calib_capture.current()
+    # The drift monitor observes *served LUT lookups*: it wraps only
+    # sites actually evaluating a compressed table (fn is not None), so
+    # it never forces the exact-math inline path through a callable —
+    # the None path stays byte-identical to the unmonitored forward.
+    mon = obs_drift.current()
     if fn is None and cap is None:
         return None
     if fn is None:
         fn = sites.exact_fn(spec, cfg)
+    elif mon is not None:
+        fn = mon.wrap(site, lyr, fn)
     if cap is not None:
         fn = cap.wrap(site, lyr, fn, domain=spec.domain())
     return fn

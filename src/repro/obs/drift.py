@@ -1,0 +1,259 @@
+"""Jit-safe don't-care hit-rate monitor (the live half of paper SS4.1).
+
+ReducedLUT injects don't cares where calibration traffic showed no
+observations; the compressor is then free to rewrite those table entries.
+The one thing a production deployment must therefore watch is the rate at
+which *served* lookups land in don't-care bins — every such lookup reads
+a rewritten entry, so the rate is the cheap online proxy for calibration
+drift (and the trigger signal for a background retune).
+
+:class:`DontCareMonitor` counts exactly that, per ``(layer, site)``:
+
+* masks come from the :class:`~repro.calib.masks.CalibrationSet` the
+  active plan was compressed from, stacked into per-site-kind
+  ``(L, 2**w_in)`` don't-care indicator slabs on device;
+* the served pre-activation tensor is quantized with the *identical*
+  code math as the LUT evaluators (`repro.nn.mlp.lut_act_jnp`) over the
+  site's quantizer domain, the indicator row for the (possibly traced,
+  in-scan) layer id is selected with ``jnp.take``, and the hit count is
+  reduced to one scalar **on device**;
+* only that scalar (+ the layer id + the finite-element count) crosses
+  to the host through ``jax.debug.callback`` — the same machinery
+  :mod:`repro.calib.capture` proves scan-safe, but without the capture
+  path's python-unroll: the traced layer id rides as a callback operand
+  and becomes concrete at runtime, so ``lax.scan`` (and bf16 token
+  identity) is preserved.
+
+The monitor observes; it never transforms — the wrapped activation's
+output is returned untouched, so serving with the monitor on is
+token-for-token identical to serving with it off (asserted in
+tests/test_obs.py).  When no monitor is active the hook in
+``make_activation`` is one ``None`` check: zero traced ops.
+
+Activation follows the capture idiom: a module-level stack entered by
+the context manager (or by :class:`repro.obs.telemetry.Telemetry`).
+
+The callbacks are cheap per call but each one is an optimization
+barrier inside the jitted step, so counting *every* decode step costs
+real throughput.  ``sample_every=N`` is the production knob: callers
+that own a step loop (the continuous batcher, the serve bench) trace
+two token-identical step programs — one under the ambient monitor, one
+under :func:`suppressed` — and run the monitored program on every Nth
+step only.  The drift fraction is a ratio, so sampling leaves it
+unbiased; ``lookups``/``hits`` then count sampled traffic, not total.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import sites
+from repro.calib.capture import site_key
+from repro.calib.masks import CalibrationSet
+
+_STACK: list["DontCareMonitor"] = []
+_SUPPRESS = 0
+
+
+def monitor_active() -> bool:
+    """True while any :class:`DontCareMonitor` context is entered (and
+    not locally suppressed)."""
+    return bool(_STACK) and not _SUPPRESS
+
+
+def current() -> "DontCareMonitor | None":
+    return _STACK[-1] if _STACK and not _SUPPRESS else None
+
+
+@contextlib.contextmanager
+def suppressed():
+    """Trace-time escape hatch: inside this context the active monitor
+    is invisible (``monitor_active()`` is False), so a function traced
+    here compiles the plain, callback-free program even while a monitor
+    context is entered.  This is how a step loop gets both the monitored
+    and the unmonitored compilation of the same step for
+    ``sample_every`` scheduling."""
+    global _SUPPRESS
+    _SUPPRESS += 1
+    try:
+        yield
+    finally:
+        _SUPPRESS -= 1
+
+
+def _split_key(key: str) -> tuple[str, int | None]:
+    """``"L{i}/{site}"`` -> (site, i); bare keys -> (key, None)."""
+    if "/" in key:
+        lpart, site = key.split("/", 1)
+        if lpart.startswith("L") and lpart[1:].isdigit():
+            return site, int(lpart[1:])
+    return key, None
+
+
+class DontCareMonitor:
+    """Per-(layer, site) served don't-care lookup counters.
+
+    ``sample_every=N`` asks monitoring step loops to run the monitored
+    step program on every Nth step only (the monitor itself still counts
+    everything it observes — the knob is honoured by the loop that picks
+    which compiled step to call, see
+    :meth:`ContinuousBatcher._build_step_fns <repro.serve.batching.ContinuousBatcher>`).
+    """
+
+    def __init__(self, calib: CalibrationSet, *, sample_every: int = 1):
+        self.sample_every = max(1, int(sample_every))
+        if calib.w_in is None:
+            raise ValueError(
+                "DontCareMonitor needs a calibration with a fixed input "
+                "quantizer width (w_in=None is the LUT-NN mask form)")
+        self.calib = calib
+        self.w_in = int(calib.w_in)
+        n_bins = 1 << self.w_in
+        # site kind -> {layer or None: don't-care indicator vector}
+        by_kind: dict[str, dict[int | None, np.ndarray]] = {}
+        for key, mask in calib.masks.items():
+            kind, layer = _split_key(key)
+            if mask.size != n_bins:
+                continue        # heterogeneous-width (LUT-NN) masks
+            by_kind.setdefault(kind, {})[layer] = ~np.asarray(mask, bool)
+        # Device slabs: per-layer kinds get an (L, n_bins) int32 stack
+        # (missing layers all-care, i.e. count nothing) plus the
+        # any-layer-cares union row for layer-agnostic call sites;
+        # layer-agnostic kinds a single (n_bins,) row.
+        self._dc: dict[str, jnp.ndarray] = {}
+        self._dc_union: dict[str, jnp.ndarray] = {}
+        self._domain: dict[str, tuple[float, float]] = {}
+        for kind, rows in by_kind.items():
+            layered = [l for l in rows if l is not None]
+            if layered:
+                stack = np.zeros((max(layered) + 1, n_bins), np.int32)
+                for l in layered:
+                    stack[l] = rows[l]
+                self._dc[kind] = jnp.asarray(stack)
+                union = stack.max(axis=0)
+                if None in rows:
+                    union = np.maximum(union, rows[None].astype(np.int32))
+                self._dc_union[kind] = jnp.asarray(union.astype(np.int32))
+            else:
+                self._dc_union[kind] = jnp.asarray(
+                    rows[None].astype(np.int32))
+            try:
+                domain = sites.site_spec(kind).domain()
+            except KeyError:
+                domain = None
+            self._domain[kind] = domain or (calib.x_lo, calib.x_hi)
+        # Host-side accumulators (callback targets).
+        self.hits: dict[str, int] = {}
+        self.lookups: dict[str, int] = {}
+
+    # -- context management --------------------------------------------------
+    def __enter__(self) -> "DontCareMonitor":
+        _STACK.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _STACK.remove(self)
+
+    # -- accumulation --------------------------------------------------------
+    def wants(self, site: str) -> bool:
+        return site in self._dc or site in self._dc_union
+
+    def _accum(self, site: str, layer: int, hits: int, n: int) -> None:
+        key = site if layer < 0 else site_key(site, layer)
+        self.hits[key] = self.hits.get(key, 0) + int(hits)
+        self.lookups[key] = self.lookups.get(key, 0) + int(n)
+
+    def observe(self, site: str, layer, x) -> None:
+        """Count ``x``'s don't-care lookups for ``site`` at ``layer``
+        (``None`` for layer-agnostic sites; a traced in-scan id is fine —
+        it rides the debug callback as an operand)."""
+        if not self.wants(site):
+            return
+        x_lo, x_hi = self._domain[site]
+        levels = (1 << self.w_in) - 1
+        xf = jnp.asarray(x).astype(jnp.float32).reshape(-1)
+        finite = jnp.isfinite(xf)
+        xn = jnp.clip((jnp.where(finite, xf, x_lo) - x_lo)
+                      / (x_hi - x_lo), 0.0, 1.0)
+        code = jnp.round(xn * levels).astype(jnp.int32)
+        dc = self._dc.get(site)
+        if dc is not None and layer is not None:
+            row = jnp.take(dc, jnp.asarray(layer, jnp.int32), axis=0,
+                           mode="clip")
+            lyr = jnp.asarray(layer, jnp.int32)
+        else:
+            row = self._dc_union[site]
+            lyr = jnp.asarray(-1, jnp.int32)
+        hits = jnp.sum(jnp.where(finite, jnp.take(row, code, axis=0), 0))
+        n = jnp.sum(finite.astype(jnp.int32))
+        if any(isinstance(v, jax.core.Tracer) for v in (hits, n, lyr)):
+            jax.debug.callback(
+                lambda h, cnt, l, _s=site: self._accum(
+                    _s, int(l), int(h), int(cnt)),
+                hits, n, lyr)
+        else:
+            self._accum(site, int(lyr), int(hits), int(n))
+
+    def wrap(self, site: str, layer, act):
+        """Wrap an activation callable so evaluating it counts its input's
+        don't-care lookups; the output passes through untouched."""
+        if not self.wants(site):
+            return act
+
+        def monitored(x):
+            self.observe(site, layer, x)
+            return act(x)
+
+        return monitored
+
+    # -- reporting -----------------------------------------------------------
+    def flush(self) -> None:
+        """Land deferred debug callbacks (call before reading counters)."""
+        jax.effects_barrier()
+
+    def calib_dontcare_traffic(self, key: str) -> float | None:
+        """Fraction of *calibration-time* traffic that landed in this
+        key's (now) don't-care bins — the baseline a served drift ratio
+        is judged against (~0 by construction at min_count=1, nonzero
+        when coverage/min_count trimmed observed tail bins)."""
+        if self.calib.hists is None:
+            return None
+        mask = self.calib.masks.get(key)
+        hist = self.calib.hists.get(key)
+        if mask is None or hist is None or hist.sum() == 0:
+            return None
+        return float(hist[~mask].sum() / hist.sum())
+
+    def drift(self) -> dict[str, dict]:
+        """Per-key drift rows: served lookups, don't-care hits, the served
+        don't-care fraction, the calibration-time baseline, and their
+        difference (``excess`` — the actionable drift signal)."""
+        self.flush()
+        out = {}
+        for key in sorted(self.lookups):
+            n = self.lookups[key]
+            h = self.hits.get(key, 0)
+            served = h / n if n else 0.0
+            base = self.calib_dontcare_traffic(key)
+            out[key] = {
+                "lookups": n,
+                "dontcare_hits": h,
+                "served_dontcare_frac": round(served, 6),
+                "calib_dontcare_frac": (None if base is None
+                                        else round(base, 6)),
+                "excess": round(served - (base or 0.0), 6),
+            }
+        return out
+
+    def summary(self) -> str:
+        rows = self.drift()
+        if not rows:
+            return "dontcare-monitor[no lookups observed]"
+        parts = [f"{k}: {r['dontcare_hits']}/{r['lookups']} "
+                 f"({r['served_dontcare_frac']:.4f})"
+                 for k, r in rows.items()]
+        return "dontcare-monitor[" + ", ".join(parts) + "]"

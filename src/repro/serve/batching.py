@@ -31,6 +31,7 @@ Control-plane hooks (serve/reload.py, serve/degrade.py):
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 
@@ -38,7 +39,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ArchConfig
+from repro.obs import drift as obs_drift
 
 from .decode import decode_step, prefill_replay
 from .kvcache import init_cache
@@ -126,6 +129,7 @@ class ContinuousBatcher:
             self._replay = lambda p, c, toks: self._serve.replay(
                 p, c, toks, 0)
             self._step = self._serve.decode
+            self._step_plain = None
         else:
             self._serve = None
             tables = self.lut_tables
@@ -144,6 +148,30 @@ class ContinuousBatcher:
                 lambda p, c, t, pos: decode_step(p, cfg, c, t, pos,
                                                  lut_tables=tables))
 
+            # Sampled drift monitoring: when a DontCareMonitor is
+            # active its callbacks are traced into self._step above.
+            # This second jit of the SAME step traced under
+            # suppressed() compiles the callback-free program; both
+            # serve identical tokens (the monitor only observes), so
+            # tick() may pick per step by sample_every.  Without a
+            # monitor the closure is never called and never compiles.
+            def _plain(p, c, t, pos):
+                with obs_drift.suppressed():
+                    return decode_step(p, cfg, c, t, pos,
+                                       lut_tables=tables)
+
+            self._step_plain = jax.jit(_plain)
+
+    def _pick_step(self):
+        """The jitted step for this tick: the monitored program on every
+        ``sample_every``-th tick while a drift monitor is active, the
+        plain program otherwise."""
+        mon = obs_drift.current()
+        if (mon is not None and self._step_plain is not None
+                and self.steps % mon.sample_every != 0):
+            return self._step_plain
+        return self._step
+
     def swap_tables(self, lut_tables: dict | None,
                     cfg: ArchConfig | None = None) -> None:
         """Atomically swap the served plan (and optionally the patched
@@ -157,6 +185,9 @@ class ContinuousBatcher:
         self.lut_tables = lut_tables
         self._build_step_fns()
         self.table_swaps += 1
+        obs.count("batcher_table_swaps_total")
+        obs.event("table_swap", tick=self.steps, swaps=self.table_swaps,
+                  backend=(lut_tables or {}).get("backend", "float"))
 
     def _guarded(self, thunk):
         """Run one jitted serving call under the supervisor's fault
@@ -169,6 +200,9 @@ class ContinuousBatcher:
             try:
                 return thunk()
             except Exception as e:
+                obs.count("serve_faults_total")
+                obs.event("serve_fault", tick=self.steps,
+                          error=f"{type(e).__name__}: {e}")
                 if (self.supervisor is None
                         or not self.supervisor.on_fault(self, e)):
                     raise
@@ -195,6 +229,24 @@ class ContinuousBatcher:
         self.finished.append(req)
         slot.req = None
         slot.pending = None
+        t = obs.current()
+        if t is not None:
+            # Latency/TTFT land in registry histograms (the exportable
+            # form) alongside the raw per-request stamps metrics() reads.
+            if req.latency_s is not None:
+                t.registry.histogram(
+                    "serve_request_latency_s",
+                    "submit-to-eviction request latency").observe(
+                    req.latency_s)
+            if req.ttft_s is not None:
+                t.registry.histogram(
+                    "serve_request_ttft_s",
+                    "submit-to-first-token latency").observe(req.ttft_s)
+            t.event("request_finish", rid=req.rid, tokens=len(req.out),
+                    latency_s=(None if req.latency_s is None
+                               else round(req.latency_s, 6)),
+                    ttft_s=(None if req.ttft_s is None
+                            else round(req.ttft_s, 6)))
 
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
@@ -223,6 +275,10 @@ class ContinuousBatcher:
         truncated = len(slot.pending) > self.max_seq
         toks = slot.pending[:self.max_seq]
         n = len(toks)
+        with obs.span("prefill_replay", rid=req.rid, tokens=n):
+            self._replay_slot_body(i, slot, req, truncated, toks, n)
+
+    def _replay_slot_body(self, i, slot, req, truncated, toks, n) -> None:
         tokens = np.zeros((self.b, n), np.int32)
         tokens[i] = toks
         # The shared scan writes positions [0, n) for EVERY row; rows of
@@ -258,7 +314,12 @@ class ContinuousBatcher:
 
     def step(self) -> None:
         """One scheduler tick: each active slot ingests its next pending
-        prompt token or decodes one new token."""
+        prompt token or decodes one new token.  Tick telemetry (queue
+        depth, slot utilization, tick duration) is recorded per tick in
+        the registry and as *sampled* timeline events — ``--obs-sample``
+        thins the per-tick records, never the gauges/counters."""
+        t = obs.current()
+        t0 = time.monotonic() if t is not None else 0.0
         self._admit()
         if self.n_active == 0:
             return
@@ -296,7 +357,10 @@ class ContinuousBatcher:
             snap = {name: self.cache[name][:, :, pos]
                     for name in self.cache if name in
                     ("k", "v", "k_scale", "v_scale")}
-            logits, self.cache = self._guarded(lambda: self._step(
+            # pick inside the thunk: a supervisor fault handler may swap
+            # tables and rebuild the step closures, and the retry must
+            # run the rebuilt program, not the one bound pre-fault
+            logits, self.cache = self._guarded(lambda: self._pick_step()(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(pos)))
             if others:
@@ -328,6 +392,17 @@ class ContinuousBatcher:
                                  or req.out[-1] == self.eos))):
                     self._finish(slot)
         self.steps += 1
+        if t is not None:
+            r = t.registry
+            r.counter("batcher_ticks_total").inc()
+            r.gauge("batcher_queue_depth").set(len(self.queue))
+            r.gauge("batcher_active_slots").set(self.n_active)
+            r.gauge("batcher_slot_utilization").set(self.utilization)
+            r.histogram("batcher_tick_s", "scheduler tick duration"
+                        ).observe(time.monotonic() - t0)
+            t.event("tick", sampled=True, tick=self.steps,
+                    queued=len(self.queue), active=self.n_active,
+                    dur_s=round(time.monotonic() - t0, 6))
 
     def run(self, max_ticks: int = 10000,
             stall_ticks: int = 4) -> list[Request]:
@@ -380,8 +455,16 @@ class ContinuousBatcher:
                       if r.latency_s is not None)
         ttfts = sorted(r.ttft_s for r in self.finished
                        if r.ttft_s is not None)
-        pct = lambda xs, q: (
-            float(xs[min(len(xs) - 1, int(q * len(xs)))]) if xs else None)
+
+        def pct(xs: list, q: float) -> float:
+            # Nearest-rank percentile, total on both edge cases: no
+            # finished requests -> 0.0 (the snapshot must still format
+            # and export), one request -> that request at every q.
+            if not xs:
+                return 0.0
+            rank = min(len(xs) - 1, max(0, math.ceil(q * len(xs)) - 1))
+            return float(xs[rank])
+
         slo = [r for r in self.finished if r.slo_ms is not None
                and r.latency_s is not None]
         return {
@@ -397,7 +480,7 @@ class ContinuousBatcher:
             "table_swaps": self.table_swaps,
             "latency_p50_s": pct(lats, 0.50),
             "latency_p95_s": pct(lats, 0.95),
-            "latency_max_s": float(lats[-1]) if lats else None,
+            "latency_max_s": float(lats[-1]) if lats else 0.0,
             "ttft_p50_s": pct(ttfts, 0.50),
             "slo_violations": sum(
                 1 for r in slo if r.latency_s * 1e3 > r.slo_ms),

@@ -40,6 +40,8 @@ import dataclasses
 
 import numpy as np
 
+from repro import obs
+
 RUNGS = ("pallas_fused", "pallas", "gather", "float")
 
 
@@ -256,6 +258,9 @@ class DegradationLadder:
                 if self._probe(site, rung) is None:
                     break
             self.faults.append((site, RUNGS[h.rung], err))
+            obs.count("ladder_demotions_total", site=site)
+            obs.event("ladder_demote", site=site, from_rung=RUNGS[h.rung],
+                      to_rung=RUNGS[rung], error=err)
             h.last_fault = err
             h.rung = rung
             h.demotions += 1
@@ -277,6 +282,10 @@ class DegradationLadder:
         for site, h in self.health.items():
             if h.rung > self.top and self._tick >= h.next_probe:
                 if self._probe(site, h.rung - 1) is None:
+                    obs.count("ladder_promotions_total", site=site)
+                    obs.event("ladder_promote", site=site,
+                              from_rung=RUNGS[h.rung],
+                              to_rung=RUNGS[h.rung - 1])
                     h.rung -= 1
                     h.promotions += 1
                     self.promotions += 1

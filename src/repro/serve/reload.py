@@ -35,6 +35,8 @@ import dataclasses
 import os
 import time
 
+from repro import obs
+
 from . import faults
 
 
@@ -140,6 +142,9 @@ class PlanReloader:
         self.records.append(rec)
         self.counters[counter] += 1
         self._retry_count = 0
+        obs.count("reloads_total", stage=rec.stage, ok="false")
+        obs.event("reload_reject", path=rec.path, stage=rec.stage,
+                  reason=rec.reason)
         return rec
 
     def reload(self, path: str) -> ReloadRecord:
@@ -147,6 +152,7 @@ class PlanReloader:
         every failure mode becomes a rejection record and the active
         plan keeps serving."""
         t0 = time.monotonic()
+        obs.event("reload_attempt", path=path, tick=self.batcher.steps)
         try:
             faults.fault_point("reload:load")
             from repro.tune import load_tuned_plan
@@ -248,6 +254,11 @@ class PlanReloader:
                            token_agreement=agreement, load_s=load_s,
                            gate_s=gate_s, tick=self.batcher.steps)
         self.records.append(rec)
+        obs.count("reloads_total", stage="cutover", ok="true")
+        obs.event("reload_cutover", path=path, tick=rec.tick,
+                  top1_drop=round(metrics.top1_drop, 6),
+                  token_agreement=round(agreement, 4),
+                  load_s=round(load_s, 4), gate_s=round(gate_s, 4))
         return rec
 
     # -- batcher supervisor protocol ---------------------------------------
@@ -285,10 +296,16 @@ class PlanReloader:
             p["path"], False, "rollback",
             f"post-cutover fault: {type(exc).__name__}: {exc} — "
             f"previous plan restored", tick=batcher.steps))
+        obs.count("reloads_total", stage="rollback", ok="false")
+        obs.event("reload_rollback", path=p["path"], tick=batcher.steps,
+                  reason=f"{type(exc).__name__}: {exc}")
         if p["retries"] < self.max_retries:
             delay = self.retry_backoff_ticks * (2 ** p["retries"])
             self._pending = (p["path"], batcher.steps + delay,
                              p["retries"] + 1)
             self.counters["retries_scheduled"] += 1
+            obs.event("reload_retry_scheduled", path=p["path"],
+                      at_tick=batcher.steps + delay,
+                      retry=p["retries"] + 1)
         self._probation = None
         return True

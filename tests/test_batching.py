@@ -197,3 +197,37 @@ def test_metrics_accounting_and_slo(model):
     # rid 0 carried an impossible 1us SLO, the others an absurdly lax one
     assert m["slo_tracked"] == 3 and m["slo_violations"] == 1
     assert m["table_swaps"] == 0
+
+
+def test_metrics_zero_finished_requests(model):
+    """Regression: metrics() on a batcher with nothing finished must
+    return well-defined numbers — the launcher formats the percentiles
+    with :.3f, which used to TypeError on the None/empty-list cases."""
+    cfg, params = model
+    b = ContinuousBatcher(cfg, params, batch_size=2, max_seq=8,
+                          eos_token=-1)
+    m = b.metrics()
+    assert m["submitted"] == m["finished"] == m["dropped"] == 0
+    for key in ("latency_p50_s", "latency_p95_s", "latency_max_s",
+                "ttft_p50_s", "utilization"):
+        assert isinstance(m[key], float) and m[key] == m[key], key  # no NaN
+        f"{m[key]:.3f}"  # the launcher's format must not raise
+    assert m["latency_p50_s"] == 0.0 and m["latency_max_s"] == 0.0
+    assert m["slo_tracked"] == 0 and m["slo_violations"] == 0
+
+
+def test_metrics_single_request_percentiles(model):
+    """One finished request: every percentile is that request's latency
+    (nearest-rank), not an interpolation artifact or an IndexError."""
+    cfg, params = model
+    rng = np.random.default_rng(6)
+    b = ContinuousBatcher(cfg, params, batch_size=1, max_seq=16,
+                          eos_token=-1)
+    b.submit(Request(rid=0, prompt=list(rng.integers(1, cfg.vocab_size, 4)),
+                     max_new=2))
+    b.run()
+    m = b.metrics()
+    assert m["finished"] == 1
+    assert m["latency_p50_s"] > 0.0
+    assert m["latency_p50_s"] == m["latency_p95_s"] == m["latency_max_s"]
+    assert m["ttft_p50_s"] > 0.0

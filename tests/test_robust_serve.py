@@ -432,3 +432,125 @@ def test_combined_faults_drop_nothing(tmp_path, model, plans, plan_path):
     assert all(len(r.out) == 12 for r in done)
     assert rel.counters["rejected_load"] == 1
     assert rel.counters["reloads_ok"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# telemetry timeline (obs): every control-plane transition is recorded
+# ---------------------------------------------------------------------------
+
+from repro import obs  # noqa: E402
+
+
+def _events(tel, name):
+    return [r for r in tel.events.records if r["event"] == name]
+
+
+def test_timeline_records_demotion_and_repromotion(model, plans):
+    """The transient-fault scenario's demote -> backoff -> re-promote
+    cycle lands in the event timeline, in order, with rung attribution —
+    and the serve_fault record precedes the demotion it caused."""
+    p, _ = plans
+    lad = DegradationLadder(p, plan_exec="stacked", top_rung="pallas",
+                            backoff_ticks=2)
+    tel = obs.Telemetry(events=obs.EventLog())
+    with tel, FaultInjector() as fi:
+        fi.inject("pallas:lut_act", times=2, message="transient")
+        bat = _mk(model, plans, sup=CompositeSupervisor(lad),
+                  lut=lad.tables())
+        bat.run()
+    assert lad.demotions == 1 and lad.promotions == 1
+
+    faults = _events(tel, "serve_fault")
+    demotes = _events(tel, "ladder_demote")
+    promotes = _events(tel, "ladder_promote")
+    assert len(demotes) == 1 and len(promotes) == 1 and faults
+    assert demotes[0]["site"] == "mlp"
+    assert demotes[0]["from_rung"] == "pallas"
+    assert demotes[0]["to_rung"] == "gather"
+    assert "transient" in demotes[0]["error"]
+    assert promotes[0] == {**promotes[0], "site": "mlp",
+                           "from_rung": "gather", "to_rung": "pallas"}
+    assert faults[0]["seq"] < demotes[0]["seq"] < promotes[0]["seq"]
+    # both table swaps (demote, re-promote) are on the timeline too
+    assert len(_events(tel, "table_swap")) >= 2
+    # and the registry counted them
+    reg = tel.registry
+    assert reg.counter("ladder_demotions_total").value(site="mlp") == 1
+    assert reg.counter("ladder_promotions_total").value(site="mlp") == 1
+
+
+def test_timeline_records_reload_rejection_reasons(tmp_path, model, plans,
+                                                   plan_path):
+    """Each rejection stage the suite forces — integrity (load), parity
+    (gate), timeout — appears as a reload_reject event naming its stage
+    and reason."""
+    _, params = model
+    _, cfg2 = plans
+    bad = corrupt_file(plan_path, str(tmp_path / "tl_bad.npz"),
+                       mode="bitflip")
+    tp = load_tuned_plan(plan_path)
+    for entries in tp.sites.values():
+        for e in entries:
+            e["meta"] = dict(e["meta"], y_lo=e["meta"]["y_lo"] + 10.0,
+                             y_hi=e["meta"]["y_hi"] + 10.0)
+    garbage = save_tuned_plan(str(tmp_path / "tl_garbage.npz"), tp)
+
+    bat = _mk(model, plans, max_new=4)
+    rel = PlanReloader(bat, cfg2, params, backend="gather",
+                       plan_exec="stacked")
+    # the timeout scenario needs its own tight-deadline reloader — the
+    # gate evaluation itself takes seconds of jit compile on the others
+    rel_t = PlanReloader(bat, cfg2, params, backend="gather",
+                         plan_exec="stacked", timeout_s=0.05)
+    tel = obs.Telemetry(events=obs.EventLog())
+    with tel:
+        rel.reload(bad)
+        rel.reload(garbage)
+        with FaultInjector() as fi:
+            fi.inject("reload:load", exc=None, delay=0.2)
+            rel_t.reload(plan_path)
+    attempts = _events(tel, "reload_attempt")
+    rejects = _events(tel, "reload_reject")
+    assert len(attempts) == 3 and len(rejects) == 3
+    by_stage = {r["stage"]: r for r in rejects}
+    assert set(by_stage) == {"load", "gate", "timeout"}
+    assert os.path.basename(bad) in by_stage["load"]["reason"]
+    assert "parity gate failed" in by_stage["gate"]["reason"]
+    assert "timeout" in by_stage["timeout"]["reason"]
+    assert not _events(tel, "reload_cutover")
+    assert tel.registry.counter("reloads_total").value(
+        stage="load", ok="false") == 1
+
+
+def test_timeline_records_cutover_rollback_and_retry(model, plans,
+                                                     plan_path):
+    """The bounded-retry scenario: both cutovers, both rollbacks, and
+    the single scheduled retry are all on the timeline, ordered."""
+    _, params = model
+    _, cfg2 = plans
+    bat = _mk(model, plans, max_new=16)
+    rel = PlanReloader(bat, cfg2, params, backend="pallas",
+                       plan_exec="stacked", max_retries=1,
+                       probation_ticks=4, retry_backoff_ticks=2)
+    bat.supervisor = CompositeSupervisor(rel)
+    rel.schedule(plan_path, 2)
+    tel = obs.Telemetry(events=obs.EventLog())
+    with tel, FaultInjector() as fi:
+        fi.inject("pallas:lut_act", message="persistent bad lowering")
+        bat.run()
+    assert rel.counters["rollbacks"] == 2
+
+    cutovers = _events(tel, "reload_cutover")
+    rollbacks = _events(tel, "reload_rollback")
+    retries = _events(tel, "reload_retry_scheduled")
+    assert len(cutovers) == 2 and len(rollbacks) == 2 and len(retries) == 1
+    for c in cutovers:
+        assert c["token_agreement"] == 1.0   # frozen active plan: trivial
+    for r in rollbacks:
+        assert "persistent bad lowering" in r["reason"]
+    # cutover -> rollback -> retry -> cutover -> rollback, in sequence
+    seqs = sorted((e["seq"], e["event"]) for e in
+                  cutovers + rollbacks + retries)
+    assert [s[1] for s in seqs] == [
+        "reload_cutover", "reload_rollback", "reload_retry_scheduled",
+        "reload_cutover", "reload_rollback"]
